@@ -1,0 +1,139 @@
+"""Paper Figure 2: normalized suboptimality vs iteration for one-shot /
+periodic(128) / periodic(1024->scaled) / minibatch averaging + single
+worker, on the convex suite; derived speedup@0.1 of periodic vs one-shot
+(the paper's speedup column)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save, timeit
+from repro.configs.paper import CONVEX_SUITE
+from repro.data import convex_dataset
+from repro.models.convex import lr_objective, ls_objective, solve_optimum
+
+
+def sgd_curves(kind, X, y, *, workers, steps, phase_lens, lr0, lr_d,
+               seed=0, record_every=20):
+    """Vectorized multi-schedule parallel SGD (shared sample draws for a
+    fair, paired comparison, as the paper shuffles identically)."""
+    n, d = X.shape
+    obj = {"ls": ls_objective, "lr": lr_objective}[kind]
+    obj_j = jax.jit(lambda w: obj(w, X, y))
+
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, n, size=(steps, workers))
+    curves = {}
+    w0 = jnp.zeros(d)
+    f0 = float(obj_j(w0))
+    fstar = float(obj_j(solve_optimum(kind, X, y)))
+
+    @jax.jit
+    def steps_block(w, ixs, ts):
+        """Run a block of steps without averaging. w: (M,d)."""
+        def body(w, inp):
+            ix, t = inp
+            xi, yi = X[ix], y[ix]
+            if kind == "ls":
+                g = xi * (jnp.einsum("md,md->m", xi, w) - yi)[:, None]
+            else:
+                z = yi * jnp.einsum("md,md->m", xi, w)
+                g = (-yi * jax.nn.sigmoid(-z))[:, None] * xi
+            lr = lr0 / (t + lr_d)
+            return w - lr * g, None
+        w, _ = jax.lax.scan(body, w, (ixs, ts))
+        return w
+
+    for k in phase_lens:
+        name = {0: "oneshot", 1: "minibatch"}.get(k, f"periodic_{k}")
+        w = jnp.zeros((workers, d))
+        rec = []
+        blk = max(k, record_every) if k else record_every
+        t = 0
+        while t < steps:
+            take = min(blk, steps - t)
+            w = steps_block(w, jnp.asarray(idx[t:t + take]),
+                            jnp.arange(t, t + take, dtype=jnp.float32))
+            t += take
+            if k and (t % k == 0 or take < blk):
+                w = jnp.broadcast_to(w.mean(0), w.shape)
+            rec.append((t, float(obj_j(w.mean(0)))))
+        curves[name] = rec
+
+    # single worker curve (worker 0, no averaging)
+    w = jnp.zeros((1, d))
+    rec = []
+    t = 0
+    while t < steps:
+        take = min(record_every, steps - t)
+        w = steps_block(w, jnp.asarray(idx[t:t + take, :1]),
+                        jnp.arange(t, t + take, dtype=jnp.float32))
+        t += take
+        rec.append((t, float(obj_j(w[0]))))
+    curves["single"] = rec
+
+    # normalize so f(w0)=1, f*=0
+    span = max(f0 - fstar, 1e-12)
+    for name in curves:
+        curves[name] = [(t, (v - fstar) / span) for t, v in curves[name]]
+    return curves
+
+
+def _steps_to(curve, level):
+    for t, v in curve:
+        if v <= level:
+            return t
+    return float("inf")
+
+
+def grid_curves(kind, X, y, *, workers=8, steps=3000,
+                phase_lens=(0, 1, 128, 1024),
+                lr_mults=(0.4, 0.8, 1.6, 3.0, 6.0), lr_d=200.0):
+    """The paper's protocol: grid-search the lr schedule and report, at
+    each iteration, the minimum objective over the grid (per schedule).
+    This is what surfaces the averaging speedup — frequent averaging
+    tolerates (and exploits) aggressive step sizes that make independent
+    workers diverge transiently."""
+    meansq = float(jnp.mean(jnp.sum(X * X, axis=1)))
+    best = None
+    for mult in lr_mults:
+        cur = sgd_curves(kind, X, y, workers=workers, steps=steps,
+                         phase_lens=list(phase_lens),
+                         lr0=mult * lr_d / meansq, lr_d=lr_d)
+        if best is None:
+            best = cur
+        else:
+            for name in cur:
+                best[name] = [(t, min(a, b)) for (t, a), (_, b)
+                              in zip(best[name], cur[name])]
+    return best
+
+
+def run():
+    all_out = {}
+    total_us = 0.0
+    for c in CONVEX_SUITE:
+        n = min(c.num_samples, 2048)
+        d = min(c.num_dims, 256)
+        X, y, _ = convex_dataset(c.model, n, d, sparsity=c.sparsity,
+                                 noise=c.noise, seed=0)
+        X, y = jnp.asarray(X), jnp.asarray(y)
+        dt, curves = timeit(lambda: grid_curves(c.model, X, y), reps=1)
+        total_us += dt
+        s_per = _steps_to(curves["periodic_128"], 0.1)
+        s_one = _steps_to(curves["oneshot"], 0.1)
+        speedup = s_one / s_per if np.isfinite(s_per) else float("inf")
+        final_gap = (curves["oneshot"][-1][1] /
+                     max(curves["periodic_128"][-1][1], 1e-15))
+        all_out[c.name] = {"curves": curves, "speedup_at_0.1": speedup,
+                           "final_subopt_ratio": final_gap}
+    save("bench_fig2_convex", all_out)
+    emit("fig2_convex_curves", total_us,
+         ";".join(f"{k}:speedup@0.1={v['speedup_at_0.1']:.2f},"
+                  f"final_ratio={v['final_subopt_ratio']:.1f}"
+                  for k, v in all_out.items()))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,78 @@
+"""Regenerate the generated sections of EXPERIMENTS.md from results/:
+the §Roofline table and the averaging-cost table. Idempotent."""
+from __future__ import annotations
+
+import json
+import os
+import re
+
+from benchmarks.averaging_cost import analyze
+from benchmarks.roofline_table import load, render
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+MD = os.path.join(ROOT, "EXPERIMENTS.md")
+
+ROOF_BEGIN = "<!-- ROOFLINE_TABLE -->"
+ROOF_END = "<!-- /ROOFLINE_TABLE -->"
+AVG_BEGIN = "<!-- AVG_COST -->"
+AVG_END = "<!-- /AVG_COST -->"
+
+
+def _splice(text, begin, end, payload):
+    block = f"{begin}\n{payload}\n{end}"
+    if end in text:
+        return re.sub(re.escape(begin) + r".*?" + re.escape(end), block,
+                      text, flags=re.S)
+    return text.replace(begin, block)
+
+
+def avg_table():
+    rows = analyze()
+    if not rows:
+        return "(averaging-cost rows pending — rerun after the avg sweep)"
+    out = ["| arch | mesh | avg scope | avg bytes/dev | avg s | local step s "
+           "| minibatch (K=1) overhead | K for ≤1% | K for ≤5% |",
+           "|" + "---|" * 9]
+    for r in rows:
+        out.append(
+            f"| {r['arch']} | {r['mesh']} | {r['avg']} | "
+            f"{r['avg_bytes_per_device']:.2e} | {r['avg_seconds']:.3f} | "
+            f"{r['local_step_seconds']:.3f} | "
+            f"{r['minibatch_overhead_pct']:.1f}% | {r['K_for_1pct']} | "
+            f"{r['K_for_5pct']} |")
+    out.append("")
+    out.append(
+        "Reading: `avg s` is the cost of ONE model-average (the paper's "
+        "phase-end step) on the worker axis — analytic 2·params/chip "
+        "bytes over ICI, used because the *measured* collective delta "
+        "between the avg=all and avg=none compilations is ≈0: XLA CSEs "
+        "the phase-end all-reduce into the step's existing FSDP "
+        "all-gather traffic (a genuinely useful systems finding — on an "
+        "FSDP-sharded mesh the paper's averaging step is nearly free at "
+        "the HLO level). Amortized per-step overhead is avg_s/K; K=1 "
+        "reproduces minibatch averaging (overhead column); the K columns "
+        "give the phase length at which averaging communication becomes "
+        "negligible — the hardware-efficiency side of the paper's "
+        "trade-off, per architecture. The statistical side (how large K "
+        "may be before convergence suffers) is governed by ρ "
+        "(§Paper-validation): large ρ ⇒ keep K small ⇒ pay the overhead; "
+        "small ρ ⇒ one-shot is fine.")
+    return "\n".join(out)
+
+
+def main():
+    text = open(MD).read()
+    rows = load()
+    n_ok = sum(1 for r in rows if "skipped" not in r)
+    n_skip = sum(1 for r in rows if "skipped" in r)
+    table = (f"{n_ok} combination rows compiled "
+             f"({n_skip} recorded skips).\n\n" + render(rows))
+    text = _splice(text, ROOF_BEGIN, ROOF_END, table)
+    text = _splice(text, AVG_BEGIN, AVG_END, avg_table())
+    with open(MD, "w") as f:
+        f.write(text)
+    print(f"EXPERIMENTS.md updated: {n_ok} roofline rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,74 @@
+"""Render the dry-run JSONL into the EXPERIMENTS.md roofline tables."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.common import RESULTS_DIR
+
+HDR = ("| arch | shape | mesh | avg | variant | flops/dev | bytes/dev | "
+       "coll B/dev | compute s | memory s | coll s | bound | "
+       "useful-FLOP frac |")
+SEP = "|" + "---|" * 13
+
+
+def fmt_row(r):
+    def e(x):
+        return f"{x:.2e}" if isinstance(x, (int, float)) else "-"
+    if "skipped" in r:
+        return (f"| {r.get('arch','?')} | {r.get('shape','?')} | "
+                f"{r.get('mesh','-')} | - | - | SKIP | {r['skipped']} "
+                f"| | | | | | |")
+    return ("| {arch} | {shape} | {mesh} | {avg} | {var} | {f} | {b} | {c} "
+            "| {cs} | {ms} | {cls} | **{bn}** | {uf} |").format(
+        arch=r["arch"], shape=r["shape"], mesh=r["mesh"],
+        avg=r.get("avg", "none"), var=r.get("variant", "baseline"),
+        f=e(r.get("flops_per_device")), b=e(r.get("bytes_per_device")),
+        c=e(r.get("collective_bytes_per_device")),
+        cs=f"{r.get('compute_s', 0):.4f}", ms=f"{r.get('memory_s', 0):.4f}",
+        cls=f"{r.get('collective_s', 0):.4f}", bn=r.get("bottleneck", "?"),
+        uf=(f"{r['useful_flop_fraction']:.2f}"
+            if r.get("useful_flop_fraction") else "-"))
+
+
+def load(path=None):
+    path = path or os.path.join(RESULTS_DIR, "dryrun.jsonl")
+    rows, seen = [], set()
+    if not os.path.exists(path):
+        return rows
+    for line in open(path):
+        try:
+            r = json.loads(line)
+        except Exception:
+            continue
+        key = (r.get("arch"), r.get("shape"), r.get("mesh"),
+               r.get("avg", "none"), r.get("variant", "baseline"))
+        if key in seen:
+            continue
+        seen.add(key)
+        rows.append(r)
+    return rows
+
+
+def render(rows=None):
+    rows = rows if rows is not None else load()
+    out = [HDR, SEP]
+    order = {"train_4k": 0, "prefill_32k": 1, "decode_32k": 2, "long_500k": 3}
+    rows = sorted(rows, key=lambda r: (r.get("arch", ""),
+                                       order.get(r.get("shape", ""), 9),
+                                       r.get("mesh", ""),
+                                       r.get("avg", "none")))
+    for r in rows:
+        out.append(fmt_row(r))
+    return "\n".join(out)
+
+
+def run():
+    rows = load()
+    n_ok = sum(1 for r in rows if "skipped" not in r)
+    n_skip = sum(1 for r in rows if "skipped" in r)
+    print(f"roofline_table,0.0,combos_compiled={n_ok};skipped={n_skip}")
+
+
+if __name__ == "__main__":
+    print(render())

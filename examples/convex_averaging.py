@@ -1,0 +1,39 @@
+"""Paper §3.1 reproduction (Figure 2 + Table 1 workflow) on the synthetic
+convex suite: measures (σ², β², ρ) with the paper's procedure, then runs
+the paper's grid-searched schedule comparison — the averaging-frequency
+advantage correlates with ρ.
+
+Run:  PYTHONPATH=src:. python examples/convex_averaging.py
+"""
+import jax
+import jax.numpy as jnp
+
+from benchmarks.bench_fig2_convex import grid_curves
+from repro.core.variance_model import empirical_variance_fn, measure_beta2, rho
+from repro.data import convex_dataset
+from repro.models.convex import solve_optimum
+
+
+def main():
+    for name, sparsity, noise in [("sparse-highrho", 0.02, 0.005),
+                                  ("dense-lowrho", 1.0, 2.0)]:
+        X, y, _ = convex_dataset("ls", 1024, 128, sparsity=sparsity,
+                                 noise=noise, seed=0)
+        X, y = jnp.asarray(X), jnp.asarray(y)
+        w_star = solve_optimum("ls", X, y)
+        vfn = empirical_variance_fn("ls", X, y)
+        b2, s2 = measure_beta2(vfn, w_star, key=jax.random.PRNGKey(0),
+                               num_lines=4)
+        r = rho(b2, s2, jnp.zeros(128), w_star)
+        curves = grid_curves("ls", X, y, steps=2000,
+                             phase_lens=(0, 128), lr_mults=(0.8, 3.0, 6.0))
+        one = curves["oneshot"][-1][1]
+        per = curves["periodic_128"][-1][1]
+        print(f"{name:16s} sigma2={s2:9.3e} beta2={b2:9.3e} rho={r:9.3e} | "
+              f"normalized subopt: oneshot={one:9.3e} periodic128={per:9.3e} "
+              f"ratio={one / max(per, 1e-15):7.2f}x")
+    print("large rho -> large periodic-averaging advantage (paper's claim).")
+
+
+if __name__ == "__main__":
+    main()

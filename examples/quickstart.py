@@ -1,0 +1,60 @@
+"""Quickstart: periodic model averaging (the paper's technique) on a small
+transformer LM, via the public API — compares one-shot / periodic /
+minibatch schedules on identical data.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.core import AveragingSchedule, LocalSGD
+from repro.data import token_stream
+from repro.models import init_params, lm_loss
+from repro.optim import Momentum
+
+WORKERS, STEPS, BATCH, SEQ = 4, 60, 4, 64
+
+
+def batch_iter(cfg, seed):
+    streams = [token_stream(cfg.vocab_size, BATCH, SEQ, seed=seed * 31 + i)
+               for i in range(WORKERS)]
+    for _ in range(STEPS):
+        yield {"tokens": jnp.asarray(np.stack([next(s) for s in streams]))}
+
+
+def main():
+    cfg = dataclasses.replace(get_config("smollm-360m", reduced=True),
+                              dtype="float32")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+
+    def loss_fn(p, batch, rng):
+        return lm_loss(cfg, p, batch)
+
+    print(f"model: {cfg.name} ({cfg.num_params()/1e6:.1f}M params), "
+          f"{WORKERS} workers, {STEPS} steps")
+    results = {}
+    for name, sch in {
+        "oneshot": AveragingSchedule("oneshot"),
+        "periodic_10": AveragingSchedule("periodic", 10),
+        "minibatch": AveragingSchedule("minibatch"),
+    }.items():
+        algo = LocalSGD(loss_fn, Momentum(lr=0.05, mu=0.9), sch)
+        final, hist = algo.run(params, batch_iter(cfg, 7),
+                               num_workers=WORKERS, seed=0, record_every=10)
+        # evaluate the consensus model on a held-out batch
+        ev = next(batch_iter(cfg, 99))
+        loss, _ = lm_loss(cfg, final, {"tokens": ev["tokens"][0]})
+        results[name] = float(loss)
+        print(f"  {name:12s}: {hist['averages']:3d} averages, "
+              f"final consensus eval loss {float(loss):.4f}")
+    assert results["periodic_10"] <= results["oneshot"] + 0.5
+    print("done — periodic averaging tracks/beats one-shot, as the paper "
+          "predicts for non-convex objectives.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,17 @@
+"""Serving example: batched greedy generation with KV/state caches across
+three architecture families (dense GQA, RG-LRU hybrid, RWKV SSM) — the
+same decode path the decode_32k / long_500k dry-run shapes lower.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import main as serve_main
+
+
+def main():
+    for arch in ["smollm-360m", "recurrentgemma-2b", "rwkv6-7b"]:
+        serve_main(["--arch", arch, "--reduced", "--batch", "2",
+                    "--prompt-len", "4", "--gen", "8"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""Pytree checkpointing: flat .npz + json tree metadata.
+
+Saves both the averaged (consensus) model and, optionally, the full
+per-worker state so a local-SGD run can resume mid-phase without losing
+worker diversity (which one-shot-style resumes would destroy).
+"""
+from __future__ import annotations
+
+import json
+import os
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+def save_checkpoint(path: str, tree, *, step: int = 0, extra: dict | None = None):
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
+    np.savez(path + ".npz", **arrays)
+    meta = {
+        "treedef": str(treedef),
+        "num_leaves": len(leaves),
+        "step": step,
+        "dtypes": [str(np.asarray(x).dtype) for x in leaves],
+        "shapes": [list(np.asarray(x).shape) for x in leaves],
+        "extra": extra or {},
+    }
+    with open(path + ".json", "w") as f:
+        json.dump(meta, f)
+
+
+def load_checkpoint(path: str, like_tree):
+    """Restore into the structure of ``like_tree`` (shape/dtype checked)."""
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    data = np.load(path + ".npz")
+    leaves = [data[f"leaf_{i}"] for i in range(meta["num_leaves"])]
+    like_leaves, treedef = jax.tree_util.tree_flatten(like_tree)
+    assert len(leaves) == len(like_leaves), "checkpoint/model mismatch"
+    for got, want in zip(leaves, like_leaves):
+        assert got.shape == tuple(np.shape(want)), (got.shape, np.shape(want))
+    leaves = [np.asarray(g).astype(np.asarray(w).dtype)
+              for g, w in zip(leaves, like_leaves)]
+    return jax.tree_util.tree_unflatten(treedef, leaves), meta["step"]

@@ -1,0 +1,15 @@
+"""Core: the paper's contribution — periodic model averaging for parallel
+SGD, its variance model, and its closed-form theory."""
+from repro.core.averaging import (  # noqa: F401
+    AveragingSchedule,
+    OuterOptimizer,
+    average_all,
+    average_inner,
+    worker_dispersion,
+)
+from repro.core.local_sgd import LocalSGD, consensus, replicate, unreplicate  # noqa: F401
+from repro.core.theory import (  # noqa: F401
+    lemma1_asymptotic_variance,
+    simulate_quadratic,
+)
+from repro.core.variance_model import measure_beta2, measure_sigma2, rho  # noqa: F401

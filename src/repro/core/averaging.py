@@ -1,0 +1,134 @@
+"""Averaging schedules and averaging operators — the paper's technique.
+
+A *schedule* decides WHEN the M workers' models are averaged:
+  - one-shot     : only at the very end (Zinkevich et al. 2010)
+  - minibatch    : every step (statistically = 1 worker with batch M)
+  - periodic(K)  : every K steps — the paper's main subject
+  - stochastic(ζ): i.i.d. per-step probability ζ (paper §2.3 / Lemma 1)
+  - hierarchical : inner groups every K_inner, all workers every K_outer
+                   (beyond-paper: matches TPU ICI/DCI bandwidth hierarchy)
+
+An averaging *operator* says HOW: plain mean, or an outer optimizer
+(Nesterov momentum on the averaging direction — beyond-paper, DiLoCo-like).
+
+Workers are represented as a leading axis of size M on every leaf of the
+params pytree; on a device mesh this axis is sharded over the worker
+(data / pod×data) mesh axes, so the means below lower to all-reduces over
+exactly those axes.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class AveragingSchedule:
+    kind: str = "periodic"      # oneshot | minibatch | periodic | stochastic | hierarchical
+    phase_len: int = 128        # K for periodic
+    zeta: float = 0.0           # for stochastic
+    inner_phase_len: int = 16   # hierarchical: average inner groups every K_i
+    outer_phase_len: int = 512  # hierarchical: average everyone every K_o
+    inner_groups: int = 1       # hierarchical: number of inner groups
+
+    def expected_phase_len(self) -> float:
+        if self.kind == "oneshot":
+            return float("inf")
+        if self.kind == "minibatch":
+            return 1.0
+        if self.kind == "periodic":
+            return float(self.phase_len)
+        if self.kind == "stochastic":
+            return 1.0 / max(self.zeta, 1e-12)
+        if self.kind == "hierarchical":
+            return float(self.inner_phase_len)
+        raise ValueError(self.kind)
+
+    def wants_average(self, step: int, rng: np.random.Generator | None = None):
+        """Host-side decision for step ``step`` (1-indexed steps done).
+        Returns "none" | "inner" | "all"."""
+        if self.kind == "oneshot":
+            return "none"
+        if self.kind == "minibatch":
+            return "all"
+        if self.kind == "periodic":
+            return "all" if step % self.phase_len == 0 else "none"
+        if self.kind == "stochastic":
+            assert rng is not None
+            return "all" if rng.random() < self.zeta else "none"
+        if self.kind == "hierarchical":
+            if step % self.outer_phase_len == 0:
+                return "all"
+            if step % self.inner_phase_len == 0:
+                return "inner"
+            return "none"
+        raise ValueError(self.kind)
+
+
+# --------------------------------------------------------------------------
+# Operators (worker axis = leading dim 0 of every leaf)
+# --------------------------------------------------------------------------
+
+def average_all(worker_tree):
+    """Mean over the worker axis, broadcast back — the paper's operator."""
+    def avg(x):
+        m = jnp.mean(x, axis=0, keepdims=True)
+        return jnp.broadcast_to(m, x.shape).astype(x.dtype)
+    return jax.tree.map(avg, worker_tree)
+
+
+def average_inner(worker_tree, inner_groups: int):
+    """Hierarchical inner average: W workers = inner_groups contiguous
+    groups; mean within each group only (lowers to an all-reduce over the
+    intra-pod mesh axis when groups align with pods)."""
+    def avg(x):
+        w = x.shape[0]
+        g = inner_groups
+        xg = x.reshape((g, w // g) + x.shape[1:])
+        m = jnp.mean(xg, axis=1, keepdims=True)
+        return jnp.broadcast_to(m, xg.shape).reshape(x.shape).astype(x.dtype)
+    return jax.tree.map(avg, worker_tree)
+
+
+def worker_dispersion(worker_tree):
+    """Mean squared distance of workers from their average — the paper's
+    E||w_i - w̄||² variance diagnostic (Eq. 4)."""
+    def sq(x):
+        m = jnp.mean(x.astype(jnp.float32), axis=0, keepdims=True)
+        return jnp.sum(jnp.square(x.astype(jnp.float32) - m)) / x.shape[0]
+    return sum(jax.tree.leaves(jax.tree.map(sq, worker_tree)))
+
+
+# --------------------------------------------------------------------------
+# Outer optimizer (beyond-paper): treat the consensus move as a gradient
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class OuterOptimizer:
+    """DiLoCo-style outer Nesterov momentum applied at averaging steps.
+    With lr=1, momentum=0 this reduces exactly to the paper's plain mean."""
+    lr: float = 1.0
+    momentum: float = 0.0
+    nesterov: bool = True
+
+    def init(self, avg_tree):
+        return jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32),
+                            avg_tree)
+
+    def apply(self, prev_avg, new_avg, velocity):
+        """prev_avg/new_avg: trees WITHOUT worker axis. Returns
+        (updated average, velocity)."""
+        def upd(p, n, v):
+            delta = p.astype(jnp.float32) - n.astype(jnp.float32)  # outer grad
+            v2 = self.momentum * v + delta
+            step = self.momentum * v2 + delta if self.nesterov else v2
+            return (p.astype(jnp.float32) - self.lr * step).astype(p.dtype), v2
+        flat = jax.tree.map(upd, prev_avg, new_avg, velocity)
+        outer = jax.tree.map(lambda t: t[0], flat,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        vel = jax.tree.map(lambda t: t[1], flat,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return outer, vel

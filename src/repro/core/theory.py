@@ -1,0 +1,116 @@
+"""Closed-form results from the paper + the simulations that validate them.
+
+- Lemma 1: asymptotic variance of the worker average under stochastic
+  averaging with rate ζ on f(w) = c w²/2 with gradient noise
+  ∇f̃(w) = c w - b̃ w - h̃,  Var b̃ = β², Var h̃ = σ².
+- Eq. (4): the coarse-model worker-dispersion bound that *cannot* see any
+  benefit from averaging (paper Example 2).
+- The (Q, P) recursion from Appendix A, iterated exactly, plus a Monte
+  Carlo simulator — both used by tests/benchmarks to check Lemma 1.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def lemma1_eta(zeta: float, alpha: float, c: float) -> float:
+    if zeta >= 1.0:
+        return np.inf
+    return zeta / ((1.0 - zeta) * alpha * (2.0 * c - alpha * c * c))
+
+
+def lemma1_asymptotic_variance(alpha: float, c: float, beta2: float,
+                               sigma2: float, M: int, zeta: float) -> float:
+    """lim_t Var( (1/M) Σ_i w_{i,t} ).  ζ=0 → one-shot regime,
+    ζ=1 → minibatch regime (η→∞ handled by its limit)."""
+    eta = lemma1_eta(zeta, alpha, c)
+    if np.isinf(eta):
+        factor = 1.0 / M
+    else:
+        factor = (1.0 + eta / M) / (1.0 + eta)
+    denom = 2.0 * c - alpha * c * c - alpha * beta2 * factor
+    if denom <= 0:
+        return np.inf  # divergent regime
+    return alpha * sigma2 / (M * denom)
+
+
+def qp_recursion(alpha, c, beta2, sigma2, M, zeta, steps, q0=0.0, p0=0.0):
+    """Exact expected-value iteration of Appendix A:
+      no-avg:  Q' = (1-αc)² Q + α²β²P/M + α²σ²/M
+               P' = ((1-αc)² + α²β²) P + α²σ²
+      avg:     Q' = Q ; P' = Q
+      mixed with probability ζ via total expectation.
+    Returns trajectory of Q (variance of the average)."""
+    a2 = (1.0 - alpha * c) ** 2
+    q, p = q0, p0
+    out = np.empty(steps)
+    for t in range(steps):
+        qn = a2 * q + alpha ** 2 * beta2 * p / M + alpha ** 2 * sigma2 / M
+        pn = (a2 + alpha ** 2 * beta2) * p + alpha ** 2 * sigma2
+        q = (1 - zeta) * qn + zeta * q
+        p = (1 - zeta) * pn + zeta * q  # after averaging P collapses to Q
+        # NOTE: paper's coupled update uses pre-update Q for the avg branch;
+        # for the fixed point it is equivalent.
+        out[t] = q
+    return out
+
+
+def simulate_quadratic(alpha, c, beta2, sigma2, M, zeta, steps, *,
+                       reps=2000, seed=0, w0_std=0.0):
+    """Monte-Carlo of the §2.3 process: ``reps`` independent systems of M
+    workers; returns Var over reps of the worker-average at the end."""
+    key = jax.random.PRNGKey(seed)
+    kb, kh, kz, k0 = jax.random.split(key, 4)
+    b = jax.random.normal(kb, (steps, reps, M)) * np.sqrt(beta2)
+    h = jax.random.normal(kh, (steps, reps, M)) * np.sqrt(sigma2)
+    avg = jax.random.uniform(kz, (steps, reps)) < zeta
+    w_init = jax.random.normal(k0, (reps, M)) * w0_std
+
+    def step(w, inp):
+        bt, ht, at = inp
+        w = (1.0 - alpha * c) * w + alpha * (bt * w + ht)
+        wbar = jnp.mean(w, axis=1, keepdims=True)
+        w = jnp.where(at[:, None], wbar, w)
+        return w, None
+
+    w, _ = jax.lax.scan(step, w_init, (b, h, avg))
+    wbar = jnp.mean(w, axis=1)
+    return float(jnp.var(wbar))
+
+
+def coarse_dispersion_bound(alpha, sigma2, L, c, k):
+    """Eq. (4): E||w_ik - w̄_k||² ≤ ασ²/(2L-αc²) [1-(1-2αL+αc²... )^k].
+    The point (Example 2): it does not depend on when averaging happened."""
+    denom = 2.0 * L - alpha * c * c
+    rate = 1.0 - 2.0 * alpha * L + (alpha * c) ** 2
+    return alpha * sigma2 / denom * (1.0 - rate ** k)
+
+
+# --------------------------------------------------------------------------
+# Example 1 (homogeneous quadratics): averaging-frequency invariance
+# --------------------------------------------------------------------------
+
+def run_homogeneous_quadratic(P, qs, w0, alpha, steps, M, phase_len, seed=0):
+    """SGD on f_j(w) = ½wᵀPw + wᵀq_j with common Hessian P. Per Example 1,
+    the final worker-average is IDENTICAL for any averaging schedule given
+    the same sample draws. Returns the final average (used by tests)."""
+    key = jax.random.PRNGKey(seed)
+    m = qs.shape[0]
+    idx = jax.random.randint(key, (steps, M), 0, m)
+    w = jnp.broadcast_to(w0[None], (M,) + w0.shape)
+
+    def body(w, t_idx):
+        t, ix = t_idx
+        g = w @ P.T + qs[ix]
+        w = w - alpha * g
+        do_avg = (phase_len > 0) & ((t + 1) % max(phase_len, 1) == 0)
+        wbar = jnp.mean(w, axis=0, keepdims=True)
+        w = jnp.where(do_avg, jnp.broadcast_to(wbar, w.shape), w)
+        return w, None
+
+    w, _ = jax.lax.scan(body, w, (jnp.arange(steps), idx))
+    return jnp.mean(w, axis=0)

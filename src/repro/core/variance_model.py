@@ -1,0 +1,61 @@
+"""Gradient-variance envelope estimation (paper §2.2 + §3.1).
+
+The paper's model:  Δ(w) ≤ β² ||w - w*||² + σ²   (Eq. 5)
+with ρ = β² ||w0 - w*||² / σ² predicting the benefit of frequent
+averaging. The measurement procedure follows §3.1 exactly:
+
+  1. find (approximately) the optimizer w*;
+  2. Δ(w*) gives σ²;
+  3. draw a random line through w*;
+  4. measure Δ at points along the line;
+  5. fit the quadratic curvature -> one β² estimate;
+  6. repeat 3-5 and average.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def measure_sigma2(variance_fn, w_star):
+    """variance_fn(w) -> Δ(w) (Definition 1). σ² = Δ(w*)."""
+    return float(variance_fn(w_star))
+
+
+def measure_beta2(variance_fn, w_star, *, key, num_lines: int = 8,
+                  num_points: int = 9, radius: float = 1.0):
+    """Average curvature of Δ along random lines through w*.
+
+    Fits Δ(w* + t d) - σ² ≈ β² t² by least squares on t² (the paper takes
+    9 measurements per line)."""
+    sigma2 = measure_sigma2(variance_fn, w_star)
+    dim = w_star.shape[0]
+    betas = []
+    for i in range(num_lines):
+        key, sub = jax.random.split(key)
+        d = jax.random.normal(sub, (dim,))
+        d = d / jnp.linalg.norm(d)
+        ts = np.linspace(-radius, radius, num_points)
+        ts = ts[np.abs(ts) > 1e-12]
+        deltas = np.array([float(variance_fn(w_star + t * d)) for t in ts])
+        t2 = ts ** 2
+        beta2 = float(np.sum(t2 * (deltas - sigma2)) / np.sum(t2 * t2))
+        betas.append(max(beta2, 0.0))
+    return float(np.mean(np.array(betas))), sigma2
+
+
+def rho(beta2: float, sigma2: float, w0, w_star) -> float:
+    """ρ = β² ||w0 - w*||² / σ² — large ρ ⇒ frequent averaging helps."""
+    d2 = float(jnp.sum((w0 - w_star) ** 2))
+    return beta2 * d2 / max(sigma2, 1e-30)
+
+
+def empirical_variance_fn(kind: str, X, y):
+    """Definition 1 for a dataset: jitted Δ(w)."""
+    from repro.models.convex import gradient_variance
+
+    @jax.jit
+    def fn(w):
+        return gradient_variance(kind, w, X, y)
+    return fn

@@ -1,0 +1,6 @@
+from repro.data.synthetic import (  # noqa: F401
+    convex_dataset,
+    mnist_like,
+    token_stream,
+)
+from repro.data.pipeline import WorkerSharder, worker_batches  # noqa: F401

@@ -1,0 +1,51 @@
+"""Worker-sharded batching.
+
+The paper's setups use (a) sampling with replacement from a common pool
+(theory, Eq. 2) and (b) a distinct permutation of the dataset per worker
+(§3.2 CNN). ``WorkerSharder`` implements both; ``worker_batches`` adapts
+any single-stream iterator into per-worker batches with a leading worker
+axis — the layout the LocalSGD runtime shards over the mesh worker axes.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+class WorkerSharder:
+    """Deterministic per-worker sampler over an in-memory dataset."""
+
+    def __init__(self, num_samples: int, num_workers: int, *, seed: int = 0,
+                 mode: str = "permute"):
+        assert mode in ("permute", "replacement")
+        self.n = num_samples
+        self.m = num_workers
+        self.mode = mode
+        self.rngs = [np.random.default_rng(seed * 10_007 + i)
+                     for i in range(num_workers)]
+        self._perms = [r.permutation(num_samples) for r in self.rngs]
+        self._cursor = [0] * num_workers
+
+    def next_indices(self, batch: int) -> np.ndarray:
+        """(num_workers, batch) int — each worker's next sample indices."""
+        out = np.empty((self.m, batch), np.int64)
+        for i in range(self.m):
+            if self.mode == "replacement":
+                out[i] = self.rngs[i].integers(0, self.n, batch)
+            else:
+                idx = []
+                while len(idx) < batch:
+                    take = min(batch - len(idx), self.n - self._cursor[i])
+                    idx.extend(self._perms[i][self._cursor[i]:self._cursor[i] + take])
+                    self._cursor[i] += take
+                    if self._cursor[i] >= self.n:  # re-shuffle per epoch
+                        self._perms[i] = self.rngs[i].permutation(self.n)
+                        self._cursor[i] = 0
+                out[i] = np.asarray(idx)
+        return out
+
+
+def worker_batches(stream, num_workers: int):
+    """Group a single-batch iterator into (num_workers, ...) stacked
+    batches: one independent batch per worker per step."""
+    while True:
+        yield np.stack([next(stream) for _ in range(num_workers)], axis=0)

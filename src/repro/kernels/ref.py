@@ -1,0 +1,69 @@
+"""Pure-jnp oracles for every kernel — written as straightforward,
+obviously-correct (sequential where natural) references. Kernel tests
+assert_allclose against these across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q, k, v, *, causal: bool, window: int = 0,
+                        scale: float | None = None):
+    """q: (B,S,H,hd), k/v: (B,S,Hkv,hd) -> (B,S,H,hd). GQA by repeat."""
+    b, s, h, hd = q.shape
+    hkv = k.shape[2]
+    scale = scale if scale is not None else 1.0 / np.sqrt(hd)
+    g = h // hkv
+    kr = jnp.repeat(k, g, axis=2)
+    vr = jnp.repeat(v, g, axis=2)
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        kr.astype(jnp.float32)) * scale
+    qpos = jnp.arange(s)[:, None]
+    kpos = jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jax.nn.softmax(scores, axis=-1)
+    p = jnp.where(jnp.isnan(p), 0.0, p)  # fully-masked rows
+    out = jnp.einsum("bhqk,bkhd->bqhd", p, vr.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def rglru_scan_ref(a, b):
+    """h_t = a_t h_{t-1} + b_t, h_0 = 0. a,b: (B,S,W) fp32. Sequential."""
+    def step(h, ab):
+        at, bt = ab
+        h = at * h + bt
+        return h, h
+    a_t = jnp.swapaxes(a, 0, 1)
+    b_t = jnp.swapaxes(b, 0, 1)
+    _, hs = jax.lax.scan(step, jnp.zeros_like(a[:, 0]), (a_t, b_t))
+    return jnp.swapaxes(hs, 0, 1)
+
+
+def rwkv6_scan_ref(r, k, v, log_w, u):
+    """Exact sequential WKV6.
+    r,k,v,log_w: (B,S,H,n); u: (H*n,) or (H,n). Returns (B,S,H,n) fp32:
+      y_t = r_t · (S_{t-1} + (u∘k_t) v_tᵀ);  S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+    """
+    bsz, s, h, n = r.shape
+    u = jnp.asarray(u, jnp.float32).reshape(h, n)
+    rf, kf, vf = (t.astype(jnp.float32) for t in (r, k, v))
+    w = jnp.exp(log_w.astype(jnp.float32))
+
+    def step(S, inp):
+        rt, kt, vt, wt = inp  # (B,H,n)
+        kv = kt[..., None] * vt[..., None, :]            # (B,H,n,n)
+        y = jnp.einsum("bhi,bhij->bhj", rt, S + u[None, :, :, None] * kv)
+        S = wt[..., None] * S + kv
+        return S, y
+
+    xs = tuple(jnp.swapaxes(t, 0, 1) for t in (rf, kf, vf, w))
+    S0 = jnp.zeros((bsz, h, n, n), jnp.float32)
+    _, ys = jax.lax.scan(step, S0, xs)
+    return jnp.swapaxes(ys, 0, 1)

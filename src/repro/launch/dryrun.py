@@ -1,0 +1,272 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# The two lines above MUST run before jax initializes: the dry-run builds
+# the production mesh (256-chip pod / 512-chip multi-pod) out of host
+# placeholder devices. Everything else (tests, benches) sees 1 device.
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import sys        # noqa: E402
+import time       # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from repro.configs import (ARCHS, get_config, get_shape,  # noqa: E402
+                           long_context_variant, SHAPES)
+from repro.launch import steps  # noqa: E402
+from repro.launch.mesh import make_production_mesh, worker_axes  # noqa: E402
+from repro.roofline.analysis import model_flops, roofline_report  # noqa: E402
+from repro.sharding import specs as S  # noqa: E402
+
+
+def _axis_entry(axes: tuple):
+    return axes[0] if len(axes) == 1 else tuple(axes)
+
+
+def _ns(mesh, spec_tree):
+    return jax.tree.map(lambda sp: NamedSharding(mesh, sp), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def serve_batch_specs(batch_t, mesh):
+    daxes = tuple(a for a in mesh.axis_names if a != "model")
+    dsize = 1
+    for a in daxes:
+        dsize *= mesh.shape[a]
+    msize = mesh.shape["model"]
+
+    def spec(leaf):
+        dims = leaf.shape
+        entries = [None] * len(dims)
+        start = 0
+        if dims and dims[0] % dsize == 0 and dims[0] >= dsize:
+            entries[0] = _axis_entry(daxes)
+            start = 1
+        for i in range(start, len(dims)):
+            if dims[i] % msize == 0 and dims[i] >= msize:
+                entries[i] = "model"
+                break
+        return P(*entries)
+
+    return jax.tree.map(spec, batch_t)
+
+
+def skip_reason(arch: str, shape_name: str) -> str | None:
+    if shape_name == "long_500k" and arch == "whisper-small":
+        return ("enc-dec audio model: no 500k-token decode configuration "
+                "(DESIGN.md §4)")
+    return None
+
+
+def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
+                avg: str = "none", impl: str = "xla", remat: bool = True,
+                expert_parallel: bool = False, banded: bool = False,
+                score_bf16: bool = False, cache_layout: str = "seq",
+                moe_group: int = 0, verbose: bool = True):
+    """Lower + compile one (arch × shape × mesh) combination.
+    Returns (compiled, lowered, meta)."""
+    reason = skip_reason(arch, shape_name)
+    if reason:
+        return None, None, {"skipped": reason}
+
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    msize = mesh.shape["model"]
+    chips = mesh.devices.size
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    if shape_name == "long_500k":
+        cfg = long_context_variant(cfg)
+    import dataclasses as _dc
+    if banded:
+        cfg = _dc.replace(cfg, attn_banded=True)
+    if score_bf16:
+        cfg = _dc.replace(cfg, score_dtype="bfloat16")
+    if moe_group:
+        cfg = _dc.replace(cfg, moe_group_size=moe_group)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        waxes = worker_axes(mesh)
+        W = 1
+        for a in waxes:
+            W *= mesh.shape[a]
+        wentry = _axis_entry(waxes)
+        opt = steps.make_optimizer()
+        wp_t, os_t = steps.abstract_worker_state(cfg, opt, W)
+        batch_t = steps.input_specs(cfg, shape, num_workers=W)
+        inner = mesh.shape["pod"] if (avg == "hier" and "pod" in mesh.axis_names) else 0
+        fn = steps.make_train_step(
+            cfg, impl=impl, remat=remat, do_avg=(avg != "none"),
+            inner_groups=inner, optimizer=opt)
+        p_specs = S.param_specs(wp_t, msize, worker_axes=wentry,
+                                moe_expert_parallel=expert_parallel)
+        o_specs = S.param_specs(os_t, msize, worker_axes=wentry,
+                                moe_expert_parallel=expert_parallel)
+        b_specs = S.batch_specs(batch_t, msize, worker_axes=wentry)
+        step_t = steps.sds((), jnp.int32)
+        in_sh = (_ns(mesh, p_specs), _ns(mesh, o_specs),
+                 _ns(mesh, b_specs), NamedSharding(mesh, P()))
+        out_sh = (_ns(mesh, p_specs), _ns(mesh, o_specs), None)
+        args = (wp_t, os_t, batch_t, step_t)
+    elif shape.kind == "prefill":
+        p_t = steps.abstract_params(cfg)
+        batch_t = steps.input_specs(cfg, shape)
+        fn = steps.make_prefill_step(cfg, impl=impl)
+        p_specs = S.param_specs(p_t, msize,
+                                moe_expert_parallel=expert_parallel)
+        in_sh = (_ns(mesh, p_specs), _ns(mesh, serve_batch_specs(batch_t, mesh)))
+        out_sh = None
+        args = (p_t, batch_t)
+    else:  # decode
+        p_t = steps.abstract_params(cfg)
+        batch_t = steps.input_specs(cfg, shape)
+        cache_t = steps.abstract_cache(cfg, shape)
+        fn = steps.make_decode_step(cfg)
+        p_specs = S.param_specs(p_t, msize,
+                                moe_expert_parallel=expert_parallel)
+        daxes = tuple(a for a in mesh.axis_names if a != "model")
+        c_specs = S.cache_specs(cache_t, msize, data_axes=_axis_entry(daxes),
+                                long_layout=cache_layout)
+        in_sh = (_ns(mesh, p_specs),
+                 _ns(mesh, serve_batch_specs(batch_t, mesh)["tokens"]),
+                 _ns(mesh, c_specs))
+        out_sh = (None, _ns(mesh, c_specs))
+        args = (p_t, batch_t["tokens"], cache_t)
+
+    with mesh:
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    meta = {
+        "arch": arch, "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "avg": avg, "chips": chips,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "model_flops": model_flops(cfg, shape, training=shape.kind == "train"),
+        "expert_parallel": expert_parallel,
+        "variant": "+".join(filter(None, [
+            "banded" if banded else "", "bf16scores" if score_bf16 else "",
+            f"cache-{cache_layout}" if cache_layout != "seq" else "",
+            "ep" if expert_parallel else "",
+            f"moegroup{moe_group}" if moe_group else "",
+            "" if remat else "no-remat"])) or "baseline",
+    }
+    if verbose:
+        print(f"[dryrun] {arch} × {shape_name} × {meta['mesh']} avg={avg} "
+              f"lower={t_lower:.1f}s compile={t_compile:.1f}s", flush=True)
+    return compiled, lowered, meta
+
+
+def run_one(arch, shape_name, *, multi_pod, avg="none",
+            expert_parallel=False, banded=False, score_bf16=False,
+            cache_layout="seq", remat=True, moe_group=0, verbose=True):
+    compiled, lowered, meta = lower_combo(
+        arch, shape_name, multi_pod=multi_pod, avg=avg,
+        expert_parallel=expert_parallel, banded=banded,
+        score_bf16=score_bf16, cache_layout=cache_layout, remat=remat,
+        moe_group=moe_group, verbose=verbose)
+    if compiled is None:
+        return meta
+    rep = roofline_report(compiled, model_flops=meta["model_flops"],
+                          chips=meta["chips"])
+    meta.update(rep)
+    if verbose:
+        print(f"         memory_analysis: " +
+              ", ".join(f"{k.removeprefix('mem_')}={v/2**30:.2f}GiB"
+                        for k, v in meta.items() if k.startswith("mem_")),
+              flush=True)
+        print(f"         flops/dev={rep['flops_per_device']:.3e} "
+              f"bytes/dev={rep['bytes_per_device']:.3e} "
+              f"coll/dev={rep['collective_bytes_per_device']:.3e} "
+              f"bottleneck={rep['bottleneck']}", flush=True)
+    return meta
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default=None, choices=ARCHS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--avg", default="none", choices=["none", "all", "hier"])
+    ap.add_argument("--expert-parallel", action="store_true")
+    ap.add_argument("--banded", action="store_true",
+                    help="banded sliding-window attention (perf variant)")
+    ap.add_argument("--score-bf16", action="store_true",
+                    help="bf16 attention score traffic (perf variant)")
+    ap.add_argument("--cache-layout", default="seq",
+                    choices=["seq", "heads"],
+                    help="long-context decode cache layout (perf variant)")
+    ap.add_argument("--moe-group", type=int, default=0,
+                    help="MoE dispatch group size (perf variant; 0 = "
+                         "global capacity baseline)")
+    ap.add_argument("--no-remat", action="store_true",
+                    help="disable per-block remat (used for the multi-pod "
+                         "compile-proof pass on the largest archs, where "
+                         "remat doubles XLA compile time; noted in the "
+                         "output row)")
+    ap.add_argument("--out", default=None, help="append JSONL results here")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args(argv)
+
+    archs = [args.arch] if args.arch else ARCHS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[args.mesh]
+
+    variant = "+".join(filter(None, [
+        "banded" if args.banded else "",
+        "bf16scores" if args.score_bf16 else "",
+        f"cache-{args.cache_layout}" if args.cache_layout != "seq" else "",
+        "ep" if args.expert_parallel else "",
+        f"moegroup{args.moe_group}" if args.moe_group else "",
+        "no-remat" if args.no_remat else ""])) or "baseline"
+
+    done = set()
+    if args.out and args.skip_done and os.path.exists(args.out):
+        for line in open(args.out):
+            try:
+                r = json.loads(line)
+                done.add((r["arch"], r["shape"], r["mesh"],
+                          r.get("avg", "none"), r.get("variant", "baseline")))
+            except Exception:
+                pass
+
+    failures = []
+    for arch in archs:
+        for shape_name in shapes:
+            for mp in meshes:
+                mesh_name = "2x16x16" if mp else "16x16"
+                key = (arch, shape_name, mesh_name, args.avg, variant)
+                if key in done:
+                    continue
+                try:
+                    meta = run_one(arch, shape_name, multi_pod=mp,
+                                   avg=args.avg,
+                                   expert_parallel=args.expert_parallel,
+                                   banded=args.banded,
+                                   score_bf16=args.score_bf16,
+                                   cache_layout=args.cache_layout,
+                                   remat=not args.no_remat,
+                                   moe_group=args.moe_group)
+                except Exception as e:  # a failure here is a bug — surface it
+                    failures.append((key, repr(e)))
+                    print(f"[dryrun] FAIL {key}: {e!r}", flush=True)
+                    continue
+                if args.out:
+                    meta.setdefault("arch", arch)
+                    meta.setdefault("shape", shape_name)
+                    meta.setdefault("mesh", mesh_name)
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(meta) + "\n")
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES", flush=True)
+        sys.exit(1)
+    print("[dryrun] all combinations lowered + compiled OK", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,48 @@
+"""Production meshes.
+
+Single pod:  (16, 16)    axes ("data", "model")          = 256 chips (v5e pod)
+Multi-pod:   (2, 16, 16) axes ("pod", "data", "model")   = 512 chips
+
+The local-SGD *worker* axis is "data" (16 workers) on a single pod; on
+multiple pods it is either ("pod","data") flat (32 workers) or
+hierarchical — inner averages over "data", rare outer averages over
+"pod" (DCI-friendly; see repro.core.averaging).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.sharding.specs import set_axis_sizes
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    set_axis_sizes(dict(zip(axes, shape)))
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 2, pod: int = 0):
+    """Small mesh over host devices for tests (needs
+    XLA_FLAGS=--xla_force_host_platform_device_count set in the test
+    process *before* jax initializes)."""
+    if pod:
+        shape, axes = (pod, data, model), ("pod", "data", "model")
+    else:
+        shape, axes = (data, model), ("data", "model")
+    set_axis_sizes(dict(zip(axes, shape)))
+    return jax.make_mesh(shape, axes)
+
+
+def worker_axes(mesh, *, hierarchical: bool = False):
+    """Mesh axes that form the local-SGD worker axis."""
+    if "pod" in mesh.axis_names:
+        return ("data",) if hierarchical else ("pod", "data")
+    return ("data",)
+
+
+def num_workers(mesh, *, hierarchical: bool = False) -> int:
+    n = 1
+    for a in worker_axes(mesh, hierarchical=hierarchical):
+        n *= mesh.shape[a]
+    return n

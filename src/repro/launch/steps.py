@@ -1,0 +1,130 @@
+"""Step functions + abstract input specs for training, prefill and decode.
+
+Everything here is mesh-agnostic: functions take/return pytrees whose
+sharding is declared by the launcher (dryrun/train/serve) via the rules
+in repro.sharding.specs. No real allocation happens for the dry-run —
+inputs are ShapeDtypeStructs (the shannon/kernels pattern).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ModelConfig, ShapeConfig
+from repro.core.averaging import average_all, average_inner
+from repro.models import transformer as tfm
+from repro.models.layers import cdtype
+from repro.optim import Momentum
+
+
+# --------------------------------------------------------------------------
+# Abstract inputs (ShapeDtypeStruct stand-ins; weak-type-correct, shardable)
+# --------------------------------------------------------------------------
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig, *,
+                num_workers: int = 0) -> dict:
+    """Abstract model inputs for one step.
+
+    train:   {"tokens": (W, B/W, S)} (+ audio/media per family)
+    prefill: {"tokens": (B, S)}      (+ audio/media)
+    decode:  {"tokens": (B, 1)}      (cache is built separately)
+    """
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        assert num_workers > 0 and b % num_workers == 0, (b, num_workers)
+        bw = b // num_workers
+        lead = (num_workers, bw)
+    elif shape.kind == "prefill":
+        lead = (b,)
+    else:
+        lead = (b,)
+        s = 1  # decode: one new token
+    batch = {"tokens": sds(lead + (s,), jnp.int32)}
+    dt = cdtype(cfg)
+    if cfg.family == "audio":
+        batch["audio"] = sds(lead + (cfg.encoder_seq, cfg.d_model), dt)
+    if cfg.family == "vlm":
+        batch["media"] = sds(lead + (cfg.num_media_tokens, cfg.d_model), dt)
+    return batch
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: tfm.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_worker_state(cfg: ModelConfig, optimizer, num_workers: int):
+    """(worker_params, opt_state) ShapeDtypeStruct trees."""
+    p = abstract_params(cfg)
+    def build():
+        wp = jax.tree.map(
+            lambda x: jnp.zeros((num_workers,) + x.shape, x.dtype), p)
+        os = jax.vmap(optimizer.init)(wp)
+        return wp, os
+    return jax.eval_shape(build)
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    """Decode cache template; cross-attn K/V sized from the stub memory."""
+    b = shape.global_batch
+    p = abstract_params(cfg)
+    mem = None
+    if cfg.family == "audio":
+        mem = sds((b, cfg.encoder_seq, cfg.d_model), cdtype(cfg))
+    if cfg.family == "vlm":
+        mem = sds((b, cfg.num_media_tokens, cfg.d_model), cdtype(cfg))
+    return jax.eval_shape(
+        lambda pp, m: tfm.init_cache(cfg, b, shape.seq_len, memory=m, params=pp),
+        p, mem)
+
+
+# --------------------------------------------------------------------------
+# Steps
+# --------------------------------------------------------------------------
+
+def make_optimizer():
+    """Paper-faithful default: momentum SGD (paper §3.2 recipe)."""
+    return Momentum(lr=0.01, mu=0.9)
+
+
+def make_train_step(cfg: ModelConfig, *, impl: str = "xla",
+                    remat: bool = True, do_avg: bool = False,
+                    inner_groups: int = 0, optimizer=None):
+    """Local-SGD step over the worker axis (paper Eq. 3). With
+    ``do_avg`` the phase-end model average (one all-reduce) is fused in;
+    ``inner_groups`` > 0 averages hierarchically instead (beyond-paper)."""
+    opt = optimizer or make_optimizer()
+
+    def loss_fn(params, batch):
+        return tfm.lm_loss(cfg, params, batch, impl=impl, remat=remat)
+
+    def train_step(worker_params, opt_state, batch, step):
+        def one(p, s, b):
+            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b)
+            p2, s2 = opt.apply(p, g, s, step)
+            return p2, s2, loss
+        wp, os, loss = jax.vmap(one)(worker_params, opt_state, batch)
+        if do_avg:
+            wp = average_inner(wp, inner_groups) if inner_groups else average_all(wp)
+        return wp, os, jnp.mean(loss)
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, *, impl: str = "xla"):
+    def prefill_step(params, batch):
+        logits, _ = tfm.forward(cfg, params, batch, impl=impl, remat=False)
+        return logits[:, -1]
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    def decode_step(params, tokens, cache):
+        return tfm.decode_step(cfg, params, tokens, cache)
+    return decode_step

@@ -1,0 +1,9 @@
+"""Model zoo: composable JAX definitions for every assigned architecture
+plus the paper's own experimental models (CNN, convex)."""
+from repro.models.transformer import (  # noqa: F401
+    init_params,
+    init_cache,
+    forward,
+    decode_step,
+    lm_loss,
+)

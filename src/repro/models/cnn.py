@@ -1,0 +1,67 @@
+"""LeNet5-like CNN — the paper's §3.2 non-convex experiment model.
+
+conv 32@5x5 -> relu -> maxpool/2 -> conv 64@5x5 -> relu -> maxpool/2
+-> fc(hidden) -> relu -> fc(classes) -> softmax cross-entropy.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.paper import CNNConfig
+
+
+def init_cnn(cfg: CNNConfig, key):
+    ks = jax.random.split(key, 4)
+    c1, c2 = cfg.conv_channels
+    k = cfg.kernel_size
+    # 'SAME' convs + two stride-2 pools
+    feat = (cfg.image_size // 4) ** 2 * c2
+
+    def glorot(key, shape, fan_in):
+        return jax.random.normal(key, shape) * np.sqrt(2.0 / fan_in)
+
+    return {
+        "conv1": {"w": glorot(ks[0], (k, k, cfg.in_channels, c1), k * k * cfg.in_channels),
+                  "b": jnp.zeros((c1,))},
+        "conv2": {"w": glorot(ks[1], (k, k, c1, c2), k * k * c1),
+                  "b": jnp.zeros((c2,))},
+        "fc1": {"w": glorot(ks[2], (feat, cfg.fc_hidden), feat),
+                "b": jnp.zeros((cfg.fc_hidden,))},
+        "fc2": {"w": glorot(ks[3], (cfg.fc_hidden, cfg.num_classes), cfg.fc_hidden),
+                "b": jnp.zeros((cfg.num_classes,))},
+    }
+
+
+def _conv(x, p):
+    y = jax.lax.conv_general_dilated(
+        x, p["w"], window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"))
+    return y + p["b"]
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+
+
+def cnn_forward(cfg: CNNConfig, params, images):
+    """images: (B, H, W, C) float32 -> logits (B, classes)."""
+    x = _maxpool2(jax.nn.relu(_conv(images, params["conv1"])))
+    x = _maxpool2(jax.nn.relu(_conv(x, params["conv2"])))
+    x = x.reshape(x.shape[0], -1)
+    x = jax.nn.relu(x @ params["fc1"]["w"] + params["fc1"]["b"])
+    return x @ params["fc2"]["w"] + params["fc2"]["b"]
+
+
+def cnn_loss(cfg: CNNConfig, params, batch):
+    logits = cnn_forward(cfg, params, batch["images"])
+    logp = jax.nn.log_softmax(logits)
+    nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=-1)
+    return jnp.mean(nll)
+
+
+def cnn_error(cfg: CNNConfig, params, batch):
+    logits = cnn_forward(cfg, params, batch["images"])
+    return jnp.mean((jnp.argmax(logits, -1) != batch["labels"]).astype(jnp.float32))

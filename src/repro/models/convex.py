@@ -1,0 +1,71 @@
+"""Convex models from the paper's §3.1: least squares and logistic
+regression, in component form f(w) = (1/m) sum_j f_j(w) so that per-sample
+SGD (paper Eq. 2) and gradient-variance measurement (Definition 1) are
+exact, not minibatch approximations.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---- least squares: f_j(w) = 0.5 (x_j.w - y_j)^2 --------------------------
+
+def ls_objective(w, X, y):
+    r = X @ w - y
+    return 0.5 * jnp.mean(r * r)
+
+
+def ls_grad_sample(w, x_j, y_j):
+    return x_j * (x_j @ w - y_j)
+
+
+# ---- logistic regression: f_j(w) = log(1 + exp(-y_j x_j.w)), y in {-1,1} --
+
+def lr_objective(w, X, y):
+    z = y * (X @ w)
+    return jnp.mean(jax.nn.softplus(-z))
+
+
+def lr_grad_sample(w, x_j, y_j):
+    z = y_j * (x_j @ w)
+    return -y_j * jax.nn.sigmoid(-z) * x_j
+
+
+def make_problem(kind: str):
+    if kind == "ls":
+        return ls_objective, ls_grad_sample
+    if kind == "lr":
+        return lr_objective, lr_grad_sample
+    raise ValueError(kind)
+
+
+def solve_optimum(kind, X, y, *, iters: int = 400, lr: float = 0.5):
+    """w* — closed form for LS, full-gradient descent for logistic."""
+    if kind == "ls":
+        return jnp.linalg.solve(X.T @ X + 1e-6 * jnp.eye(X.shape[1]),
+                                X.T @ y)
+    obj = jax.jit(jax.value_and_grad(lambda w: lr_objective(w, X, y)))
+    w = jnp.zeros(X.shape[1])
+    meansq = float(jnp.mean(jnp.sum(X * X, axis=1)))
+    step = lr / max(meansq / X.shape[1], 1e-9)  # ~ 1/avg feature scale
+    for _ in range(iters):
+        _, g = obj(w)
+        w = w - step * g
+    return w
+
+
+def full_gradient(kind, w, X, y):
+    obj, _ = make_problem(kind)
+    return jax.grad(obj)(w, X, y)
+
+
+def gradient_variance(kind, w, X, y):
+    """Definition 1: (1/m) sum_j ||grad f_j(w) - grad f(w)||^2."""
+    _, gs = make_problem(kind)
+    per = jax.vmap(lambda xj, yj: gs(w, xj, yj))(X, y)
+    if kind == "ls":
+        # ls_objective has the 1/m inside; per-sample grads are the f_j grads
+        pass
+    g = jnp.mean(per, axis=0)
+    return jnp.mean(jnp.sum((per - g) ** 2, axis=1))

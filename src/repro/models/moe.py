@@ -1,0 +1,122 @@
+"""Mixture-of-Experts FFN: top-k router with capacity-bounded GShard-style
+einsum dispatch (TPU-native — dispatch/combine are MXU matmuls and the
+expert dimension shards cleanly for expert parallelism; see DESIGN.md).
+
+Includes the standard load-balance auxiliary loss (Shazeer/GShard) and
+router z-loss; both are returned so the training loop can add them.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.models.layers import activate, cdtype, dense_init
+
+
+def init_moe(cfg: ModelConfig, key):
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.num_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e), 0, jnp.float32),
+        "w_in": dense_init(ks[1], (e, d, f), 1, cdtype(cfg)),
+        "w_out": dense_init(ks[2], (e, f, d), 1, cdtype(cfg)),
+    }
+    if cfg.gated_mlp:
+        p["w_gate"] = dense_init(ks[3], (e, d, f), 1, cdtype(cfg))
+    if cfg.shared_expert:
+        from repro.models.layers import init_mlp
+        p["shared"] = init_mlp(cfg, ks[4], d_ff=cfg.moe_d_ff)
+    return p
+
+
+def _capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(np.ceil(tokens * cfg.top_k * cfg.capacity_factor / cfg.num_experts))
+    return max(4, -(-c // 4) * 4)  # pad to multiple of 4
+
+
+def _dispatch_combine(cfg: ModelConfig, probs, cap: int):
+    """Top-k combine weights with per-expert capacity over the leading
+    token axis. probs: (T,E) fp32 -> combine (T,E,C) fp32."""
+    t, e = probs.shape
+    k = cfg.top_k
+    gate_vals, gate_idx = jax.lax.top_k(probs, k)           # (T,k)
+    gate_vals = gate_vals / (jnp.sum(gate_vals, axis=-1, keepdims=True) + 1e-9)
+    combine = jnp.zeros((t, e, cap), jnp.float32)
+    offset = jnp.zeros((e,), jnp.float32)  # slots used by earlier k-slots
+    for slot in range(k):
+        onehot = jax.nn.one_hot(gate_idx[:, slot], e, dtype=jnp.float32)
+        # position of each token within its expert's buffer
+        pos = jnp.cumsum(onehot, axis=0) - 1.0 + offset[None, :]
+        offset = offset + jnp.sum(onehot, axis=0)
+        keep = (pos < cap) & (onehot > 0)                   # drop over-capacity
+        pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), cap, dtype=jnp.float32)
+        pos_oh = pos_oh * keep[..., None]                   # (T,E,C)
+        combine = combine + gate_vals[:, slot, None, None] * pos_oh
+    return combine
+
+
+def _expert_ffn(cfg: ModelConfig, p, combine, xt):
+    """combine: (T,E,C); xt: (T,d). GShard dispatch/compute/combine."""
+    dispatch = (combine > 0).astype(xt.dtype)               # (T,E,C)
+    xe = jnp.einsum("tec,td->ecd", dispatch, xt)            # (E,C,d)
+    h = jnp.einsum("ecd,edf->ecf", xe, p["w_in"])
+    if cfg.gated_mlp:
+        g = jnp.einsum("ecd,edf->ecf", xe, p["w_gate"])
+        h = activate(cfg, g) * h
+    else:
+        h = activate(cfg, h)
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"])          # (E,C,d)
+    return jnp.einsum("tec,ecd->td", combine.astype(xt.dtype), ye)
+
+
+def apply_moe(cfg: ModelConfig, p, x):
+    """x: (B,S,d) -> (y, aux) with aux = {load_balance, router_z}.
+
+    With ``cfg.moe_group_size`` = 0 (baseline) the capacity buffer spans
+    all T tokens and the dispatch einsums cost O(T²·k·cf·d/E·E) — fine at
+    small T, catastrophic at prefill scale (EXPERIMENTS.md §Perf HC1).
+    With group_size G > 0 tokens are routed in independent groups of G
+    (GShard's design): dispatch cost becomes O(T·G·k·cf·d), linear in T."""
+    b, s, d = x.shape
+    e = cfg.num_experts
+    t = b * s
+    xt = x.reshape(t, d)
+
+    logits = xt.astype(jnp.float32) @ p["router"]          # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+
+    # --- aux losses (computed on full probs)
+    density = jnp.mean(probs, axis=0)                       # (E,)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac = jnp.mean(jax.nn.one_hot(top1, e, dtype=jnp.float32), axis=0)
+    load_balance = e * jnp.sum(density * frac)
+    router_z = jnp.mean(jax.nn.logsumexp(logits, axis=-1) ** 2)
+
+    g = cfg.moe_group_size
+    if g and g < t:
+        t_pad = -(-t // g) * g
+        if t_pad != t:  # pad with zero tokens (router sends them anywhere;
+            xt_p = jnp.pad(xt, ((0, t_pad - t), (0, 0)))    # zero x -> zero y)
+            probs_p = jnp.pad(probs, ((0, t_pad - t), (0, 0)))
+        else:
+            xt_p, probs_p = xt, probs
+        cap = _capacity(cfg, g)
+        xg = xt_p.reshape(t_pad // g, g, d)
+        pg = probs_p.reshape(t_pad // g, g, e)
+
+        def per_group(pp, xx):
+            return _expert_ffn(cfg, p, _dispatch_combine(cfg, pp, cap), xx)
+
+        y = jax.vmap(per_group)(pg, xg).reshape(t_pad, d)[:t]
+    else:
+        cap = _capacity(cfg, t)
+        y = _expert_ffn(cfg, p, _dispatch_combine(cfg, probs, cap), xt)
+
+    if cfg.shared_expert:
+        from repro.models.layers import apply_mlp
+        y = y + apply_mlp(cfg, p["shared"], xt)
+
+    aux = {"load_balance": load_balance, "router_z": router_z}
+    return y.reshape(b, s, d), aux

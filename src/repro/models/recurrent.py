@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+Block structure (TPU-adapted, see DESIGN.md):
+  x -> [gate branch: linear -> GeLU] ----------------\
+  x -> [linear -> causal conv1d(width 4) -> RG-LRU] --⊙--> linear -> out
+
+RG-LRU recurrence (all elementwise over rnn_width channels):
+  r_t = sigmoid(block_diag(W_a) u_t)          recurrence gate
+  i_t = sigmoid(block_diag(W_i) u_t)          input gate
+  a_t = exp(-c * softplus(Lambda) * r_t)      c = 8
+  h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * u_t)
+
+Training uses jax.lax.associative_scan (log-depth, fully visible to XLA
+cost analysis — no while loop); decode carries (h, conv buffer) state.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.models.layers import cdtype, dense_init
+
+_C = 8.0
+
+
+def init_rglru(cfg: ModelConfig, key):
+    d, w, h = cfg.d_model, cfg.rnn_width or cfg.d_model, cfg.num_heads
+    bw = w // h  # block size for block-diagonal gates
+    ks = jax.random.split(key, 7)
+    # Lambda init so that a ~ Uniform(0.9, 0.999) at r=1 (Griffin appendix)
+    u = jax.random.uniform(ks[5], (w,), minval=0.9, maxval=0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / _C))  # softplus^-1(-log u / c)
+    return {
+        "w_gate": dense_init(ks[0], (d, w), 0, cdtype(cfg)),
+        "w_x": dense_init(ks[1], (d, w), 0, cdtype(cfg)),
+        "conv": dense_init(ks[2], (cfg.conv_width, w), 0, cdtype(cfg)),
+        "conv_b": jnp.zeros((w,), cdtype(cfg)),
+        "wa": dense_init(ks[3], (h, bw, bw), 1, cdtype(cfg)),
+        "wi": dense_init(ks[4], (h, bw, bw), 1, cdtype(cfg)),
+        "lam": lam.astype(jnp.float32),
+        "w_out": dense_init(ks[6], (w, d), 0, cdtype(cfg)),
+    }
+
+
+def _block_gate(p_w, u, h):
+    """Block-diagonal projection: u (B,S,W) -> (B,S,W) with H blocks."""
+    b, s, w = u.shape
+    ub = u.reshape(b, s, h, w // h)
+    return jnp.einsum("bshi,hij->bshj", ub, p_w).reshape(b, s, w)
+
+
+def _causal_conv(p, u, prev=None):
+    """Per-channel causal conv1d, width cw. u: (B,S,W).
+    prev: (B, cw-1, W) history for decode; None => zero left-pad."""
+    cw = p["conv"].shape[0]
+    if prev is None:
+        prev = jnp.zeros((u.shape[0], cw - 1, u.shape[2]), u.dtype)
+    up = jnp.concatenate([prev.astype(u.dtype), u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * p["conv"][i] for i in range(cw))
+    return out + p["conv_b"], up[:, -(cw - 1):]
+
+
+def _gates(cfg, p, u):
+    h = cfg.num_heads
+    r = jax.nn.sigmoid(_block_gate(p["wa"], u, h).astype(jnp.float32))
+    i = jax.nn.sigmoid(_block_gate(p["wi"], u, h).astype(jnp.float32))
+    log_a = -_C * jax.nn.softplus(p["lam"]) * r  # (B,S,W), <= 0
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12, 1.0))
+    b = b * i * u.astype(jnp.float32)
+    return a, b
+
+
+def rglru_scan(a, b):
+    """h_t = a_t h_{t-1} + b_t via associative scan over axis 1."""
+    def combine(x, y):
+        a1, b1 = x
+        a2, b2 = y
+        return a1 * a2, a2 * b1 + b2
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def apply_rglru(cfg: ModelConfig, p, x, *, impl="xla", return_state=False):
+    """x: (B,S,d) -> (B,S,d) (+ decode state when ``return_state``)."""
+    gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+    u = x @ p["w_x"]
+    u, conv_tail = _causal_conv(p, u)
+    a, b = _gates(cfg, p, u)
+    if impl == "pallas":
+        from repro.kernels import ops
+        h = ops.rglru_scan(a, b)
+    else:
+        h = rglru_scan(a, b)
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    if return_state:
+        return out, {"h": h[:, -1].astype(jnp.float32), "conv": conv_tail}
+    return out
+
+
+# ---- decode (single token, carried state) --------------------------------
+
+def init_rglru_cache(cfg: ModelConfig, batch: int, dtype):
+    w = cfg.rnn_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def decode_rglru(cfg: ModelConfig, p, x, cache):
+    """x: (B,1,d); cache {"h": (B,W) fp32, "conv": (B,cw-1,W)}."""
+    gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+    u = x @ p["w_x"]
+    u, conv_state = _causal_conv(p, u, prev=cache["conv"])
+    a, b = _gates(cfg, p, u)          # (B,1,W)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    out = (h[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,233 @@
+"""RWKV6 "Finch" time-mix + channel-mix (arXiv:2404.05892).
+
+Per head (head_dim n), with data-dependent per-channel decay w_t:
+  S_t[i,j] = w_t[i] * S_{t-1}[i,j] + k_t[i] * v_t[j]
+  y_t[j]   = sum_i r_t[i] * (S_{t-1}[i,j] + u[i] * k_t[i] * v_t[j])
+
+Training path is CHUNKED (TPU adaptation, see DESIGN.md): the sequence is
+split into chunks of size C; within a chunk the output is computed in
+quadratic "decay attention" form with *relative* decays (numerically
+bounded); chunk boundary states are combined with a log-depth
+jax.lax.associative_scan (no while loop => correct XLA cost analysis).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ModelConfig
+from repro.models.layers import cdtype, dense_init
+
+# Chunk size / decay floor are coupled: every intra-chunk exponent is
+# bounded by (CHUNK-1) * |log_w|_max = 15 * 5 = 75 < log(fp32 max) ~ 88,
+# so the quadratic decay-attention form never overflows in fp32.
+CHUNK = 16
+LOG_W_MIN = -5.0
+
+
+def init_rwkv(cfg: ModelConfig, key):
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    ks = jax.random.split(key, 10)
+    lora = max(32, d // 64)
+    return {
+        # token-shift mix coefficients (static lerp part of ddlerp)
+        "mu_r": jnp.full((d,), 0.5, cdtype(cfg)),
+        "mu_k": jnp.full((d,), 0.5, cdtype(cfg)),
+        "mu_v": jnp.full((d,), 0.5, cdtype(cfg)),
+        "mu_w": jnp.full((d,), 0.5, cdtype(cfg)),
+        "mu_g": jnp.full((d,), 0.5, cdtype(cfg)),
+        "wr": dense_init(ks[0], (d, d), 0, cdtype(cfg)),
+        "wk": dense_init(ks[1], (d, d), 0, cdtype(cfg)),
+        "wv": dense_init(ks[2], (d, d), 0, cdtype(cfg)),
+        "wg": dense_init(ks[3], (d, d), 0, cdtype(cfg)),
+        "wo": dense_init(ks[4], (d, d), 0, cdtype(cfg)),
+        # data-dependent decay LoRA: w_t = exp(-exp(w0 + tanh(x A) B))
+        "w0": jnp.full((d,), -6.0, jnp.float32) +
+              8.0 * (jnp.arange(d) / max(d - 1, 1)).astype(jnp.float32) ** 3,
+        "wA": dense_init(ks[5], (d, lora), 0, cdtype(cfg)),
+        "wB": dense_init(ks[6], (lora, d), 0, cdtype(cfg)),
+        "u": dense_init(ks[7], (d,), None, jnp.float32),  # per-channel bonus
+        "ln_out": jnp.ones((d,), jnp.float32),            # group-norm scale
+    }
+
+
+def _token_shift(x, mu, prev=None):
+    """lerp(x_t, x_{t-1}, mu); prev: (B,1,d) last token of previous step."""
+    if prev is None:
+        prev_x = jnp.pad(x, ((0, 0), (1, 0), (0, 0)))[:, :-1]
+    else:
+        prev_x = jnp.concatenate([prev.astype(x.dtype), x[:, :-1]], axis=1)
+    return x + (prev_x - x) * mu
+
+
+def _project(cfg, p, x, prev=None):
+    """Returns r,k,v,g: (B,S,H,n); log_w: (B,S,H,n) fp32 (<0)."""
+    n = cfg.rwkv_head_dim
+    b, s, d = x.shape
+    h = d // n
+    r = _token_shift(x, p["mu_r"], prev) @ p["wr"]
+    k = _token_shift(x, p["mu_k"], prev) @ p["wk"]
+    v = _token_shift(x, p["mu_v"], prev) @ p["wv"]
+    g = jax.nn.silu(_token_shift(x, p["mu_g"], prev) @ p["wg"])
+    xw = _token_shift(x, p["mu_w"], prev)
+    dw = jnp.tanh(xw @ p["wA"]) @ p["wB"]
+    log_w = -jnp.exp(jnp.clip(p["w0"] + dw.astype(jnp.float32), -20.0, 8.0))
+    log_w = jnp.clip(log_w, LOG_W_MIN, -1e-5)
+    hsplit = lambda t: t.reshape(b, s, h, n)
+    return hsplit(r), hsplit(k), hsplit(v), g, hsplit(log_w)
+
+
+def _chunk_scan(A, S):
+    """Combine per-chunk (decay, state) across chunks.
+    A: (B,H,N,n) total per-channel decay of each chunk (key dim)
+    S: (B,H,N,n,n) chunk-local state contribution.
+    Returns prefix states BEFORE each chunk (exclusive scan)."""
+    def combine(x, y):
+        a1, s1 = x
+        a2, s2 = y
+        return a1 * a2, a2[..., None] * s1 + s2
+    a, s = jax.lax.associative_scan(combine, (A, S), axis=2)
+    # exclusive: state entering chunk c = scanned state of chunk c-1
+    zero = jnp.zeros_like(s[:, :, :1])
+    return jnp.concatenate([zero, s[:, :, :-1]], axis=2)
+
+
+def rwkv_attention(cfg: ModelConfig, r, k, v, log_w, u, *,
+                   return_state=False):
+    """Chunked WKV6. r,k,v,log_w: (B,S,H,n) (log_w fp32). u: (n,) or (d,)->
+    reshaped per head. Returns (B,S,H,n) fp32."""
+    b, s_orig, h, n = r.shape
+    c = min(CHUNK, s_orig)
+    if s_orig % c:  # pad to a chunk multiple: k=0 adds no state and
+        pad = c - s_orig % c  # log_w=0 (decay 1) leaves the state intact
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, z), jnp.pad(k, z), jnp.pad(v, z)
+        log_w = jnp.pad(log_w, z, constant_values=0.0)
+    s = r.shape[1]
+    nchunk = s // c
+    u = u.reshape(h, n)
+
+    # (B,H,N,c,n) layout
+    def to_chunks(t):
+        return t.transpose(0, 2, 1, 3).reshape(b, h, nchunk, c, n)
+
+    r_, k_, v_ = map(to_chunks, (r, k, v))
+    lw = to_chunks(log_w.astype(jnp.float32))
+    r_, k_, v_ = r_.astype(jnp.float32), k_.astype(jnp.float32), v_.astype(jnp.float32)
+
+    # cumulative decay within chunk: L[t] = sum_{u<=t} log_w[u]
+    L = jnp.cumsum(lw, axis=3)                       # (B,H,N,c,n)
+    Ltot = L[:, :, :, -1]                            # (B,H,N,n)
+
+    # ---- intra-chunk: y_t += sum_{s<t} r_t ⊙ exp(L_{t-1}-L_s) k_s · v_s
+    # scores[t,s] = sum_i r_t[i] exp(L[t-1,i] - L[s,i]) k_s[i]
+    rd = r_ * jnp.exp(L - lw)                        # r_t e^{L_{t-1}}
+    kd = k_ * jnp.exp(-L)                            # k_s e^{-L_s}
+    scores = jnp.einsum("bhnti,bhnsi->bhnts", rd, kd)
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    scores = jnp.where(tri, scores, 0.0)
+    # diagonal bonus: u ⊙ k_t
+    diag = jnp.einsum("bhnti,bhnti->bhnt", r_ * u[None, :, None, None], k_)
+    y = jnp.einsum("bhnts,bhnsj->bhntj", scores, v_) + diag[..., None] * v_
+
+    # ---- inter-chunk: contribution of the state entering the chunk
+    # chunk-local state: S_c[i,j] = sum_t exp(Ltot - L_t)[i] k_t[i] v_t[j]
+    kS = k_ * jnp.exp(Ltot[:, :, :, None] - L)
+    S_local = jnp.einsum("bhnti,bhntj->bhnij", kS, v_)
+    S_in = _chunk_scan(jnp.exp(Ltot), S_local)       # (B,H,N,n,n)
+    y = y + jnp.einsum("bhnti,bhnij->bhntj", rd, S_in)
+
+    out = y.reshape(b, h, s, n).transpose(0, 2, 1, 3)[:, :s_orig]
+    if return_state:
+        S_final = (jnp.exp(Ltot[:, :, -1])[..., None] * S_in[:, :, -1]
+                   + S_local[:, :, -1])              # (B,H,n,n)
+        return out, S_final
+    return out
+
+
+def _group_norm(y, scale, h, n, eps=64e-5):
+    """RWKV's per-head group norm on the wkv output."""
+    mu = jnp.mean(y, axis=-1, keepdims=True)
+    var = jnp.var(y, axis=-1, keepdims=True)
+    yn = (y - mu) * jax.lax.rsqrt(var + eps)
+    return yn.reshape(y.shape[:2] + (h * n,)) * scale
+
+
+def apply_rwkv(cfg: ModelConfig, p, x, *, impl="xla", return_state=False):
+    """Time-mix layer. x: (B,S,d) -> (B,S,d) (+ decode state)."""
+    b, s, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    r, k, v, g, log_w = _project(cfg, p, x)
+    state = None
+    if impl == "pallas" and not return_state:
+        from repro.kernels import ops
+        y = ops.rwkv6_scan(r, k, v, log_w, p["u"])
+    elif return_state:
+        y, state = rwkv_attention(cfg, r, k, v, log_w, p["u"],
+                                  return_state=True)
+    else:
+        y = rwkv_attention(cfg, r, k, v, log_w, p["u"])
+    y = _group_norm(y, p["ln_out"], h, n).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    if return_state:
+        return out, {"wkv": state, "shift_t": x[:, -1:]}
+    return out
+
+
+# ---- channel mix ----------------------------------------------------------
+
+def init_rwkv_cmix(cfg: ModelConfig, key):
+    d, f = cfg.d_model, cfg.d_ff
+    ks = jax.random.split(key, 2)
+    return {
+        "mu_k": jnp.full((d,), 0.5, cdtype(cfg)),
+        "wk": dense_init(ks[0], (d, f), 0, cdtype(cfg)),
+        "wv": dense_init(ks[1], (f, d), 0, cdtype(cfg)),
+    }
+
+
+def apply_rwkv_cmix(cfg: ModelConfig, p, x, prev=None):
+    xk = _token_shift(x, p["mu_k"], prev)
+    hdn = jax.nn.relu(xk @ p["wk"])
+    return (hdn * hdn) @ p["wv"]
+
+
+# ---- decode (single token) ------------------------------------------------
+
+def init_rwkv_cache(cfg: ModelConfig, batch: int, dtype):
+    d = cfg.d_model
+    n = cfg.rwkv_head_dim
+    h = d // n
+    return {
+        "wkv": jnp.zeros((batch, h, n, n), jnp.float32),
+        "shift_t": jnp.zeros((batch, 1, d), dtype),
+        "shift_c": jnp.zeros((batch, 1, d), dtype),
+    }
+
+
+def decode_rwkv(cfg: ModelConfig, p, x, cache):
+    """x: (B,1,d). One recurrence step."""
+    b, _, d = x.shape
+    n = cfg.rwkv_head_dim
+    h = d // n
+    r, k, v, g, log_w = _project(cfg, p, x, prev=cache["shift_t"])
+    r, k, v = (t[:, 0].astype(jnp.float32) for t in (r, k, v))  # (B,H,n)
+    w = jnp.exp(log_w[:, 0])
+    u = p["u"].reshape(h, n)
+    S = cache["wkv"]
+    kv = k[..., None] * v[..., None, :]              # (B,H,n,n)
+    y = jnp.einsum("bhi,bhij->bhj", r, S + u[None, :, :, None] * kv)
+    S = w[..., None] * S + kv
+    y = _group_norm(y[:, None], p["ln_out"], h, n).astype(x.dtype)
+    out = (y * g) @ p["wo"]
+    return out, {"wkv": S, "shift_t": x, "shift_c": cache["shift_c"]}
+
+
+def decode_rwkv_cmix(cfg: ModelConfig, p, x, cache):
+    out = apply_rwkv_cmix(cfg, p, x, prev=cache["shift_c"])
+    cache = dict(cache, shift_c=x)
+    return out, cache

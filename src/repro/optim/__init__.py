@@ -1,0 +1,8 @@
+"""Optimizers: init/apply pairs over pytrees (kept dependency-free).
+
+Each optimizer exposes:
+    init(params)                      -> opt_state
+    apply(params, grads, state, step) -> (params, state)
+"""
+from repro.optim.sgd import SGD, Momentum, schedules  # noqa: F401
+from repro.optim.adamw import AdamW  # noqa: F401

@@ -1,0 +1,44 @@
+"""AdamW (used by the LM examples; fp32 moments over bf16 params)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def init(self, params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(z, params), "v": jax.tree.map(z, params)}
+
+    def apply(self, params, grads, state, step):
+        lr = self._lr(step)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - self.b1 ** t
+        c2 = 1.0 - self.b2 ** t
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32)
+            m2 = self.b1 * m + (1 - self.b1) * g
+            v2 = self.b2 * v + (1 - self.b2) * g * g
+            d = (m2 / c1) / (jnp.sqrt(v2 / c2) + self.eps)
+            p32 = p.astype(jnp.float32)
+            p32 = p32 - lr * (d + self.weight_decay * p32)
+            return p32.astype(p.dtype), m2, v2
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                      is_leaf=lambda t: isinstance(t, tuple))
+        return pick(0), {"m": pick(1), "v": pick(2)}

@@ -1,0 +1,76 @@
+"""SGD / momentum SGD with the paper's learning-rate schedules."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+class schedules:
+    @staticmethod
+    def constant(lr: float) -> Callable:
+        return lambda step: jnp.asarray(lr, jnp.float32)
+
+    @staticmethod
+    def inverse(alpha: float, d: float) -> Callable:
+        """The paper's §3.1 schedule: alpha / (t + d)."""
+        return lambda step: jnp.asarray(alpha, jnp.float32) / (step + d)
+
+    @staticmethod
+    def exponential_epoch(lr0: float, decay: float, steps_per_epoch: int):
+        """The paper's §3.2 CNN schedule: x``decay`` each epoch."""
+        def fn(step):
+            epoch = jnp.floor(step / steps_per_epoch)
+            return jnp.asarray(lr0, jnp.float32) * decay ** epoch
+        return fn
+
+
+@dataclass(frozen=True)
+class SGD:
+    lr: Callable | float = 0.01
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def init(self, params):
+        return ()
+
+    def apply(self, params, grads, state, step):
+        lr = self._lr(step)
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, state
+
+
+@dataclass(frozen=True)
+class Momentum:
+    """Heavy-ball momentum (the paper's CNN recipe: lr .01, mu .9)."""
+    lr: Callable | float = 0.01
+    mu: float = 0.9
+    nesterov: bool = False
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
+
+    def init(self, params):
+        return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+    def apply(self, params, grads, state, step):
+        lr = self._lr(step)
+
+        def upd(p, g, v):
+            g = g.astype(jnp.float32)
+            v2 = self.mu * v + g
+            d = g + self.mu * v2 if self.nesterov else v2
+            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), v2
+
+        out = jax.tree.map(upd, params, grads, state)
+        new = jax.tree.map(lambda t: t[0], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        vel = jax.tree.map(lambda t: t[1], out,
+                           is_leaf=lambda t: isinstance(t, tuple))
+        return new, vel

@@ -1,0 +1,135 @@
+"""Roofline-term derivation from compiled dry-run artifacts.
+
+  compute term    = HLO_FLOPs_per_device / peak_FLOPs
+  memory term     = HLO_bytes_per_device / HBM_bw
+  collective term = collective_bytes_per_device / link_bw
+
+HLO_FLOPs/bytes come from ``compiled.cost_analysis()`` (per-device SPMD
+module, so the spec's global/(chips×peak) equals per-device/peak).
+Collective bytes are parsed from the SPMD HLO text: the result-shape
+bytes of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute. Ring-algorithm traffic multipliers (~2(n-1)/n) are
+deliberately NOT applied — reported numbers are payload bytes per chip;
+methodology noted in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class HW:
+    """TPU v5e-class chip (target hardware; see task spec)."""
+    peak_flops: float = 197e12   # bf16 FLOP/s
+    hbm_bw: float = 819e9        # B/s
+    ici_bw: float = 50e9         # B/s per link
+
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "s32": 4, "u32": 4,
+    "s64": 8, "u64": 8, "f16": 2, "bf16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLL_KINDS = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+# e.g.  %all-reduce.5 = bf16[16,2560]{1,0} all-reduce(...)
+_INSTR_RE = re.compile(
+    r"=\s*(\(?)([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+)
+_TUPLE_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes per collective kind from HLO text."""
+    out = {k: 0 for k in _COLL_KINDS}
+    counts = {k: 0 for k in _COLL_KINDS}
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(4)
+        if "-done(" in line:
+            continue  # avoid double counting start/done pairs
+        if m.group(1) == "(":
+            # tuple result: sum all component shapes up to the op name
+            head = line.split(kind)[0]
+            total = sum(_shape_bytes(d, s)
+                        for d, s in _TUPLE_SHAPE_RE.findall(head))
+        else:
+            total = _shape_bytes(m.group(2), m.group(3))
+        out[kind] += total
+        counts[kind] += 1
+    out["total"] = sum(out[k] for k in _COLL_KINDS)
+    out["counts"] = counts
+    return out
+
+
+def roofline_report(compiled, *, hw: HW = HW(), model_flops: float = 0.0,
+                    chips: int = 1, hlo_text: str | None = None) -> dict:
+    """Derive the three terms + bottleneck from a compiled executable."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):  # older jax returns [dict]
+        ca = ca[0]
+    flops = float(ca.get("flops", 0.0))
+    bytes_ = float(ca.get("bytes accessed", 0.0))
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    coll = collective_bytes(text)
+
+    compute_s = flops / hw.peak_flops
+    memory_s = bytes_ / hw.hbm_bw
+    collective_s = coll["total"] / hw.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+
+    rep = {
+        "flops_per_device": flops,
+        "bytes_per_device": bytes_,
+        "collective_bytes_per_device": coll["total"],
+        "collective_breakdown": {k: coll[k] for k in _COLL_KINDS},
+        "collective_counts": coll["counts"],
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "bottleneck": bottleneck,
+        "step_time_lower_bound_s": max(terms.values()),
+    }
+    if model_flops:
+        rep["model_flops_global"] = model_flops
+        hlo_global = flops * chips
+        rep["useful_flop_fraction"] = model_flops / hlo_global if hlo_global else 0.0
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                     "output_size_in_bytes", "generated_code_size_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                rep[f"mem_{attr}"] = int(v)
+    except Exception:
+        pass
+    return rep
+
+
+def model_flops(cfg, shape, *, training: bool) -> float:
+    """6·N_active·D for train, 2·N_active·D for inference (global)."""
+    n = cfg.num_active_params()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    return 2.0 * n * shape.global_batch  # decode: one token per sequence

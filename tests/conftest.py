@@ -1,0 +1,19 @@
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import ARCHS, get_config
+
+jax.config.update("jax_enable_x64", False)
+
+
+def reduced_f32(arch: str, **kw):
+    """Reduced config in float32 (CPU numerics) for smoke tests."""
+    cfg = get_config(arch, reduced=True)
+    return dataclasses.replace(cfg, dtype="float32", **kw)
+
+
+@pytest.fixture(params=ARCHS)
+def arch(request):
+    return request.param

@@ -1,0 +1,121 @@
+"""Property-based tests (hypothesis) for the averaging operators and
+local-SGD runtime invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.averaging import (AveragingSchedule, OuterOptimizer,
+                                  average_all, average_inner,
+                                  worker_dispersion)
+from repro.core.local_sgd import LocalSGD, consensus, replicate
+from repro.optim import SGD
+
+shapes = st.sampled_from([(4, 3), (2, 5, 2), (8, 1)])
+
+
+def tree_from(seed, m, shape):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (m,) + shape),
+            "b": {"c": jax.random.normal(k2, (m, 7))}}
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), m=st.sampled_from([2, 4, 8]),
+       shape=shapes)
+def test_average_all_idempotent_and_mean_preserving(seed, m, shape):
+    t = tree_from(seed, m, shape)
+    avg = average_all(t)
+    # all workers equal after averaging
+    for leaf in jax.tree.leaves(avg):
+        np.testing.assert_allclose(np.asarray(leaf),
+                                   np.asarray(leaf[:1]).repeat(m, 0), rtol=1e-6)
+    # idempotent
+    for a, b in zip(jax.tree.leaves(average_all(avg)), jax.tree.leaves(avg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    # preserves the mean (consensus invariance)
+    for a, b in zip(jax.tree.leaves(consensus(avg)), jax.tree.leaves(consensus(t))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    # dispersion collapses to ~0
+    assert float(worker_dispersion(avg)) < 1e-8
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), groups=st.sampled_from([2, 4]))
+def test_hierarchical_inner_average(seed, groups):
+    m = 8
+    t = tree_from(seed, m, (3,))
+    inner = average_inner(t, groups)
+    x = np.asarray(jax.tree.leaves(t)[0])
+    got = np.asarray(jax.tree.leaves(inner)[0])
+    per = m // groups
+    for g in range(groups):
+        expect = x[g * per:(g + 1) * per].mean(0)
+        for i in range(per):
+            np.testing.assert_allclose(got[g * per + i], expect, rtol=1e-5)
+    # full average of inner-averaged == full average of original
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(consensus(inner))[0]),
+        np.asarray(jax.tree.leaves(consensus(t))[0]), rtol=1e-5, atol=1e-6)
+
+
+def test_outer_optimizer_identity_reduces_to_plain_mean():
+    t = tree_from(3, 4, (5,))
+    outer = OuterOptimizer(lr=1.0, momentum=0.0)
+    prev = consensus(average_all(t))
+    new = consensus(t)
+    vel = outer.init(new)
+    out, _ = outer.apply(prev, new, vel)
+    # lr=1, mu=0: out = prev - (prev - new) = new
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(new)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.sampled_from([1, 3, 8]), steps=st.sampled_from([9, 16]))
+def test_schedule_periodic_counts(k, steps):
+    sch = AveragingSchedule(kind="periodic", phase_len=k)
+    n = sum(sch.wants_average(s) == "all" for s in range(1, steps + 1))
+    assert n == steps // k
+
+
+def test_schedule_kinds():
+    rng = np.random.default_rng(0)
+    assert AveragingSchedule(kind="oneshot").wants_average(5, rng) == "none"
+    assert AveragingSchedule(kind="minibatch").wants_average(5, rng) == "all"
+    h = AveragingSchedule(kind="hierarchical", inner_phase_len=2,
+                          outer_phase_len=6, inner_groups=2)
+    kinds = [h.wants_average(s, rng) for s in range(1, 7)]
+    assert kinds == ["none", "inner", "none", "inner", "none", "all"]
+
+
+def test_local_sgd_runtime_on_quadratic():
+    """M workers on a noisy scalar quadratic: periodic averaging converges
+    to a smaller noise ball than one-shot (paper's variance claim) and the
+    runtime machinery (init/local_step/average) holds its invariants."""
+    def make(schedule):
+        def loss_fn(params, batch, rng):
+            b, h = batch["b"], batch["h"]
+            w = params["w"]
+            # grad = c w - b w - h realized via surrogate loss
+            g = w - b * w - h
+            return 0.5 * jnp.sum(jax.lax.stop_gradient(g) * w) * 2.0, {}
+        return LocalSGD(loss_fn, SGD(lr=0.05), schedule)
+
+    M, steps = 16, 400
+    rng = np.random.default_rng(0)
+
+    def batches():
+        for _ in range(steps):
+            yield {"b": jnp.asarray(rng.normal(0, 2.0, (M, 1))),
+                   "h": jnp.asarray(rng.normal(0, 1.0, (M, 1)))}
+
+    final_periodic, hist_p = make(AveragingSchedule("periodic", 10)).run(
+        {"w": jnp.ones(1) * 5.0}, batches(), num_workers=M, seed=0)
+    final_oneshot, hist_o = make(AveragingSchedule("oneshot")).run(
+        {"w": jnp.ones(1) * 5.0}, batches(), num_workers=M, seed=0)
+    assert hist_p["averages"] == steps // 10
+    assert hist_o["averages"] == 0
+    assert np.isfinite(float(final_periodic["w"][0]))
+    assert abs(float(final_periodic["w"][0])) < abs(float(final_oneshot["w"][0])) + 0.5

@@ -1,0 +1,92 @@
+"""Dry-run machinery on a small host-device mesh (subprocess so the
+XLA device-count flag doesn't leak into other tests), plus unit tests of
+the sharding rules."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.specs import (first_divisible_spec, leaf_spec,
+                                  set_axis_sizes)
+
+
+class TestSpecRules:
+    def test_leaf_spec_largest_divisible(self):
+        assert leaf_spec((49152, 960), 16) == P("model", None)
+        assert leaf_spec((960, 2560), 16) == P(None, "model")
+        assert leaf_spec((7,), 16) == P(None)
+        assert leaf_spec((4, 960, 2560), 16, prefix=("data",)) == \
+            P("data", None, "model")
+
+    def test_leaf_spec_prefer_axis(self):
+        # expert-parallel preference: shard dim 0 (experts) even if smaller
+        assert leaf_spec((16, 4096, 6400), 16, prefer_axis=0) == \
+            P("model", None, None)
+
+    def test_first_divisible(self):
+        assert first_divisible_spec((16, 4096), 16) == P("model", None)
+        # non-divisible batch: replicate within the group — deliberately
+        # NOT seq-sharding (see EXPERIMENTS.md §Perf HC3 iteration 3)
+        assert first_divisible_spec((10, 4096), 16) == P(None, None)
+        assert first_divisible_spec((10, 33), 16) == P(None, None)
+
+
+MINI_DRYRUN = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    import dataclasses
+
+    from repro.configs import get_config, ShapeConfig
+    from repro.launch import steps
+    from repro.launch.mesh import make_host_mesh
+    from repro.roofline.analysis import roofline_report
+    from repro.sharding import specs as S
+
+    mesh = make_host_mesh(data=2, model=2, pod=2)   # 8 host "chips"
+    msize = 2
+    cfg = get_config("smollm-360m", reduced=True)
+    shape = ShapeConfig("t", "train", 64, 8)        # 8 seqs of 64
+    W = 4                                           # pod x data
+    opt = steps.make_optimizer()
+    wp_t, os_t = steps.abstract_worker_state(cfg, opt, W)
+    batch_t = steps.input_specs(cfg, shape, num_workers=W)
+    fn = steps.make_train_step(cfg, do_avg=True)
+    went = ("pod", "data")
+    ns = lambda t: jax.tree.map(lambda sp: NamedSharding(mesh, sp), t,
+                                is_leaf=lambda x: isinstance(x, P))
+    in_sh = (ns(S.param_specs(wp_t, msize, worker_axes=went)),
+             ns(S.param_specs(os_t, msize, worker_axes=went)),
+             ns(S.batch_specs(batch_t, msize, worker_axes=went)),
+             NamedSharding(mesh, P()))
+    with mesh:
+        lowered = jax.jit(fn, in_shardings=in_sh).lower(
+            wp_t, os_t, batch_t, steps.sds((), jnp.int32))
+        compiled = lowered.compile()
+    rep = roofline_report(compiled, chips=8)
+    rep["ok"] = True
+    print(json.dumps({k: v for k, v in rep.items()
+                      if isinstance(v, (int, float, str, bool))}))
+""")
+
+
+class TestHostMeshDryrun:
+    def test_train_step_lowers_on_8_device_mesh(self):
+        env = dict(os.environ, PYTHONPATH="src")
+        out = subprocess.run([sys.executable, "-c", MINI_DRYRUN],
+                             capture_output=True, text=True, env=env,
+                             cwd=os.path.dirname(os.path.dirname(__file__)),
+                             timeout=600)
+        assert out.returncode == 0, out.stderr[-3000:]
+        rep = json.loads(out.stdout.strip().splitlines()[-1])
+        assert rep["ok"]
+        assert rep["flops_per_device"] > 0
+        # do_avg=True must produce cross-worker collectives
+        assert rep["collective_bytes_per_device"] > 0

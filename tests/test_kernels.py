@@ -1,0 +1,222 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs
+pure-jnp oracle; plus the model-internal XLA paths vs the same oracles."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.rglru_scan import rglru_scan
+from repro.kernels.rwkv6_scan import rwkv6_scan
+from repro.kernels.ref import (flash_attention_ref, rglru_scan_ref,
+                               rwkv6_scan_ref)
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("b,s,h,hkv,hd", [
+        (2, 256, 4, 2, 64),
+        (1, 128, 4, 4, 32),
+        (1, 384, 8, 1, 128),   # MQA
+        (2, 96, 6, 3, 64),     # padding path (96 < block)
+    ])
+    @pytest.mark.parametrize("causal,window", [(True, 0), (True, 64),
+                                               (False, 0)])
+    def test_matches_ref(self, b, s, h, hkv, hd, causal, window):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (b, s, h, hd), jnp.float32)
+        k = jax.random.normal(ks[1], (b, s, hkv, hd), jnp.float32)
+        v = jax.random.normal(ks[2], (b, s, hkv, hd), jnp.float32)
+        out = flash_attention(q, k, v, causal=causal, window=window)
+        ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    @pytest.mark.parametrize("dtype", ["float32", "bfloat16"])
+    def test_dtypes(self, dtype):
+        dt = jnp.dtype(dtype)
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 128, 2, 64)).astype(dt)
+        k = jax.random.normal(ks[1], (1, 128, 2, 64)).astype(dt)
+        v = jax.random.normal(ks[2], (1, 128, 2, 64)).astype(dt)
+        out = flash_attention(q, k, v, causal=True)
+        ref = flash_attention_ref(q, k, v, causal=True, window=0)
+        assert out.dtype == dt
+        tol = 3e-2 if dtype == "bfloat16" else 2e-5
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32),
+                                   rtol=tol, atol=tol)
+
+    def test_block_shape_invariance(self):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (1, 256, 2, 64))
+        k = jax.random.normal(ks[1], (1, 256, 1, 64))
+        v = jax.random.normal(ks[2], (1, 256, 1, 64))
+        a = flash_attention(q, k, v, causal=True, block_q=64, block_k=128)
+        b = flash_attention(q, k, v, causal=True, block_q=128, block_k=64)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestRGLRU:
+    @pytest.mark.parametrize("b,s,w,bs", [
+        (2, 64, 512, 64), (1, 300, 1024, 128), (3, 17, 512, 256),
+    ])
+    def test_matches_ref(self, b, s, w, bs):
+        ka, kb = jax.random.split(KEY)
+        a = jax.random.uniform(ka, (b, s, w), minval=0.2, maxval=0.999)
+        bb = jax.random.normal(kb, (b, s, w)) * 0.3
+        out = rglru_scan(a, bb, block_s=bs)
+        ref = rglru_scan_ref(a, bb)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_model_xla_path_matches_ref(self):
+        """The associative-scan training path == sequential oracle."""
+        from repro.models.recurrent import rglru_scan as assoc
+        ka, kb = jax.random.split(KEY)
+        a = jax.random.uniform(ka, (2, 37, 256), minval=0.2, maxval=0.999)
+        b = jax.random.normal(kb, (2, 37, 256))
+        np.testing.assert_allclose(np.asarray(assoc(a, b)),
+                                   np.asarray(rglru_scan_ref(a, b)),
+                                   rtol=1e-5, atol=1e-5)
+
+
+class TestRWKV6:
+    @pytest.mark.parametrize("b,s,h,n,bs", [
+        (2, 64, 4, 32, 32), (1, 100, 2, 64, 64), (1, 48, 1, 16, 16),
+    ])
+    def test_matches_ref(self, b, s, h, n, bs):
+        ks = jax.random.split(KEY, 5)
+        r, k, v = (jax.random.normal(ks[i], (b, s, h, n)) * 0.5
+                   for i in range(3))
+        lw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (b, s, h, n))),
+                      -5.0, -1e-5)
+        u = jax.random.normal(ks[4], (h * n,)) * 0.1
+        out = rwkv6_scan(r, k, v, lw, u, block_s=bs)
+        ref = rwkv6_scan_ref(r, k, v, lw, u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_model_chunked_path_matches_ref(self):
+        """The chunked 'decay attention' XLA path == sequential oracle."""
+        from repro.configs import get_config
+        import dataclasses
+        from repro.models.rwkv import rwkv_attention
+        cfg = dataclasses.replace(get_config("rwkv6-7b", reduced=True),
+                                  dtype="float32")
+        ks = jax.random.split(KEY, 5)
+        b, s, h, n = 2, 64, 2, 32
+        r, k, v = (jax.random.normal(ks[i], (b, s, h, n)) * 0.5
+                   for i in range(3))
+        lw = jnp.clip(-jnp.exp(jax.random.normal(ks[3], (b, s, h, n))),
+                      -5.0, -1e-5)
+        u = jax.random.normal(ks[4], (h * n,)) * 0.1
+        out = rwkv_attention(cfg, r, k, v, lw, u)
+        ref = rwkv6_scan_ref(r, k, v, lw, u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestAttentionVariants:
+    """Perf-variant paths (EXPERIMENTS.md §Perf) == baseline numerics."""
+
+    def test_banded_equals_naive(self):
+        import dataclasses
+        from repro.configs import get_config
+        from repro.models import init_params, forward
+        cfg = dataclasses.replace(get_config("gemma3-27b", reduced=True),
+                                  dtype="float32", sliding_window=16)
+        params = init_params(cfg, KEY)
+        batch = {"tokens": jax.random.randint(KEY, (2, 64), 0,
+                                              cfg.vocab_size)}
+        l1, _ = forward(cfg, params, batch)
+        l2, _ = forward(dataclasses.replace(cfg, attn_banded=True),
+                        params, batch)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=1e-4, atol=1e-4)
+
+    def test_bf16_scores_close(self):
+        import dataclasses
+        from repro.configs import get_config
+        from repro.models import init_params, forward
+        cfg = dataclasses.replace(get_config("smollm-360m", reduced=True),
+                                  dtype="float32")
+        params = init_params(cfg, KEY)
+        batch = {"tokens": jax.random.randint(KEY, (2, 64), 0,
+                                              cfg.vocab_size)}
+        l1, _ = forward(cfg, params, batch)
+        l2, _ = forward(dataclasses.replace(cfg, score_dtype="bfloat16"),
+                        params, batch)
+        np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                   rtol=0.1, atol=0.1)
+
+
+class TestGroupedMoE:
+    """Grouped dispatch (perf variant, §Perf HC1) == global-capacity
+    baseline when capacity is not binding."""
+
+    def test_equivalence(self):
+        import dataclasses
+        from repro.configs import get_config
+        from repro.models import init_params, forward
+        cfg = dataclasses.replace(
+            get_config("phi3.5-moe-42b-a6.6b", reduced=True),
+            dtype="float32", capacity_factor=8.0)
+        params = init_params(cfg, KEY)
+        batch = {"tokens": jax.random.randint(KEY, (2, 64), 0,
+                                              cfg.vocab_size)}
+        l1, _ = forward(cfg, params, batch)
+        for g in (16, 32, 100):  # incl. non-dividing group size (padding)
+            l2, _ = forward(dataclasses.replace(cfg, moe_group_size=g),
+                            params, batch)
+            np.testing.assert_allclose(np.asarray(l1), np.asarray(l2),
+                                       rtol=2e-5, atol=2e-5, err_msg=str(g))
+
+    def test_capacity_drops_bounded(self):
+        """With tight capacity, grouped routing drops a bounded fraction
+        and stays finite (over-capacity tokens pass through residual)."""
+        import dataclasses
+        from repro.configs import get_config
+        from repro.models import init_params, forward
+        cfg = dataclasses.replace(
+            get_config("llama4-maverick-400b-a17b", reduced=True),
+            dtype="float32", capacity_factor=1.0, moe_group_size=16)
+        params = init_params(cfg, KEY)
+        batch = {"tokens": jax.random.randint(KEY, (2, 64), 0,
+                                              cfg.vocab_size)}
+        logits, _ = forward(cfg, params, batch)
+        assert bool(jnp.isfinite(logits).all())
+
+
+class TestModelPallasPath:
+    """impl='pallas' through the actual model layers == impl='xla'."""
+
+    def test_attention_layer(self):
+        import dataclasses
+        from repro.configs import get_config
+        from repro.models import init_params, forward
+        cfg = dataclasses.replace(get_config("smollm-360m", reduced=True),
+                                  dtype="float32")
+        params = init_params(cfg, KEY)
+        batch = {"tokens": jax.random.randint(KEY, (2, 64), 0, cfg.vocab_size)}
+        lx, _ = forward(cfg, params, batch, impl="xla")
+        lp, _ = forward(cfg, params, batch, impl="pallas")
+        np.testing.assert_allclose(np.asarray(lx), np.asarray(lp),
+                                   rtol=2e-4, atol=2e-4)
+
+    def test_hybrid_and_ssm_layers(self):
+        import dataclasses
+        from repro.configs import get_config
+        from repro.models import init_params, forward
+        for arch in ("recurrentgemma-2b", "rwkv6-7b"):
+            cfg = dataclasses.replace(get_config(arch, reduced=True),
+                                      dtype="float32")
+            params = init_params(cfg, KEY)
+            batch = {"tokens": jax.random.randint(KEY, (2, 64), 0,
+                                                  cfg.vocab_size)}
+            lx, _ = forward(cfg, params, batch, impl="xla")
+            lp, _ = forward(cfg, params, batch, impl="pallas")
+            np.testing.assert_allclose(np.asarray(lx), np.asarray(lp),
+                                       rtol=5e-4, atol=5e-4, err_msg=arch)

@@ -1,0 +1,94 @@
+"""Paper theory: Lemma 1, Example 1 (homogeneous quadratics), Example 2
+(coarse bound), and the §2.4 non-convex quartic example."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.theory import (coarse_dispersion_bound, lemma1_asymptotic_variance,
+                               lemma1_eta, run_homogeneous_quadratic,
+                               simulate_quadratic)
+
+
+class TestLemma1:
+    @pytest.mark.parametrize("zeta", [0.0, 0.02, 0.1, 0.5, 1.0])
+    def test_matches_simulation(self, zeta):
+        alpha, c, beta2, sigma2, M = 0.05, 1.0, 4.0, 1.0, 16
+        pred = lemma1_asymptotic_variance(alpha, c, beta2, sigma2, M, zeta)
+        sim = simulate_quadratic(alpha, c, beta2, sigma2, M, zeta,
+                                 steps=2500, reps=3000)
+        assert sim == pytest.approx(pred, rel=0.15)
+
+    def test_monotone_in_zeta(self):
+        """More frequent averaging -> smaller asymptotic variance (the
+        paper's headline claim, requires beta2 > 0)."""
+        vs = [lemma1_asymptotic_variance(0.05, 1.0, 4.0, 1.0, 24, z)
+              for z in [0.0, 0.01, 0.1, 0.5, 1.0]]
+        assert all(a >= b - 1e-15 for a, b in zip(vs, vs[1:]))
+
+    def test_no_benefit_when_beta2_zero(self):
+        """Example 2 regime: with a uniform variance bound (beta2=0)
+        averaging frequency has NO effect on the asymptotic variance."""
+        vs = [lemma1_asymptotic_variance(0.05, 1.0, 0.0, 1.0, 24, z)
+              for z in [0.0, 0.1, 1.0]]
+        assert max(vs) == pytest.approx(min(vs), rel=1e-12)
+
+    def test_minibatch_limit(self):
+        """zeta=1 equals the M-times-variance-reduced single worker."""
+        alpha, c, sigma2, M = 0.05, 1.0, 1.0, 8
+        v = lemma1_asymptotic_variance(alpha, c, 4.0, sigma2, M, 1.0)
+        single = alpha * sigma2 / (2 * c - alpha * c**2 - alpha * 4.0 / M)
+        assert v == pytest.approx(single / M, rel=1e-12)
+
+
+class TestExample1:
+    def test_homogeneous_quadratic_schedule_invariance(self):
+        """Same Hessian => one-shot == periodic == minibatch averaging,
+        sample-path-wise (paper Example 1)."""
+        key = jax.random.PRNGKey(0)
+        dim, m = 6, 40
+        A = jax.random.normal(key, (dim, dim)) * 0.2
+        P = A @ A.T + jnp.eye(dim)
+        qs = jax.random.normal(jax.random.PRNGKey(1), (m, dim))
+        w0 = jnp.ones(dim)
+        outs = [run_homogeneous_quadratic(P, qs, w0, 0.02, 200, M=8,
+                                          phase_len=k, seed=3)
+                for k in [0, 1, 10, 200]]
+        for o in outs[1:]:
+            np.testing.assert_allclose(np.asarray(o), np.asarray(outs[0]),
+                                       rtol=1e-5, atol=1e-6)
+
+
+class TestCoarseBound:
+    def test_bound_saturates(self):
+        b_small = coarse_dispersion_bound(0.01, 1.0, 1.0, 1.0, 5)
+        b_large = coarse_dispersion_bound(0.01, 1.0, 1.0, 1.0, 10_000)
+        cap = 0.01 * 1.0 / (2 * 1.0 - 0.01 * 1.0)
+        assert b_small < b_large <= cap + 1e-12
+
+
+class TestQuartic:
+    def test_periodic_beats_oneshot_nonconvex(self):
+        """§2.4: f(w)=(w²-1)², one-shot averages workers from the ±1
+        basins -> large objective; periodic averaging pins them in one
+        basin -> near-zero objective."""
+        key = jax.random.PRNGKey(0)
+        M, steps, alpha = 24, 4000, 0.025
+
+        def run(phase_len):
+            w = jnp.zeros((M,)) + 0.0
+            key_ = key
+            ws = w
+            for t in range(steps):
+                key_, sub = jax.random.split(key_)
+                u = jax.random.normal(sub, (M,))
+                g = 4.0 * (ws ** 3 - ws + u)
+                ws = ws - alpha * g
+                if phase_len and (t + 1) % phase_len == 0:
+                    ws = jnp.full_like(ws, jnp.mean(ws))
+            return float((jnp.mean(ws) ** 2 - 1.0) ** 2)
+
+        one_shot = run(0)
+        periodic = run(100)
+        assert periodic < 0.15
+        assert one_shot > periodic
