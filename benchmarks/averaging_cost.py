@@ -43,6 +43,10 @@ def analyze(hw: HW = HW()):
         base = rows.get((arch, mesh, "none"))
         if base is None:
             continue
+        if r.get("phase_steps", 1) != base.get("phase_steps", 1):
+            # rows from different dry-run generations / --phase-steps:
+            # their collective-bytes deltas are not comparable
+            continue
         d_coll = (r["collective_bytes_per_device"]
                   - base["collective_bytes_per_device"])
         # analytic cost of one model average: all-reduce of the per-chip
@@ -53,8 +57,11 @@ def analyze(hw: HW = HW()):
         # XLA CSEs the phase-end all-reduce into the step's existing
         # FSDP gathers when measured; report max(measured, analytic).
         avg_s = max(d_coll, analytic_bytes) / hw.ici_bw
+        # train rows are whole compiled phases (phase_steps local steps);
+        # normalize to per-step time for the amortization analysis
+        k_phase = max(base.get("phase_steps", 1), 1)
         step_s = max(base["compute_s"], base["memory_s"],
-                     base["collective_s"])
+                     base["collective_s"]) / k_phase
         ks = {}
         for frac in (0.01, 0.05, 0.25):
             ks[f"K_for_{int(frac*100)}pct"] = (

@@ -1,0 +1,91 @@
+"""Phase-engine benchmark: host-driven per-step dispatch vs the compiled
+phase engine, on the reduced convex (least-squares) workload.
+
+The host loop (PhaseEngine.run_host) is the seed runtime: one jit
+dispatch per step, averaging decided on host, blocking float() reads.
+The engine (PhaseEngine.run) compiles each averaging phase — K local
+steps + the fused average — into one donated scan. Both paths run the
+same periodic(K) schedule on identical data, so the ms/step ratio is
+pure dispatch/fusion win.
+
+Sweeps K in {1, 8, 64, 512} x workers in {4, 16}; emits JSON via
+benchmarks/common.py (results/bench_engine.json).
+"""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import emit, save
+from repro.core import AveragingSchedule, PhaseEngine
+from repro.data import convex_dataset
+from repro.optim import SGD
+
+DIM, SAMPLES, STEPS = 64, 1024, 512
+PHASE_LENS = (1, 8, 64, 512)
+WORKER_COUNTS = (4, 16)
+
+
+def make_engine(phase_len: int):
+    def loss_fn(params, batch, rng):
+        return 0.5 * jnp.square(batch["x"] @ params["w"] - batch["y"]), {}
+    sch = AveragingSchedule("periodic", phase_len)
+    return PhaseEngine(loss_fn, SGD(lr=0.01), sch)
+
+
+def make_batches(X, y, workers: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, X.shape[0], size=(STEPS, workers))
+    return [{"x": X[idx[t]], "y": y[idx[t]]} for t in range(STEPS)]
+
+
+def time_run(fn, *, reps: int = 3) -> float:
+    """ms/step, best of ``reps`` after a compile warmup run."""
+    fn()  # warmup: compile
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best / STEPS * 1e3
+
+
+def run():
+    X, y, _ = convex_dataset("ls", SAMPLES, DIM, sparsity=0.2, noise=0.1,
+                             seed=0)
+    X, y = jnp.asarray(X), jnp.asarray(y)
+    w0 = {"w": jnp.zeros(DIM)}
+    results = []
+    for workers in WORKER_COUNTS:
+        batches = make_batches(X, y, workers)
+        for k in PHASE_LENS:
+            engine = make_engine(k)
+            # small-K schedules still scan big blocks: averaging decisions
+            # are per-step and on-device, so one compiled block may span
+            # many averaging periods
+            block = max(k, 64)
+            host_ms = time_run(lambda: engine.run_host(
+                w0, batches, num_workers=workers, seed=0))
+            engine_ms = time_run(lambda: engine.run(
+                w0, batches, num_workers=workers, seed=0,
+                phase_len=block))
+            row = {"workers": workers, "phase_len": k, "steps": STEPS,
+                   "host_ms_per_step": host_ms,
+                   "engine_ms_per_step": engine_ms,
+                   "speedup": host_ms / engine_ms}
+            results.append(row)
+            emit(f"engine_K{k}_M{workers}", engine_ms * 1e3,
+                 f"host_ms/step={host_ms:.3f};engine_ms/step={engine_ms:.3f};"
+                 f"speedup={row['speedup']:.1f}x")
+    save("bench_engine", {"workload": {"dim": DIM, "samples": SAMPLES,
+                                       "steps": STEPS, "kind": "ls"},
+                          "rows": results})
+    worst = min(r["speedup"] for r in results if r["phase_len"] >= 64)
+    print(f"min speedup at K>=64: {worst:.1f}x")
+    return results
+
+
+if __name__ == "__main__":
+    run()

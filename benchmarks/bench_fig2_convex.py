@@ -1,7 +1,12 @@
 """Paper Figure 2: normalized suboptimality vs iteration for one-shot /
 periodic(128) / periodic(1024->scaled) / minibatch averaging + single
 worker, on the convex suite; derived speedup@0.1 of periodic vs one-shot
-(the paper's speedup column)."""
+(the paper's speedup column).
+
+All schedules run through the PhaseEngine (one compiled dispatch per
+averaging phase) with shared per-step sample draws for a fair, paired
+comparison, as the paper shuffles identically.
+"""
 from __future__ import annotations
 
 import jax
@@ -10,68 +15,62 @@ import numpy as np
 
 from benchmarks.common import emit, save, timeit
 from repro.configs.paper import CONVEX_SUITE
+from repro.core import AveragingSchedule, PhaseEngine
 from repro.data import convex_dataset
 from repro.models.convex import lr_objective, ls_objective, solve_optimum
+from repro.optim import SGD
+
+
+def _schedule(phase_len: int) -> AveragingSchedule:
+    if phase_len == 0:
+        return AveragingSchedule("oneshot")
+    if phase_len == 1:
+        return AveragingSchedule("minibatch")
+    return AveragingSchedule("periodic", phase_len)
 
 
 def sgd_curves(kind, X, y, *, workers, steps, phase_lens, lr0, lr_d,
                seed=0, record_every=20):
-    """Vectorized multi-schedule parallel SGD (shared sample draws for a
-    fair, paired comparison, as the paper shuffles identically)."""
+    """Engine-driven multi-schedule parallel SGD (shared sample draws for
+    a fair, paired comparison, as the paper shuffles identically)."""
     n, d = X.shape
     obj = {"ls": ls_objective, "lr": lr_objective}[kind]
     obj_j = jax.jit(lambda w: obj(w, X, y))
 
     rng = np.random.default_rng(seed)
     idx = rng.integers(0, n, size=(steps, workers))
-    curves = {}
     w0 = jnp.zeros(d)
     f0 = float(obj_j(w0))
     fstar = float(obj_j(solve_optimum(kind, X, y)))
 
-    @jax.jit
-    def steps_block(w, ixs, ts):
-        """Run a block of steps without averaging. w: (M,d)."""
-        def body(w, inp):
-            ix, t = inp
-            xi, yi = X[ix], y[ix]
-            if kind == "ls":
-                g = xi * (jnp.einsum("md,md->m", xi, w) - yi)[:, None]
-            else:
-                z = yi * jnp.einsum("md,md->m", xi, w)
-                g = (-yi * jax.nn.sigmoid(-z))[:, None] * xi
-            lr = lr0 / (t + lr_d)
-            return w - lr * g, None
-        w, _ = jax.lax.scan(body, w, (ixs, ts))
-        return w
+    def loss_fn(params, batch, rng_):
+        w, x, yv = params["w"], batch["x"], batch["y"]
+        if kind == "ls":
+            return 0.5 * jnp.square(x @ w - yv), {}
+        return jax.nn.softplus(-yv * (x @ w)), {}
 
+    # the paper's lr schedule counts steps from 0; engine steps are
+    # 1-indexed, hence the -1
+    opt = SGD(lr=lambda t: lr0 / (t - 1.0 + lr_d))
+
+    def batches(m):
+        for t in range(steps):
+            yield {"x": X[idx[t, :m]], "y": y[idx[t, :m]]}
+
+    def curve(schedule, m):
+        engine = PhaseEngine(loss_fn, opt, schedule)
+        _, hist = engine.run({"w": w0}, batches(m), num_workers=m,
+                             seed=seed, record_every=record_every,
+                             eval_fn=lambda p: float(obj_j(p["w"])))
+        return hist["eval"]
+
+    curves = {}
     for k in phase_lens:
         name = {0: "oneshot", 1: "minibatch"}.get(k, f"periodic_{k}")
-        w = jnp.zeros((workers, d))
-        rec = []
-        blk = max(k, record_every) if k else record_every
-        t = 0
-        while t < steps:
-            take = min(blk, steps - t)
-            w = steps_block(w, jnp.asarray(idx[t:t + take]),
-                            jnp.arange(t, t + take, dtype=jnp.float32))
-            t += take
-            if k and (t % k == 0 or take < blk):
-                w = jnp.broadcast_to(w.mean(0), w.shape)
-            rec.append((t, float(obj_j(w.mean(0)))))
-        curves[name] = rec
+        curves[name] = curve(_schedule(k), workers)
 
-    # single worker curve (worker 0, no averaging)
-    w = jnp.zeros((1, d))
-    rec = []
-    t = 0
-    while t < steps:
-        take = min(record_every, steps - t)
-        w = steps_block(w, jnp.asarray(idx[t:t + take, :1]),
-                        jnp.arange(t, t + take, dtype=jnp.float32))
-        t += take
-        rec.append((t, float(obj_j(w[0]))))
-    curves["single"] = rec
+    # single worker curve (worker 0's draws, no averaging)
+    curves["single"] = curve(AveragingSchedule("oneshot"), 1)
 
     # normalize so f(w0)=1, f*=0
     span = max(f0 - fstar, 1e-12)

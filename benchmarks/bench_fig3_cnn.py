@@ -1,7 +1,10 @@
 """Paper Figure 3: CNN (LeNet5-like) on MNIST-like data — one-shot vs
 periodic (phase 10) vs best/worst single worker; momentum SGD lr .01,
 mu .9, x0.95/epoch, 4 workers, batch 8 (the paper's exact recipe, with
-a reduced step budget for the CPU container)."""
+a reduced step budget for the CPU container). Both schedules run through
+the PhaseEngine — one compiled dispatch per averaging phase, per-worker
+metrics fetched only at record boundaries.
+"""
 from __future__ import annotations
 
 import jax
@@ -10,9 +13,10 @@ import numpy as np
 
 from benchmarks.common import emit, save, timeit
 from repro.configs.paper import CNNConfig
+from repro.core import AveragingSchedule, PhaseEngine
 from repro.data import mnist_like
 from repro.data.pipeline import WorkerSharder
-from repro.models.cnn import cnn_error, cnn_forward, cnn_loss, init_cnn
+from repro.models.cnn import cnn_error, cnn_loss, init_cnn
 from repro.optim import Momentum, schedules
 
 
@@ -26,17 +30,14 @@ def run_cnn(cfg: CNNConfig, steps: int, *, seed=0, record_every=25,
     params0 = init_cnn(cfg, jax.random.PRNGKey(seed))
     sharder = WorkerSharder(len(images), M, seed=seed, mode="permute")
     steps_per_epoch = len(images) // (M * cfg.batch_size)
-    opt = Momentum(lr=schedules.exponential_epoch(
-        cfg.lr, cfg.lr_decay_per_epoch, steps_per_epoch), mu=cfg.momentum)
+    # the paper's epoch decay counts steps from 0; engine steps are
+    # 1-indexed, hence the -1
+    epoch_lr = schedules.exponential_epoch(cfg.lr, cfg.lr_decay_per_epoch,
+                                           steps_per_epoch)
+    opt = Momentum(lr=lambda step: epoch_lr(step - 1), mu=cfg.momentum)
 
-    @jax.jit
-    def wstep(wp, wos, imgs, labs, t):
-        def upd(p, s, im, lb):
-            loss, g = jax.value_and_grad(
-                lambda pp: cnn_loss(cfg, pp, {"images": im, "labels": lb}))(p)
-            p2, s2 = opt.apply(p, g, s, t)
-            return p2, s2, loss
-        return jax.vmap(upd)(wp, wos, imgs, labs)
+    def loss_fn(p, batch, rng):
+        return cnn_loss(cfg, p, batch), {}
 
     @jax.jit
     def full_metrics(p):
@@ -46,29 +47,38 @@ def run_cnn(cfg: CNNConfig, steps: int, *, seed=0, record_every=25,
                                 "labels": jnp.asarray(test_labels)})
         return tr, te
 
-    def run_schedule(phase_len):
-        wp = jax.tree.map(lambda x: jnp.stack([x] * M), params0)
-        wos = jax.vmap(opt.init)(wp)
-        rec = {"avg": [], "best": [], "worst": []}
-        for t in range(steps):
+    def batches():
+        for _ in range(steps):
             idx = sharder.next_indices(cfg.batch_size)
-            imgs = jnp.asarray(images[idx])
-            labs = jnp.asarray(labels[idx])
-            wp, wos, losses = wstep(wp, wos, imgs, labs,
-                                    jnp.asarray(t, jnp.float32))
-            if phase_len and (t + 1) % phase_len == 0:
-                wp = jax.tree.map(
-                    lambda x: jnp.broadcast_to(x.mean(0), x.shape), wp)
-            if (t + 1) % record_every == 0:
-                avg = jax.tree.map(lambda x: x.mean(0), wp)
-                tr, te = full_metrics(avg)
-                rec["avg"].append((t + 1, float(tr), float(te)))
-                per = [full_metrics(jax.tree.map(lambda x: x[i], wp))
-                       for i in range(M)]
-                trs = [float(a) for a, _ in per]
-                rec["best"].append((t + 1, min(trs)))
-                rec["worst"].append((t + 1, max(trs)))
-        return rec
+            yield {"images": jnp.asarray(images[idx]),
+                   "labels": jnp.asarray(labels[idx])}
+
+    def eval_consensus(p):
+        tr, te = full_metrics(p)
+        return float(tr), float(te)
+
+    def eval_workers(wp):
+        trs = [float(full_metrics(jax.tree.map(lambda x: x[i], wp))[0])
+               for i in range(M)]
+        return min(trs), max(trs)
+
+    def run_schedule(phase_len):
+        sch = (AveragingSchedule("periodic", phase_len) if phase_len
+               else AveragingSchedule("oneshot"))
+        # phase blocks = record period: averaging decisions are per-step
+        # and on-device, so one block can span several averaging phases —
+        # and every dispatch then compiles a single (K=25) scan shape.
+        # scan_unroll=True: conv-heavy body on the CPU container (XLA:CPU
+        # under-threads rolled while-loop bodies)
+        engine = PhaseEngine(loss_fn, opt, sch, scan_unroll=True)
+        _, hist = engine.run(params0, batches(), num_workers=M, seed=seed,
+                             record_every=record_every,
+                             eval_fn=eval_consensus,
+                             worker_eval_fn=eval_workers,
+                             phase_len=record_every)
+        return {"avg": [(t, tr, te) for t, (tr, te) in hist["eval"]],
+                "best": [(t, lo) for t, (lo, _) in hist["worker_eval"]],
+                "worst": [(t, hi) for t, (_, hi) in hist["worker_eval"]]}
 
     return {"periodic": run_schedule(cfg.phase_len),
             "oneshot": run_schedule(0)}

@@ -1,6 +1,7 @@
 """Quickstart: periodic model averaging (the paper's technique) on a small
 transformer LM, via the public API — compares one-shot / periodic /
-minibatch schedules on identical data.
+minibatch schedules on identical data, each run as compiled averaging
+phases (one dispatch per phase) by the PhaseEngine.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.core import AveragingSchedule, LocalSGD
+from repro.core import AveragingSchedule, PhaseEngine
 from repro.data import token_stream
 from repro.models import init_params, lm_loss
 from repro.optim import Momentum
@@ -42,9 +43,10 @@ def main():
         "periodic_10": AveragingSchedule("periodic", 10),
         "minibatch": AveragingSchedule("minibatch"),
     }.items():
-        algo = LocalSGD(loss_fn, Momentum(lr=0.05, mu=0.9), sch)
-        final, hist = algo.run(params, batch_iter(cfg, 7),
-                               num_workers=WORKERS, seed=0, record_every=10)
+        engine = PhaseEngine(loss_fn, Momentum(lr=0.05, mu=0.9), sch)
+        final, hist = engine.run(params, batch_iter(cfg, 7),
+                                 num_workers=WORKERS, seed=0,
+                                 record_every=10)
         # evaluate the consensus model on a held-out batch
         ev = next(batch_iter(cfg, 99))
         loss, _ = lm_loss(cfg, final, {"tokens": ev["tokens"][0]})

@@ -11,11 +11,10 @@ import os
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.checkpoint import load_checkpoint, save_checkpoint
 from repro.configs.paper import CNNConfig
-from repro.core import AveragingSchedule, LocalSGD, consensus
+from repro.core import AveragingSchedule, PhaseEngine
 from repro.data import mnist_like
 from repro.data.pipeline import WorkerSharder
 from repro.models.cnn import cnn_error, cnn_loss, init_cnn
@@ -42,8 +41,8 @@ def main():
     def loss_fn(p, batch, rng):
         return cnn_loss(cfg, p, batch), {}
 
-    algo = LocalSGD(loss_fn, opt,
-                    AveragingSchedule("periodic", cfg.phase_len))
+    engine = PhaseEngine(loss_fn, opt,
+                         AveragingSchedule("periodic", cfg.phase_len))
 
     def batches():
         for _ in range(args.steps):
@@ -55,9 +54,9 @@ def main():
         cfg, p, {"images": jnp.asarray(test_images),
                  "labels": jnp.asarray(test_labels)}))
 
-    final, hist = algo.run(params, batches(), num_workers=M, seed=0,
-                           record_every=25,
-                           eval_fn=lambda p: float(test_err(p)))
+    final, hist = engine.run(params, batches(), num_workers=M, seed=0,
+                             record_every=25,
+                             eval_fn=lambda p: float(test_err(p)))
     print(f"trained {args.steps} steps, {hist['averages']} averages")
     for (s, l), (_, e) in zip(hist["loss"], hist["eval"]):
         print(f"  step {s:4d}: train loss {l:.4f}  test err {e:.3f}")

@@ -34,6 +34,29 @@ class AveragingSchedule:
     outer_phase_len: int = 512  # hierarchical: average everyone every K_o
     inner_groups: int = 1       # hierarchical: number of inner groups
 
+    _KINDS = ("oneshot", "minibatch", "periodic", "stochastic",
+              "hierarchical")
+
+    def __post_init__(self):
+        # the engine lowers decisions to traced integer mod / bernoulli
+        # ops, where invalid parameters mis-schedule silently instead of
+        # raising like the old host loop did — validate eagerly instead
+        if self.kind not in self._KINDS:
+            raise ValueError(f"unknown schedule kind {self.kind!r}")
+        if self.kind == "periodic" and self.phase_len < 1:
+            raise ValueError(f"periodic needs phase_len >= 1, "
+                             f"got {self.phase_len}")
+        if self.kind == "stochastic" and not 0.0 < self.zeta <= 1.0:
+            raise ValueError(f"stochastic needs 0 < zeta <= 1, "
+                             f"got {self.zeta}")
+        if self.kind == "hierarchical" and (
+                self.inner_phase_len < 1 or self.outer_phase_len < 1
+                or self.inner_groups < 1):
+            raise ValueError(
+                "hierarchical needs inner_phase_len/outer_phase_len/"
+                f"inner_groups >= 1, got ({self.inner_phase_len}, "
+                f"{self.outer_phase_len}, {self.inner_groups})")
+
     def expected_phase_len(self) -> float:
         if self.kind == "oneshot":
             return float("inf")
@@ -47,9 +70,39 @@ class AveragingSchedule:
             return float(self.inner_phase_len)
         raise ValueError(self.kind)
 
+    def decision_code(self, step, key=None):
+        """On-device decision for step ``step`` (1-indexed steps done).
+        Returns an int32 code — 0: none, 1: inner, 2: all — computable
+        under a jit trace, so the whole schedule lowers to ``lax.switch``
+        inside the phase engine's scan. ``step`` may be a traced scalar.
+
+        Stochastic draws come from ``fold_in(key, step)``, which makes the
+        schedule a pure function of (key, step): reproducible, resumable
+        from a checkpointed key, and identical whether evaluated on-device
+        (engine) or eagerly on host (legacy loop).
+        """
+        if self.kind == "oneshot":
+            return jnp.zeros((), jnp.int32)
+        if self.kind == "minibatch":
+            return jnp.full((), 2, jnp.int32)
+        if self.kind == "periodic":
+            return jnp.where(step % self.phase_len == 0, 2, 0).astype(jnp.int32)
+        if self.kind == "stochastic":
+            assert key is not None, "stochastic schedule needs a PRNG key"
+            hit = jax.random.bernoulli(jax.random.fold_in(key, step),
+                                       self.zeta)
+            return jnp.where(hit, 2, 0).astype(jnp.int32)
+        if self.kind == "hierarchical":
+            outer = step % self.outer_phase_len == 0
+            inner = step % self.inner_phase_len == 0
+            return jnp.where(outer, 2,
+                             jnp.where(inner, 1, 0)).astype(jnp.int32)
+        raise ValueError(self.kind)
+
     def wants_average(self, step: int, rng: np.random.Generator | None = None):
-        """Host-side decision for step ``step`` (1-indexed steps done).
-        Returns "none" | "inner" | "all"."""
+        """Legacy host-side decision for step ``step`` (1-indexed steps
+        done). Returns "none" | "inner" | "all". Stochastic draws use the
+        numpy generator; the engine path uses ``decision_code`` instead."""
         if self.kind == "oneshot":
             return "none"
         if self.kind == "minibatch":
@@ -120,15 +173,18 @@ class OuterOptimizer:
 
     def apply(self, prev_avg, new_avg, velocity):
         """prev_avg/new_avg: trees WITHOUT worker axis. Returns
-        (updated average, velocity)."""
-        def upd(p, n, v):
-            delta = p.astype(jnp.float32) - n.astype(jnp.float32)  # outer grad
-            v2 = self.momentum * v + delta
-            step = self.momentum * v2 + delta if self.nesterov else v2
-            return (p.astype(jnp.float32) - self.lr * step).astype(p.dtype), v2
-        flat = jax.tree.map(upd, prev_avg, new_avg, velocity)
-        outer = jax.tree.map(lambda t: t[0], flat,
-                             is_leaf=lambda t: isinstance(t, tuple))
-        vel = jax.tree.map(lambda t: t[1], flat,
-                           is_leaf=lambda t: isinstance(t, tuple))
-        return outer, vel
+        (updated average, velocity). Two plain tree.map passes — params
+        may be arbitrarily nested pytrees (incl. tuples), so no is_leaf
+        tricks on the mapped output."""
+        def outer_grad(p, n):
+            return p.astype(jnp.float32) - n.astype(jnp.float32)
+
+        velocity = jax.tree.map(
+            lambda p, n, v: self.momentum * v + outer_grad(p, n),
+            prev_avg, new_avg, velocity)
+        updated = jax.tree.map(
+            lambda p, n, v: (p.astype(jnp.float32) - self.lr * (
+                self.momentum * v + outer_grad(p, n) if self.nesterov else v
+            )).astype(p.dtype),
+            prev_avg, new_avg, velocity)
+        return updated, velocity

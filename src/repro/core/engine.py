@@ -1,0 +1,319 @@
+"""Compiled phase engine: K local steps + averaging as ONE jitted program.
+
+The paper's algorithm is phase-structured — M workers each take K
+independent SGD steps (Eq. 3), then their models are averaged — yet a
+naive runtime dispatches one jitted call per step, decides averaging on
+the host, and blocks on ``float()`` metric reads. This module compiles
+the whole phase instead:
+
+    run_phase(state, batches)          # ONE dispatch per phase
+      └─ jax.lax.scan over K steps     # batches prefetched as a stacked
+           └─ vmap over M workers      #   (K, M, ...) device block
+           └─ schedule.decision_code   # on-device: lax.switch applies
+                none / inner / all averaging (+ outer optimizer)
+      └─ loss + dispersion traces accumulated on-device, fetched once
+
+All engine state (worker params, optimizer state, outer-optimizer state,
+PRNG keys, step counter) lives in an :class:`EngineState` pytree that is
+buffer-donated to ``run_phase``, so a phase updates parameters in place.
+Averaging decisions — including the stochastic schedule's Bernoulli
+draws — are pure functions of a single PRNG key and the step counter
+(``fold_in(key, step)``), so runs are bitwise reproducible and resumable
+from a checkpointed ``EngineState``.
+
+Schedules lower to on-device control flow as follows:
+
+  - oneshot     : statically no averaging branch at all
+  - minibatch   : the all-average is unconditionally fused into each step
+  - periodic(K) : ``step % K == 0`` predicate under ``lax.switch``
+  - stochastic  : ``bernoulli(fold_in(key, step), ζ)`` under ``lax.switch``
+  - hierarchical: two modulo predicates select none / inner / all
+
+:meth:`PhaseEngine.run` is the production driver (one compiled dispatch
+per phase); :meth:`PhaseEngine.run_host` keeps the legacy per-step
+host-driven loop — same numerics, same decision stream — as the baseline
+for `benchmarks/bench_engine.py` and the equivalence tests.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import cached_property, partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.averaging import (AveragingSchedule, OuterOptimizer,
+                                  average_inner, worker_dispersion)
+
+
+# --------------------------------------------------------------------------
+# Worker-axis utilities (leading axis = worker index on every leaf)
+# --------------------------------------------------------------------------
+
+def replicate(tree, num_workers: int):
+    """Give every leaf a leading worker axis (all workers start at w_0,
+    as the paper prescribes)."""
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (num_workers,) + x.shape), tree)
+
+
+def unreplicate(tree):
+    return jax.tree.map(lambda x: x[0], tree)
+
+
+def consensus(tree):
+    """The paper's final estimate: the average of the workers."""
+    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+
+
+def tree_stack(trees):
+    """Stack a list of per-step batches into one (K, ...) device block."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def make_worker_step(loss_fn: Callable, optimizer) -> Callable:
+    """The ONE vmapped local-SGD step (paper Eq. 3) every runtime path
+    shares: LocalSGD, the phase engine's scan body, and the launch/dryrun
+    train steps.
+
+    loss_fn(params, batch, rng) -> (loss, aux); optimizer is an
+    init/apply pair from repro.optim. Returns
+    step_fn(worker_params, opt_state, batch, step, rngs=None)
+    -> (worker_params, opt_state, per-worker losses, aux).
+    """
+    def one(params, ostate, batch, rng, step):
+        (loss, aux), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, rng)
+        params, ostate = optimizer.apply(params, grads, ostate, step)
+        return params, ostate, loss, aux
+
+    def step_fn(worker_params, opt_state, batch, step, rngs=None):
+        if rngs is None:  # rng-free losses (launch/dryrun abstract paths)
+            return jax.vmap(lambda p, s, b: one(p, s, b, None, step))(
+                worker_params, opt_state, batch)
+        return jax.vmap(lambda p, s, b, r: one(p, s, b, r, step))(
+            worker_params, opt_state, batch, rngs)
+
+    return step_fn
+
+
+class EngineState(NamedTuple):
+    """Everything a phase consumes and produces; donated to run_phase."""
+    worker_params: Any   # leaves (M, ...)
+    opt_state: Any       # leaves (M, ...)
+    outer_state: Any     # (prev_avg, velocity) trees, or () without outer
+    key: Any             # data-rng key, split once per step
+    dec_key: Any         # schedule-decision root key (constant)
+    step: Any            # int32 scalar, steps completed
+
+
+@dataclass(frozen=True, eq=False)  # eq=False: hash by identity for jit
+class PhaseEngine:
+    """loss_fn(params, batch, rng) -> (loss, aux); optimizer from
+    repro.optim (init/apply pair).
+
+    ``scan_unroll`` is forwarded to ``lax.scan``: XLA:CPU runs while-loop
+    bodies with reduced intra-op threading, so compute-heavy losses (e.g.
+    convolutions) on CPU backends benefit from ``scan_unroll=True`` (full
+    unroll: longer compiles, per-step speed of eager dispatch). On real
+    accelerator meshes leave the default rolled scan."""
+    loss_fn: Callable
+    optimizer: Any
+    schedule: AveragingSchedule
+    outer: OuterOptimizer | None = None
+    scan_unroll: int | bool = 1
+
+    @cached_property
+    def worker_step(self):
+        return make_worker_step(self.loss_fn, self.optimizer)
+
+    # ---- state -----------------------------------------------------------
+    def init(self, params, num_workers: int, seed: int = 0) -> EngineState:
+        wp = replicate(params, num_workers)
+        opt_state = jax.vmap(self.optimizer.init)(wp)
+        outer_state = ()
+        if self.outer is not None:
+            avg = consensus(wp)
+            outer_state = (avg, self.outer.init(avg))
+        key, dec_key = jax.random.split(jax.random.PRNGKey(seed))
+        return EngineState(wp, opt_state, outer_state, key, dec_key,
+                           jnp.zeros((), jnp.int32))
+
+    # ---- the compiled phase ---------------------------------------------
+    def _apply_all_average(self, wp, outer_state, num_workers):
+        avg = consensus(wp)
+        if self.outer is not None:
+            prev_avg, vel = outer_state
+            avg, vel = self.outer.apply(prev_avg, avg, vel)
+            outer_state = (avg, vel)
+        return replicate(avg, num_workers), outer_state
+
+    @partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def run_phase(self, state: EngineState, batches):
+        """One compiled dispatch: scan K steps over a stacked (K, M, ...)
+        batch block, averaging fused per the schedule. Returns the new
+        state and per-step traces {loss, dispersion, avg_code} — the only
+        host transfer a phase needs."""
+        num_workers = jax.tree.leaves(state.worker_params)[0].shape[0]
+        sched = self.schedule
+
+        def body(carry, batch):
+            wp, opt_state, outer_state, key, step = carry
+            step = step + 1
+            key, sub = jax.random.split(key)
+            rngs = jax.random.split(sub, num_workers)
+            wp, opt_state, losses, _ = self.worker_step(
+                wp, opt_state, batch, step, rngs)
+            code = sched.decision_code(step, state.dec_key)
+            if sched.kind == "oneshot":
+                disp = jnp.zeros((), jnp.float32)
+            elif sched.kind == "minibatch":
+                disp = worker_dispersion(wp).astype(jnp.float32)
+                wp, outer_state = self._apply_all_average(
+                    wp, outer_state, num_workers)
+            else:
+                def none_branch(args):
+                    wp, ost = args
+                    return wp, ost, jnp.zeros((), jnp.float32)
+
+                def inner_branch(args):
+                    wp, ost = args
+                    disp = worker_dispersion(wp).astype(jnp.float32)
+                    return (average_inner(wp, max(sched.inner_groups, 1)),
+                            ost, disp)
+
+                def all_branch(args):
+                    wp, ost = args
+                    disp = worker_dispersion(wp).astype(jnp.float32)
+                    wp, ost = self._apply_all_average(wp, ost, num_workers)
+                    return wp, ost, disp
+
+                wp, outer_state, disp = jax.lax.switch(
+                    code, [none_branch, inner_branch, all_branch],
+                    (wp, outer_state))
+            return ((wp, opt_state, outer_state, key, step),
+                    (jnp.mean(losses), disp, code))
+
+        carry0 = (state.worker_params, state.opt_state, state.outer_state,
+                  state.key, state.step)
+        (wp, opt_state, outer_state, key, step), (loss, disp, code) = \
+            jax.lax.scan(body, carry0, batches, unroll=self.scan_unroll)
+        new_state = EngineState(wp, opt_state, outer_state, key,
+                                state.dec_key, step)
+        return new_state, {"loss": loss, "dispersion": disp,
+                           "avg_code": code}
+
+    def default_phase_len(self) -> int:
+        """Compile-size heuristic: align phase blocks with the schedule's
+        natural period (correctness never depends on the block size —
+        decisions are per-step, on-device)."""
+        s = self.schedule
+        if s.kind == "periodic":
+            return max(1, min(s.phase_len, 512))
+        if s.kind == "hierarchical":
+            return max(1, min(s.inner_phase_len, 512))
+        if s.kind == "stochastic":
+            return int(min(max(1.0 / max(s.zeta, 1e-12), 8), 128))
+        return 64  # oneshot / minibatch: any block size
+
+    # ---- drivers ---------------------------------------------------------
+    def run(self, params, batches, *, num_workers: int, seed: int = 0,
+            record_every: int = 0, eval_fn=None, worker_eval_fn=None,
+            phase_len: int | None = None):
+        """Production driver: one run_phase dispatch per block of steps.
+
+        batches: iterable of per-step worker batches (leading axis M).
+        eval_fn(consensus_params) / worker_eval_fn(worker_params) run on
+        host every ``record_every`` steps (phase blocks are cut so record
+        boundaries coincide with phase ends). Returns (final averaged
+        params, history dict).
+        """
+        state = self.init(params, num_workers, seed)
+        block = phase_len or self.default_phase_len()
+        needs_eval = record_every and (eval_fn or worker_eval_fn)
+        hist = {"loss": [], "dispersion": [], "averages": 0, "eval": [],
+                "worker_eval": []}
+        it = iter(batches)
+        t, done = 0, False
+        while not done:
+            take = block
+            if needs_eval:
+                take = min(take, record_every - t % record_every)
+            chunk = []
+            while len(chunk) < take:
+                try:
+                    chunk.append(next(it))
+                except StopIteration:
+                    done = True
+                    break
+            if not chunk:
+                break
+            state, trace = self.run_phase(state, tree_stack(chunk))
+            trace = jax.device_get(trace)
+            for i in range(len(chunk)):
+                t += 1
+                if trace["avg_code"][i]:
+                    hist["dispersion"].append(
+                        (t, float(trace["dispersion"][i])))
+                    hist["averages"] += 1
+                if record_every and t % record_every == 0:
+                    hist["loss"].append((t, float(trace["loss"][i])))
+            if needs_eval and t % record_every == 0:
+                if eval_fn is not None:
+                    hist["eval"].append(
+                        (t, eval_fn(consensus(state.worker_params))))
+                if worker_eval_fn is not None:
+                    hist["worker_eval"].append(
+                        (t, worker_eval_fn(state.worker_params)))
+        return consensus(state.worker_params), hist
+
+    # ---- legacy host-driven loop (benchmark baseline / equivalence) ------
+    @partial(jax.jit, static_argnums=0)
+    def _host_step(self, wp, opt_state, batch, step, rngs):
+        wp, opt_state, losses, _ = self.worker_step(wp, opt_state, batch,
+                                                    step, rngs)
+        return wp, opt_state, jnp.mean(losses)
+
+    @partial(jax.jit, static_argnums=(0, 3))
+    def _host_average(self, wp, outer_state, scope: str):
+        num_workers = jax.tree.leaves(wp)[0].shape[0]
+        disp = worker_dispersion(wp).astype(jnp.float32)
+        if scope == "inner":
+            return (average_inner(wp, max(self.schedule.inner_groups, 1)),
+                    outer_state, disp)
+        wp, outer_state = self._apply_all_average(wp, outer_state,
+                                                  num_workers)
+        return wp, outer_state, disp
+
+    def run_host(self, params, batches, *, num_workers: int, seed: int = 0,
+                 record_every: int = 0, eval_fn=None):
+        """Per-step host-driven loop: one jit dispatch per step, the
+        averaging decision read on host, blocking ``float()`` metric
+        reads. Numerically identical to :meth:`run` (same per-step rng
+        splits, same fold_in decision stream) — kept as the dispatch-bound
+        baseline the engine is benchmarked against."""
+        state = self.init(params, num_workers, seed)
+        wp, opt_state, outer_state = (state.worker_params, state.opt_state,
+                                      state.outer_state)
+        key = state.key
+        hist = {"loss": [], "dispersion": [], "averages": 0, "eval": [],
+                "worker_eval": []}
+        step = 0
+        for batch in batches:
+            step += 1
+            key, sub = jax.random.split(key)
+            rngs = jax.random.split(sub, num_workers)
+            wp, opt_state, loss = self._host_step(
+                wp, opt_state, batch, jnp.asarray(step, jnp.int32), rngs)
+            code = int(self.schedule.decision_code(step, state.dec_key))
+            if code:
+                wp, outer_state, disp = self._host_average(
+                    wp, outer_state, "inner" if code == 1 else "all")
+                hist["dispersion"].append((step, float(disp)))
+                hist["averages"] += 1
+            if record_every and step % record_every == 0:
+                hist["loss"].append((step, float(loss)))
+                if eval_fn is not None:
+                    hist["eval"].append((step, eval_fn(consensus(wp))))
+        return consensus(wp), hist

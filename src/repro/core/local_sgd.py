@@ -4,46 +4,37 @@ This is the paper's algorithm (Eq. 3 + phase-end averaging) as a
 production training strategy:
 
     worker_params = replicate(params, M)        # leading worker axis
-    for step in 1..T:
-        worker_params, opt_state = local_step(...)   # vmap over workers,
-                                                     # NO cross-worker comm
-        if schedule.wants_average(step):
-            worker_params = average(...)             # one all-reduce
+    for phase in phases:                        # ONE compiled dispatch
+        worker_params, traces = run_phase(...)  #   K steps × M workers,
+                                                #   averaging fused in
 
-On a mesh, the worker axis is sharded over ("data",) or ("pod","data"),
-so ``local_step`` contains zero cross-worker collectives and ``average``
-is exactly one parameter all-reduce — the statistical/hardware-efficiency
-trade-off of the paper becomes explicit, inspectable communication.
+Execution is delegated to :class:`repro.core.engine.PhaseEngine`: the
+whole phase — ``lax.scan`` over K vmapped local steps, the on-device
+averaging decision (``AveragingSchedule.decision_code``), the model
+average itself, and the loss/dispersion traces — is one jitted,
+buffer-donated program. On a mesh the worker axis is sharded over
+("data",) or ("pod","data"), so a local step contains zero cross-worker
+collectives and each averaging event is exactly one parameter all-reduce
+— the statistical/hardware-efficiency trade-off of the paper becomes
+explicit, inspectable communication.
+
+:class:`LocalSGD` is kept as the stable public API: ``run`` is a thin
+wrapper over ``PhaseEngine.run``, and ``local_step`` / ``average`` expose
+the engine's building blocks for callers that drive steps themselves.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
+from functools import cached_property, partial
 from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core.averaging import (AveragingSchedule, OuterOptimizer,
-                                  average_all, average_inner,
-                                  worker_dispersion)
-
-
-def replicate(tree, num_workers: int):
-    """Give every leaf a leading worker axis (all workers start at w_0,
-    as the paper prescribes)."""
-    return jax.tree.map(
-        lambda x: jnp.broadcast_to(x[None], (num_workers,) + x.shape), tree)
-
-
-def unreplicate(tree):
-    return jax.tree.map(lambda x: x[0], tree)
-
-
-def consensus(tree):
-    """The paper's final estimate: the average of the workers."""
-    return jax.tree.map(lambda x: jnp.mean(x, axis=0), tree)
+                                  average_inner, worker_dispersion)
+from repro.core.engine import (PhaseEngine, consensus,  # noqa: F401
+                               replicate, unreplicate)
 
 
 @dataclass(frozen=True, eq=False)  # eq=False: hash by identity for jit
@@ -55,28 +46,24 @@ class LocalSGD:
     schedule: AveragingSchedule
     outer: OuterOptimizer | None = None
 
+    @cached_property
+    def engine(self) -> PhaseEngine:
+        return PhaseEngine(self.loss_fn, self.optimizer, self.schedule,
+                           outer=self.outer)
+
     # ---- jitted pieces ---------------------------------------------------
     def init(self, params, num_workers: int):
-        wp = replicate(params, num_workers)
-        opt_state = jax.vmap(self.optimizer.init)(wp)
-        outer_state = None
-        if self.outer is not None:
-            avg = consensus(wp)
-            outer_state = (avg, self.outer.init(avg))
-        return wp, opt_state, outer_state
+        state = self.engine.init(params, num_workers)
+        outer_state = state.outer_state if self.outer is not None else None
+        return state.worker_params, state.opt_state, outer_state
 
     @partial(jax.jit, static_argnums=0)
     def local_step(self, worker_params, opt_state, batch, step, rngs):
         """One independent SGD step in every worker (paper Eq. 3).
         batch: leaves with leading worker axis. rngs: (M, 2) PRNG keys."""
-        def one(params, ostate, b, rng):
-            (loss, metrics), grads = jax.value_and_grad(
-                self.loss_fn, has_aux=True)(params, b, rng)
-            params, ostate = self.optimizer.apply(params, grads, ostate, step)
-            return params, ostate, loss, metrics
-        wp, os, loss, metrics = jax.vmap(one)(worker_params, opt_state,
-                                              batch, rngs)
-        return wp, os, {"loss": jnp.mean(loss), "metrics": metrics}
+        wp, opt_state, losses, metrics = self.engine.worker_step(
+            worker_params, opt_state, batch, step, rngs)
+        return wp, opt_state, {"loss": jnp.mean(losses), "metrics": metrics}
 
     @partial(jax.jit, static_argnums=(0, 3))
     def average(self, worker_params, outer_state, scope: str = "all"):
@@ -86,38 +73,22 @@ class LocalSGD:
         if scope == "inner" and self.schedule.inner_groups > 1:
             wp = average_inner(worker_params, self.schedule.inner_groups)
             return wp, outer_state, disp
-        avg = consensus(worker_params)
-        if self.outer is not None and outer_state is not None:
-            prev_avg, vel = outer_state
-            avg, vel = self.outer.apply(prev_avg, avg, vel)
-            outer_state = (avg, vel)
         m = jax.tree.leaves(worker_params)[0].shape[0]
-        wp = replicate(avg, m)
+        if self.outer is not None and outer_state is not None:
+            wp, outer_state = self.engine._apply_all_average(
+                worker_params, outer_state, m)
+            return wp, outer_state, disp
+        # no outer optimizer (or no state yet): the paper's plain mean
+        wp = replicate(consensus(worker_params), m)
         return wp, outer_state, disp
 
-    # ---- host-side driver -------------------------------------------------
+    # ---- driver (compat wrapper over the phase engine) -------------------
     def run(self, params, batches, *, num_workers: int, seed: int = 0,
             record_every: int = 0, eval_fn=None):
         """batches: iterable of per-step worker batches (leading axis M).
-        Returns (final averaged params, history dict)."""
-        wp, opt_state, outer_state = self.init(params, num_workers)
-        rng = np.random.default_rng(seed)
-        key = jax.random.PRNGKey(seed)
-        hist = {"loss": [], "dispersion": [], "averages": 0, "eval": []}
-        step = 0
-        for batch in batches:
-            step += 1
-            key, sub = jax.random.split(key)
-            rngs = jax.random.split(sub, num_workers)
-            wp, opt_state, info = self.local_step(wp, opt_state, batch,
-                                                  jnp.asarray(step), rngs)
-            scope = self.schedule.wants_average(step, rng)
-            if scope != "none":
-                wp, outer_state, disp = self.average(wp, outer_state, scope)
-                hist["dispersion"].append((step, float(disp)))
-                hist["averages"] += 1
-            if record_every and step % record_every == 0:
-                hist["loss"].append((step, float(info["loss"])))
-                if eval_fn is not None:
-                    hist["eval"].append((step, eval_fn(consensus(wp))))
-        return consensus(wp), hist
+        Returns (final averaged params, history dict). One compiled
+        dispatch per phase; stochastic-schedule draws come from the
+        engine's on-device PRNG stream (pure function of ``seed``)."""
+        return self.engine.run(params, batches, num_workers=num_workers,
+                               seed=seed, record_every=record_every,
+                               eval_fn=eval_fn)

@@ -64,7 +64,8 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
                 avg: str = "none", impl: str = "xla", remat: bool = True,
                 expert_parallel: bool = False, banded: bool = False,
                 score_bf16: bool = False, cache_layout: str = "seq",
-                moe_group: int = 0, verbose: bool = True):
+                moe_group: int = 0, phase_steps: int = 4,
+                verbose: bool = True):
     """Lower + compile one (arch × shape × mesh) combination.
     Returns (compiled, lowered, meta)."""
     reason = skip_reason(arch, shape_name)
@@ -88,6 +89,10 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
 
     t0 = time.time()
     if shape.kind == "train":
+        # Lower the ENGINE's compiled phase: a scan of phase_steps local
+        # steps with the phase-end average fused in (one dispatch per
+        # phase, one cross-worker all-reduce) — the program production
+        # training actually runs, not a single step.
         waxes = worker_axes(mesh)
         W = 1
         for a in waxes:
@@ -96,20 +101,26 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
         opt = steps.make_optimizer()
         wp_t, os_t = steps.abstract_worker_state(cfg, opt, W)
         batch_t = steps.input_specs(cfg, shape, num_workers=W)
+        phase_batch_t = jax.tree.map(
+            lambda s: steps.sds((phase_steps,) + s.shape, s.dtype), batch_t)
         inner = mesh.shape["pod"] if (avg == "hier" and "pod" in mesh.axis_names) else 0
-        fn = steps.make_train_step(
-            cfg, impl=impl, remat=remat, do_avg=(avg != "none"),
+        fn = steps.make_phase_step(
+            cfg, phase_len=phase_steps, impl=impl, remat=remat,
+            avg={"none": "none", "hier": "inner"}.get(avg, "all"),
             inner_groups=inner, optimizer=opt)
         p_specs = S.param_specs(wp_t, msize, worker_axes=wentry,
                                 moe_expert_parallel=expert_parallel)
         o_specs = S.param_specs(os_t, msize, worker_axes=wentry,
                                 moe_expert_parallel=expert_parallel)
-        b_specs = S.batch_specs(batch_t, msize, worker_axes=wentry)
+        b_specs = jax.tree.map(
+            lambda sp: P(None, *sp),  # leading K (scan) dim unsharded
+            S.batch_specs(batch_t, msize, worker_axes=wentry),
+            is_leaf=lambda x: isinstance(x, P))
         step_t = steps.sds((), jnp.int32)
         in_sh = (_ns(mesh, p_specs), _ns(mesh, o_specs),
                  _ns(mesh, b_specs), NamedSharding(mesh, P()))
         out_sh = (_ns(mesh, p_specs), _ns(mesh, o_specs), None)
-        args = (wp_t, os_t, batch_t, step_t)
+        args = (wp_t, os_t, phase_batch_t, step_t)
     elif shape.kind == "prefill":
         p_t = steps.abstract_params(cfg)
         batch_t = steps.input_specs(cfg, shape)
@@ -142,12 +153,16 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
         compiled = lowered.compile()
         t_compile = time.time() - t0 - t_lower
 
+    flops = model_flops(cfg, shape, training=shape.kind == "train")
+    if shape.kind == "train":
+        flops *= phase_steps  # the lowered program is a whole phase
     meta = {
         "arch": arch, "shape": shape_name,
         "mesh": "2x16x16" if multi_pod else "16x16",
         "avg": avg, "chips": chips,
+        "phase_steps": phase_steps if shape.kind == "train" else 0,
         "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
-        "model_flops": model_flops(cfg, shape, training=shape.kind == "train"),
+        "model_flops": flops,
         "expert_parallel": expert_parallel,
         "variant": "+".join(filter(None, [
             "banded" if banded else "", "bf16scores" if score_bf16 else "",
@@ -164,12 +179,13 @@ def lower_combo(arch: str, shape_name: str, *, multi_pod: bool,
 
 def run_one(arch, shape_name, *, multi_pod, avg="none",
             expert_parallel=False, banded=False, score_bf16=False,
-            cache_layout="seq", remat=True, moe_group=0, verbose=True):
+            cache_layout="seq", remat=True, moe_group=0, phase_steps=4,
+            verbose=True):
     compiled, lowered, meta = lower_combo(
         arch, shape_name, multi_pod=multi_pod, avg=avg,
         expert_parallel=expert_parallel, banded=banded,
         score_bf16=score_bf16, cache_layout=cache_layout, remat=remat,
-        moe_group=moe_group, verbose=verbose)
+        moe_group=moe_group, phase_steps=phase_steps, verbose=verbose)
     if compiled is None:
         return meta
     rep = roofline_report(compiled, model_flops=meta["model_flops"],
@@ -204,6 +220,9 @@ def main(argv=None):
     ap.add_argument("--moe-group", type=int, default=0,
                     help="MoE dispatch group size (perf variant; 0 = "
                          "global capacity baseline)")
+    ap.add_argument("--phase-steps", type=int, default=4,
+                    help="local steps per compiled averaging phase for "
+                         "train shapes (the engine's scan length K)")
     ap.add_argument("--no-remat", action="store_true",
                     help="disable per-block remat (used for the multi-pod "
                          "compile-proof pass on the largest archs, where "
@@ -251,7 +270,8 @@ def main(argv=None):
                                    score_bf16=args.score_bf16,
                                    cache_layout=args.cache_layout,
                                    remat=not args.no_remat,
-                                   moe_group=args.moe_group)
+                                   moe_group=args.moe_group,
+                                   phase_steps=args.phase_steps)
                 except Exception as e:  # a failure here is a bug — surface it
                     failures.append((key, repr(e)))
                     print(f"[dryrun] FAIL {key}: {e!r}", flush=True)

@@ -7,14 +7,12 @@ inputs are ShapeDtypeStructs (the shannon/kernels pattern).
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs import ModelConfig, ShapeConfig
 from repro.core.averaging import average_all, average_inner
+from repro.core.engine import make_worker_step
 from repro.models import transformer as tfm
 from repro.models.layers import cdtype
 from repro.optim import Momentum
@@ -93,28 +91,62 @@ def make_optimizer():
     return Momentum(lr=0.01, mu=0.9)
 
 
+def _lm_loss_fn(cfg: ModelConfig, *, impl: str, remat: bool):
+    """Engine-signature loss: (params, batch, rng) -> (loss, aux)."""
+    def loss_fn(params, batch, rng):
+        return tfm.lm_loss(cfg, params, batch, impl=impl, remat=remat)
+    return loss_fn
+
+
 def make_train_step(cfg: ModelConfig, *, impl: str = "xla",
                     remat: bool = True, do_avg: bool = False,
                     inner_groups: int = 0, optimizer=None):
-    """Local-SGD step over the worker axis (paper Eq. 3). With
-    ``do_avg`` the phase-end model average (one all-reduce) is fused in;
-    ``inner_groups`` > 0 averages hierarchically instead (beyond-paper)."""
+    """Local-SGD step over the worker axis (paper Eq. 3), built on the
+    engine's shared worker step. With ``do_avg`` the phase-end model
+    average (one all-reduce) is fused in; ``inner_groups`` > 0 averages
+    hierarchically instead (beyond-paper)."""
     opt = optimizer or make_optimizer()
-
-    def loss_fn(params, batch):
-        return tfm.lm_loss(cfg, params, batch, impl=impl, remat=remat)
+    wstep = make_worker_step(_lm_loss_fn(cfg, impl=impl, remat=remat), opt)
 
     def train_step(worker_params, opt_state, batch, step):
-        def one(p, s, b):
-            (loss, _), g = jax.value_and_grad(loss_fn, has_aux=True)(p, b)
-            p2, s2 = opt.apply(p, g, s, step)
-            return p2, s2, loss
-        wp, os, loss = jax.vmap(one)(worker_params, opt_state, batch)
+        wp, os, loss, _ = wstep(worker_params, opt_state, batch, step)
         if do_avg:
             wp = average_inner(wp, inner_groups) if inner_groups else average_all(wp)
         return wp, os, jnp.mean(loss)
 
     return train_step
+
+
+def make_phase_step(cfg: ModelConfig, *, phase_len: int, impl: str = "xla",
+                    remat: bool = True, avg: str = "all",
+                    inner_groups: int = 0, optimizer=None):
+    """The engine's compiled phase as a lowerable function: scan
+    ``phase_len`` local steps over a stacked (K, W, ...) batch block, then
+    fuse the phase-end average ("all" | "inner" | "none") into the same
+    program — one dispatch, one cross-worker all-reduce per phase.
+
+    batches: leaves (K, W, ...); step0: steps completed before the phase.
+    Returns (worker_params, opt_state, per-step mean losses (K,)).
+    """
+    opt = optimizer or make_optimizer()
+    wstep = make_worker_step(_lm_loss_fn(cfg, impl=impl, remat=remat), opt)
+
+    def phase_step(worker_params, opt_state, batches, step0):
+        def body(carry, inp):
+            wp, os = carry
+            batch, i = inp
+            wp, os, loss, _ = wstep(wp, os, batch, step0 + i + 1)
+            return (wp, os), jnp.mean(loss)
+        (wp, os), losses = jax.lax.scan(
+            body, (worker_params, opt_state),
+            (batches, jnp.arange(phase_len, dtype=jnp.int32)))
+        if avg == "inner" and inner_groups:
+            wp = average_inner(wp, inner_groups)
+        elif avg != "none":  # "all", or "inner" on a mesh with one group
+            wp = average_all(wp)
+        return wp, os, losses
+
+    return phase_step
 
 
 def make_prefill_step(cfg: ModelConfig, *, impl: str = "xla"):

@@ -20,7 +20,7 @@ import numpy as np
 
 from repro.checkpoint import save_checkpoint
 from repro.configs import ARCHS, get_config
-from repro.core import AveragingSchedule, LocalSGD, OuterOptimizer
+from repro.core import AveragingSchedule, OuterOptimizer, PhaseEngine
 from repro.data import token_stream, worker_batches
 from repro.models import init_params, lm_loss
 from repro.optim import AdamW, Momentum
@@ -39,16 +39,30 @@ def main(argv=None):
                              "stochastic", "hierarchical"])
     ap.add_argument("--phase-len", type=int, default=10)
     ap.add_argument("--zeta", type=float, default=0.01)
+    ap.add_argument("--inner-groups", type=int, default=2,
+                    help="hierarchical averaging: number of inner worker "
+                         "groups (must divide --workers)")
+    ap.add_argument("--outer-phase-len", type=int, default=0,
+                    help="hierarchical averaging: all-worker period "
+                         "(default 0 -> 8 x --phase-len)")
     ap.add_argument("--optimizer", default="momentum",
                     choices=["momentum", "adamw"])
     ap.add_argument("--lr", type=float, default=0.01)
     ap.add_argument("--outer-momentum", type=float, default=0.0,
                     help=">0 enables the beyond-paper DiLoCo-style outer "
                          "optimizer at averaging steps")
+    ap.add_argument("--scan-unroll", type=int, default=1,
+                    help="lax.scan unroll for the phase engine (0 = full "
+                         "unroll; speeds up compute-heavy bodies on CPU)")
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
+
+    if args.avg == "hierarchical":
+        if args.inner_groups < 1 or args.workers % args.inner_groups:
+            ap.error(f"--workers ({args.workers}) must be divisible by "
+                     f"--inner-groups ({args.inner_groups})")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.reduced:
@@ -65,11 +79,13 @@ def main(argv=None):
            else AdamW(lr=args.lr))
     sch = AveragingSchedule(
         kind=args.avg, phase_len=args.phase_len, zeta=args.zeta,
-        inner_phase_len=args.phase_len, outer_phase_len=args.phase_len * 8,
-        inner_groups=2)
+        inner_phase_len=args.phase_len,
+        outer_phase_len=args.outer_phase_len or args.phase_len * 8,
+        inner_groups=args.inner_groups)
     outer = (OuterOptimizer(lr=1.0, momentum=args.outer_momentum)
              if args.outer_momentum > 0 else None)
-    algo = LocalSGD(loss_fn, opt, sch, outer=outer)
+    engine = PhaseEngine(loss_fn, opt, sch, outer=outer,
+                         scan_unroll=args.scan_unroll or True)
 
     # per-worker independent data streams (paper §3.2: distinct shuffles)
     def batch_iter():
@@ -81,8 +97,8 @@ def main(argv=None):
             yield {"tokens": jnp.asarray(toks)}
 
     t0 = time.time()
-    final, hist = algo.run(params, batch_iter(), num_workers=args.workers,
-                           seed=args.seed, record_every=10)
+    final, hist = engine.run(params, batch_iter(), num_workers=args.workers,
+                             seed=args.seed, record_every=10)
     dt = time.time() - t0
     losses = hist["loss"]
     print(f"[train] {args.steps} steps in {dt:.1f}s "

@@ -61,16 +61,11 @@ class Momentum:
 
     def apply(self, params, grads, state, step):
         lr = self._lr(step)
-
-        def upd(p, g, v):
-            g = g.astype(jnp.float32)
-            v2 = self.mu * v + g
-            d = g + self.mu * v2 if self.nesterov else v2
-            return (p.astype(jnp.float32) - lr * d).astype(p.dtype), v2
-
-        out = jax.tree.map(upd, params, grads, state)
-        new = jax.tree.map(lambda t: t[0], out,
-                           is_leaf=lambda t: isinstance(t, tuple))
-        vel = jax.tree.map(lambda t: t[1], out,
-                           is_leaf=lambda t: isinstance(t, tuple))
+        vel = jax.tree.map(
+            lambda g, v: self.mu * v + g.astype(jnp.float32), grads, state)
+        new = jax.tree.map(
+            lambda p, g, v: (p.astype(jnp.float32) - lr * (
+                g.astype(jnp.float32) + self.mu * v if self.nesterov else v
+            )).astype(p.dtype),
+            params, grads, vel)
         return new, vel

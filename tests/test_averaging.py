@@ -1,17 +1,19 @@
-"""Property-based tests (hypothesis) for the averaging operators and
-local-SGD runtime invariants."""
+"""Deterministic tests for the averaging operators, schedules and
+local-SGD runtime invariants. Property-based (hypothesis) variants of the
+operator invariants live in test_averaging_properties.py, which skips
+itself when the optional ``hypothesis`` dev dependency is missing — this
+module covers the same invariants without it.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
 from repro.core.averaging import (AveragingSchedule, OuterOptimizer,
                                   average_all, average_inner,
                                   worker_dispersion)
 from repro.core.local_sgd import LocalSGD, consensus, replicate
 from repro.optim import SGD
-
-shapes = st.sampled_from([(4, 3), (2, 5, 2), (8, 1)])
 
 
 def tree_from(seed, m, shape):
@@ -21,9 +23,9 @@ def tree_from(seed, m, shape):
             "b": {"c": jax.random.normal(k2, (m, 7))}}
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 10_000), m=st.sampled_from([2, 4, 8]),
-       shape=shapes)
+@pytest.mark.parametrize("seed,m,shape", [
+    (0, 2, (4, 3)), (17, 4, (2, 5, 2)), (998, 8, (8, 1)), (5, 4, (4, 3)),
+])
 def test_average_all_idempotent_and_mean_preserving(seed, m, shape):
     t = tree_from(seed, m, shape)
     avg = average_all(t)
@@ -41,8 +43,7 @@ def test_average_all_idempotent_and_mean_preserving(seed, m, shape):
     assert float(worker_dispersion(avg)) < 1e-8
 
 
-@settings(max_examples=20, deadline=None)
-@given(seed=st.integers(0, 10_000), groups=st.sampled_from([2, 4]))
+@pytest.mark.parametrize("seed,groups", [(0, 2), (3, 4), (1234, 2)])
 def test_hierarchical_inner_average(seed, groups):
     m = 8
     t = tree_from(seed, m, (3,))
@@ -72,8 +73,34 @@ def test_outer_optimizer_identity_reduces_to_plain_mean():
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
 
 
-@settings(max_examples=10, deadline=None)
-@given(k=st.sampled_from([1, 3, 8]), steps=st.sampled_from([9, 16]))
+def test_outer_optimizer_nested_params_and_momentum():
+    """apply() must handle arbitrarily nested pytrees (incl. tuples as
+    internal nodes) and reproduce the Nesterov recurrence leaf-by-leaf."""
+    prev = {"layers": ({"w": jnp.ones((3, 2)), "b": jnp.zeros(2)},
+                       {"w": jnp.full((2, 2), 2.0)}),
+            "head": {"scale": jnp.asarray([4.0])}}
+    new = jax.tree.map(lambda x: x - 0.5, prev)
+    outer = OuterOptimizer(lr=0.7, momentum=0.9, nesterov=True)
+    vel = outer.init(prev)
+    out1, vel1 = outer.apply(prev, new, vel)
+    assert jax.tree.structure(out1) == jax.tree.structure(prev)
+    assert jax.tree.structure(vel1) == jax.tree.structure(prev)
+    # delta = prev - new = 0.5 everywhere; v1 = 0.5; step = .9*.5 + .5
+    for p, o, v in zip(jax.tree.leaves(prev), jax.tree.leaves(out1),
+                       jax.tree.leaves(vel1)):
+        np.testing.assert_allclose(np.asarray(v), 0.5, rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(o),
+                                   np.asarray(p) - 0.7 * (0.9 * 0.5 + 0.5),
+                                   rtol=1e-6)
+    # second application keeps structure and momentum accumulates
+    out2, vel2 = outer.apply(out1, jax.tree.map(lambda x: x - 1.0, out1),
+                             vel1)
+    for v in jax.tree.leaves(vel2):
+        np.testing.assert_allclose(np.asarray(v), 0.9 * 0.5 + 1.0, rtol=1e-6)
+    assert jax.tree.structure(out2) == jax.tree.structure(prev)
+
+
+@pytest.mark.parametrize("k,steps", [(1, 9), (3, 9), (3, 16), (8, 16)])
 def test_schedule_periodic_counts(k, steps):
     sch = AveragingSchedule(kind="periodic", phase_len=k)
     n = sum(sch.wants_average(s) == "all" for s in range(1, steps + 1))
@@ -90,10 +117,53 @@ def test_schedule_kinds():
     assert kinds == ["none", "inner", "none", "inner", "none", "all"]
 
 
+def test_schedule_validation():
+    """Invalid parameters must fail eagerly — traced mod-by-zero inside
+    the engine would mis-schedule silently."""
+    with pytest.raises(ValueError):
+        AveragingSchedule("periodic", phase_len=0)
+    with pytest.raises(ValueError):
+        AveragingSchedule("stochastic", zeta=0.0)
+    with pytest.raises(ValueError):
+        AveragingSchedule("hierarchical", inner_phase_len=0)
+    with pytest.raises(ValueError):
+        AveragingSchedule("nonsense")
+    AveragingSchedule("oneshot")  # unused fields are not validated
+
+
+def test_decision_code_matches_wants_average():
+    """The on-device decision (engine path) agrees with the legacy
+    host-side decision for every deterministic schedule."""
+    names = {0: "none", 1: "inner", 2: "all"}
+    key = jax.random.PRNGKey(0)
+    for sch in [AveragingSchedule("oneshot"),
+                AveragingSchedule("minibatch"),
+                AveragingSchedule("periodic", 4),
+                AveragingSchedule("hierarchical", inner_phase_len=2,
+                                  outer_phase_len=6, inner_groups=2)]:
+        for step in range(1, 13):
+            assert names[int(sch.decision_code(step, key))] == \
+                sch.wants_average(step, np.random.default_rng(0)), (sch, step)
+
+
+def test_decision_code_stochastic_reproducible_and_calibrated():
+    sch = AveragingSchedule("stochastic", zeta=0.25)
+    key = jax.random.PRNGKey(7)
+    codes = [int(sch.decision_code(s, key)) for s in range(1, 401)]
+    # pure function of (key, step): replaying gives the identical stream
+    assert codes == [int(sch.decision_code(s, key)) for s in range(1, 401)]
+    # and under jit (the engine's path) the very same stream
+    jitted = jax.jit(lambda s: sch.decision_code(s, key))
+    assert codes[:50] == [int(jitted(s)) for s in range(1, 51)]
+    rate = sum(c == 2 for c in codes) / len(codes)
+    assert 0.15 < rate < 0.35, rate
+    assert set(codes) <= {0, 2}
+
+
 def test_local_sgd_runtime_on_quadratic():
     """M workers on a noisy scalar quadratic: periodic averaging converges
     to a smaller noise ball than one-shot (paper's variance claim) and the
-    runtime machinery (init/local_step/average) holds its invariants."""
+    runtime machinery (engine-backed init/run) holds its invariants."""
     def make(schedule):
         def loss_fn(params, batch, rng):
             b, h = batch["b"], batch["h"]

@@ -1,0 +1,85 @@
+"""Property-based (hypothesis) tests for the averaging operators.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt); when
+it is absent this module skips itself and the deterministic fallbacks in
+test_averaging.py cover the same invariants.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.averaging import (AveragingSchedule, average_all,
+                                  average_inner, worker_dispersion)
+from repro.core.local_sgd import consensus
+
+shapes = st.sampled_from([(4, 3), (2, 5, 2), (8, 1)])
+
+
+def tree_from(seed, m, shape):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    return {"a": jax.random.normal(k1, (m,) + shape),
+            "b": {"c": jax.random.normal(k2, (m, 7))}}
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), m=st.sampled_from([2, 4, 8]),
+       shape=shapes)
+def test_average_all_idempotent_and_mean_preserving(seed, m, shape):
+    t = tree_from(seed, m, shape)
+    avg = average_all(t)
+    # all workers equal after averaging
+    for leaf in jax.tree.leaves(avg):
+        np.testing.assert_allclose(np.asarray(leaf),
+                                   np.asarray(leaf[:1]).repeat(m, 0), rtol=1e-6)
+    # idempotent
+    for a, b in zip(jax.tree.leaves(average_all(avg)), jax.tree.leaves(avg)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+    # preserves the mean (consensus invariance)
+    for a, b in zip(jax.tree.leaves(consensus(avg)), jax.tree.leaves(consensus(t))):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-6)
+    # dispersion collapses to ~0
+    assert float(worker_dispersion(avg)) < 1e-8
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 10_000), groups=st.sampled_from([2, 4]))
+def test_hierarchical_inner_average(seed, groups):
+    m = 8
+    t = tree_from(seed, m, (3,))
+    inner = average_inner(t, groups)
+    x = np.asarray(jax.tree.leaves(t)[0])
+    got = np.asarray(jax.tree.leaves(inner)[0])
+    per = m // groups
+    for g in range(groups):
+        expect = x[g * per:(g + 1) * per].mean(0)
+        for i in range(per):
+            np.testing.assert_allclose(got[g * per + i], expect, rtol=1e-5)
+    # full average of inner-averaged == full average of original
+    np.testing.assert_allclose(
+        np.asarray(jax.tree.leaves(consensus(inner))[0]),
+        np.asarray(jax.tree.leaves(consensus(t))[0]), rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.sampled_from([1, 3, 8]), steps=st.sampled_from([9, 16]))
+def test_schedule_periodic_counts(k, steps):
+    sch = AveragingSchedule(kind="periodic", phase_len=k)
+    n = sum(sch.wants_average(s) == "all" for s in range(1, steps + 1))
+    assert n == steps // k
+
+
+@settings(max_examples=10, deadline=None)
+@given(k=st.sampled_from([1, 2, 5]), steps=st.sampled_from([11, 20]),
+       seed=st.integers(0, 100))
+def test_decision_code_periodic_agrees_with_host(k, steps, seed):
+    sch = AveragingSchedule(kind="periodic", phase_len=k)
+    key = jax.random.PRNGKey(seed)
+    for s in range(1, steps + 1):
+        code = int(sch.decision_code(s, key))
+        assert (code == 2) == (sch.wants_average(s) == "all")
