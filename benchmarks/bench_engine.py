@@ -1,18 +1,29 @@
-"""Phase-engine benchmark: host-driven per-step dispatch vs the compiled
-phase engine, on the reduced convex (least-squares) workload.
+"""Phase-engine benchmark on the reduced convex (least-squares) workload.
 
-The host loop (PhaseEngine.run_host) is the seed runtime: one jit
-dispatch per step, averaging decided on host, blocking float() reads.
-The engine (PhaseEngine.run) compiles each averaging phase — K local
-steps + the fused average — into one donated scan. Both paths run the
-same periodic(K) schedule on identical data, so the ms/step ratio is
-pure dispatch/fusion win.
+Four runtimes, same periodic(K) schedule on identical sample draws:
 
-Sweeps K in {1, 8, 64, 512} x workers in {4, 16}; emits JSON via
-benchmarks/common.py (results/bench_engine.json).
+  host         — PhaseEngine.run_host: one jit dispatch per step,
+                 averaging decided on host (the seed runtime).
+  tree         — PR 1 engine: compiled phase scans, params-pytree carry,
+                 per-phase host staging (tree_stack), no prefetch.
+  flat_staged  — flat (M, P) plane carry + fused avg_disp averaging,
+                 still host-staged (sync and prefetch variants — the
+                 prefetch-vs-stack column).
+  flat_indexed — the full device-resident pipeline: flat plane + fused
+                 kernel + on-device data plane (DeviceDataset index
+                 blocks gathered inside the scan; zero host stacking).
+
+Sweeps K in {1, 4, 8, 64, 512} x workers in {4, 16}; the acceptance
+column is ``speedup_flat_vs_tree`` (tree / flat_indexed) on the
+averaging-heavy schedules (minibatch / periodic K<=8). Also times the
+WorkerSharder setup cost: the batched replacement draw vs the PR 1
+per-worker python loop. Emits JSON via benchmarks/common.py
+(results/bench_engine.json). ``--tiny`` runs CI-smoke shapes (no host
+baseline, no JSON).
 """
 from __future__ import annotations
 
+import sys
 import time
 
 import jax.numpy as jnp
@@ -21,27 +32,26 @@ import numpy as np
 from benchmarks.common import emit, save
 from repro.core import AveragingSchedule, PhaseEngine
 from repro.data import convex_dataset
+from repro.data.pipeline import DeviceDataset, WorkerSharder
 from repro.optim import SGD
 
 DIM, SAMPLES, STEPS = 64, 1024, 512
-PHASE_LENS = (1, 8, 64, 512)
+PHASE_LENS = (1, 4, 8, 64, 512)
 WORKER_COUNTS = (4, 16)
+AVG_HEAVY_K = 8  # minibatch / periodic K<=8: the averaging-heavy regime
 
 
-def make_engine(phase_len: int):
-    def loss_fn(params, batch, rng):
-        return 0.5 * jnp.square(batch["x"] @ params["w"] - batch["y"]), {}
-    sch = AveragingSchedule("periodic", phase_len)
-    return PhaseEngine(loss_fn, SGD(lr=0.01), sch)
+def loss_fn(params, batch, rng):
+    return 0.5 * jnp.square(batch["x"] @ params["w"] - batch["y"]), {}
 
 
-def make_batches(X, y, workers: int, seed: int = 0):
-    rng = np.random.default_rng(seed)
-    idx = rng.integers(0, X.shape[0], size=(STEPS, workers))
-    return [{"x": X[idx[t]], "y": y[idx[t]]} for t in range(STEPS)]
+def make_engine(phase_len: int, *, flat: bool):
+    sch = (AveragingSchedule("minibatch") if phase_len == 1
+           else AveragingSchedule("periodic", phase_len))
+    return PhaseEngine(loss_fn, SGD(lr=0.01), sch, flat=flat)
 
 
-def time_run(fn, *, reps: int = 3) -> float:
+def time_run(fn, steps, *, reps: int = 3) -> float:
     """ms/step, best of ``reps`` after a compile warmup run."""
     fn()  # warmup: compile
     best = float("inf")
@@ -49,43 +59,120 @@ def time_run(fn, *, reps: int = 3) -> float:
         t0 = time.perf_counter()
         fn()
         best = min(best, time.perf_counter() - t0)
-    return best / STEPS * 1e3
+    return best / steps * 1e3
 
 
-def run():
-    X, y, _ = convex_dataset("ls", SAMPLES, DIM, sparsity=0.2, noise=0.1,
+def bench_sharder(workers: int, steps: int, batch: int = 8,
+                  reps: int = 5) -> dict:
+    """Replacement-mode index generation: batched single draw vs the
+    PR 1 per-worker python loop."""
+    def loop_draw():  # the old implementation, for comparison
+        rngs = [np.random.default_rng(10_007 + i) for i in range(workers)]
+        out = np.empty((steps, workers, batch), np.int64)
+        for t in range(steps):
+            for i in range(workers):
+                out[t, i] = rngs[i].integers(0, SAMPLES, batch)
+        return out
+
+    def block_draw():
+        sh = WorkerSharder(SAMPLES, workers, seed=1, mode="replacement")
+        return sh.next_index_block(steps, batch)
+
+    out = {}
+    for name, fn in (("loop", loop_draw), ("block", block_draw)):
+        fn()
+        best = min(_timed(fn) for _ in range(reps))
+        out[f"sharder_{name}_us"] = best * 1e6
+    out["sharder_speedup"] = out["sharder_loop_us"] / out["sharder_block_us"]
+    return out
+
+
+def _timed(fn):
+    t0 = time.perf_counter()
+    fn()
+    return time.perf_counter() - t0
+
+
+def run(tiny: bool = False):
+    steps = 64 if tiny else STEPS
+    phase_lens = (1, 8) if tiny else PHASE_LENS
+    worker_counts = (4,) if tiny else WORKER_COUNTS
+    dim, samples = (16, 256) if tiny else (DIM, SAMPLES)
+    reps = 1 if tiny else 3
+
+    X, y, _ = convex_dataset("ls", samples, dim, sparsity=0.2, noise=0.1,
                              seed=0)
-    X, y = jnp.asarray(X), jnp.asarray(y)
-    w0 = {"w": jnp.zeros(DIM)}
+    w0 = {"w": jnp.zeros(dim)}
     results = []
-    for workers in WORKER_COUNTS:
-        batches = make_batches(X, y, workers)
-        for k in PHASE_LENS:
-            engine = make_engine(k)
+    for workers in worker_counts:
+        rng = np.random.default_rng(0)
+        idx = rng.integers(0, samples, size=(steps, workers))
+        Xj, yj = jnp.asarray(X), jnp.asarray(y)
+        batches = [{"x": Xj[idx[t]], "y": yj[idx[t]]} for t in range(steps)]
+        for k in phase_lens:
             # small-K schedules still scan big blocks: averaging decisions
             # are per-step and on-device, so one compiled block may span
             # many averaging periods
             block = max(k, 64)
-            host_ms = time_run(lambda: engine.run_host(
-                w0, batches, num_workers=workers, seed=0))
-            engine_ms = time_run(lambda: engine.run(
-                w0, batches, num_workers=workers, seed=0,
-                phase_len=block))
-            row = {"workers": workers, "phase_len": k, "steps": STEPS,
-                   "host_ms_per_step": host_ms,
-                   "engine_ms_per_step": engine_ms,
-                   "speedup": host_ms / engine_ms}
+            tree_eng = make_engine(k, flat=False)
+            flat_eng = make_engine(k, flat=True)
+
+            def staged(eng, prefetch):
+                return lambda: eng.run(w0, batches, num_workers=workers,
+                                       seed=0, phase_len=block,
+                                       prefetch=prefetch)
+
+            def indexed():
+                ds = DeviceDataset({"x": Xj, "y": yj}, workers, indices=idx)
+                return flat_eng.run(w0, ds, num_workers=workers, seed=0,
+                                    phase_len=block)
+
+            row = {"workers": workers, "phase_len": k, "steps": steps}
+            if not tiny:
+                row["host_ms_per_step"] = time_run(
+                    lambda: tree_eng.run_host(w0, batches,
+                                              num_workers=workers, seed=0),
+                    steps, reps=reps)
+            row["tree_ms_per_step"] = time_run(
+                staged(tree_eng, False), steps, reps=reps)
+            row["flat_staged_ms_per_step"] = time_run(
+                staged(flat_eng, False), steps, reps=reps)
+            row["flat_prefetch_ms_per_step"] = time_run(
+                staged(flat_eng, True), steps, reps=reps)
+            row["flat_indexed_ms_per_step"] = time_run(
+                indexed, steps, reps=reps)
+            row["speedup_flat_vs_tree"] = (row["tree_ms_per_step"] /
+                                           row["flat_indexed_ms_per_step"])
+            row["speedup_prefetch_vs_stack"] = (
+                row["flat_staged_ms_per_step"] /
+                row["flat_prefetch_ms_per_step"])
+            if not tiny:
+                row["speedup_vs_host"] = (row["host_ms_per_step"] /
+                                          row["flat_indexed_ms_per_step"])
             results.append(row)
-            emit(f"engine_K{k}_M{workers}", engine_ms * 1e3,
-                 f"host_ms/step={host_ms:.3f};engine_ms/step={engine_ms:.3f};"
-                 f"speedup={row['speedup']:.1f}x")
-    save("bench_engine", {"workload": {"dim": DIM, "samples": SAMPLES,
-                                       "steps": STEPS, "kind": "ls"},
-                          "rows": results})
-    worst = min(r["speedup"] for r in results if r["phase_len"] >= 64)
-    print(f"min speedup at K>=64: {worst:.1f}x")
+            emit(f"engine_K{k}_M{workers}",
+                 row["flat_indexed_ms_per_step"] * 1e3,
+                 f"tree_ms/step={row['tree_ms_per_step']:.3f};"
+                 f"flat_indexed_ms/step={row['flat_indexed_ms_per_step']:.3f};"
+                 f"flat_vs_tree={row['speedup_flat_vs_tree']:.2f}x;"
+                 f"prefetch_vs_stack={row['speedup_prefetch_vs_stack']:.2f}x")
+
+    sharder = bench_sharder(max(worker_counts), steps)
+    emit("sharder_replacement", sharder["sharder_block_us"],
+         f"loop_us={sharder['sharder_loop_us']:.0f};"
+         f"block_us={sharder['sharder_block_us']:.0f};"
+         f"speedup={sharder['sharder_speedup']:.1f}x")
+
+    heavy = [r["speedup_flat_vs_tree"] for r in results
+             if r["phase_len"] <= AVG_HEAVY_K]
+    print(f"min flat-vs-tree speedup at K<={AVG_HEAVY_K}: {min(heavy):.2f}x")
+    if not tiny:
+        save("bench_engine", {
+            "workload": {"dim": DIM, "samples": SAMPLES, "steps": STEPS,
+                         "kind": "ls"},
+            "rows": results, "sharder": sharder})
     return results
 
 
 if __name__ == "__main__":
-    run()
+    run(tiny="--tiny" in sys.argv[1:])

@@ -5,7 +5,9 @@ worker, on the convex suite; derived speedup@0.1 of periodic vs one-shot
 
 All schedules run through the PhaseEngine (one compiled dispatch per
 averaging phase) with shared per-step sample draws for a fair, paired
-comparison, as the paper shuffles identically.
+comparison, as the paper shuffles identically. The dataset lives on
+device once (DeviceDataset); each phase ships only the shared index
+block and gathers batches inside the compiled scan.
 """
 from __future__ import annotations
 
@@ -16,7 +18,7 @@ import numpy as np
 from benchmarks.common import emit, save, timeit
 from repro.configs.paper import CONVEX_SUITE
 from repro.core import AveragingSchedule, PhaseEngine
-from repro.data import convex_dataset
+from repro.data import DeviceDataset, convex_dataset
 from repro.models.convex import lr_objective, ls_objective, solve_optimum
 from repro.optim import SGD
 
@@ -53,13 +55,16 @@ def sgd_curves(kind, X, y, *, workers, steps, phase_lens, lr0, lr_d,
     # 1-indexed, hence the -1
     opt = SGD(lr=lambda t: lr0 / (t - 1.0 + lr_d))
 
-    def batches(m):
-        for t in range(steps):
-            yield {"x": X[idx[t, :m]], "y": y[idx[t, :m]]}
+    # device_put the dataset once for all schedules/worker counts; the
+    # per-curve DeviceDataset wraps these committed arrays without copying
+    arrays = {"x": jax.device_put(X), "y": jax.device_put(y)}
 
     def curve(schedule, m):
         engine = PhaseEngine(loss_fn, opt, schedule)
-        _, hist = engine.run({"w": w0}, batches(m), num_workers=m,
+        # paired draws: worker w of every schedule sees idx[:, w]; the
+        # (steps, m) index list is gathered on-device inside the scan
+        ds = DeviceDataset(arrays, m, indices=idx[:, :m])
+        _, hist = engine.run({"w": w0}, ds, num_workers=m,
                              seed=seed, record_every=record_every,
                              eval_fn=lambda p: float(obj_j(p["w"])))
         return hist["eval"]

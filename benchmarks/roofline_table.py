@@ -1,10 +1,13 @@
-"""Render the dry-run JSONL into the EXPERIMENTS.md roofline tables."""
+"""Render the dry-run JSONL into the EXPERIMENTS.md roofline tables,
+plus the analytic roofline of the fused avg_disp kernel (one averaging
+event over the flat (M, P) plane)."""
 from __future__ import annotations
 
 import json
 import os
 
 from benchmarks.common import RESULTS_DIR
+from repro.roofline import HW
 
 HDR = ("| arch | shape | mesh | avg | variant | flops/dev | bytes/dev | "
        "coll B/dev | compute s | memory s | coll s | bound | "
@@ -63,12 +66,68 @@ def render(rows=None):
     return "\n".join(out)
 
 
+def avg_disp_roofline(m: int, p: int, *, groups: int = 1,
+                      outer: bool = False, hw: HW = HW()) -> dict:
+    """Bytes / FLOPs of ONE fused averaging event on the (M, P) f32
+    plane (repro.kernels.avg_disp), vs the tree path's 3-4 passes.
+
+    Reads: the plane (M·P·4 B) once (+ prev_avg & velocity, 2·P·4 B,
+    with the outer optimizer); writes: the broadcast plane (+ new
+    avg/velocity). FLOPs: mean (M adds + 1 mul per column, + group
+    means), dispersion (sub+mul+add per element), outer step (~5/col).
+    The kernel is memory-bound at every realistic (M, P) — one averaging
+    event costs two sweeps of the plane, where the tree path pays 3-4.
+    """
+    elems = m * p
+    read_b = 4 * (elems + (2 * p if outer else 0))
+    write_b = 4 * (elems + (2 * p if outer else 0))
+    mean_f = elems + p + (elems + groups * p if groups > 1 else 0)
+    disp_f = 3 * elems + p
+    outer_f = 5 * p if outer else 0
+    flops = mean_f + disp_f + outer_f
+    bytes_total = read_b + write_b
+    return {
+        "kernel": "avg_disp" + ("_outer" if outer else ""),
+        "m": m, "p": p, "groups": groups,
+        "flops": flops, "bytes": bytes_total,
+        "intensity_flop_per_byte": flops / bytes_total,
+        "compute_s": flops / hw.peak_flops,
+        "memory_s": bytes_total / hw.hbm_bw,
+        "bound": "memory",  # intensity ~0.5 F/B << machine balance
+        "tree_path_passes": 4 if outer else 3,
+        "fused_passes": 2,
+    }
+
+
+AVG_DISP_HDR = ("| kernel | M | P | groups | FLOPs | bytes | F/B | "
+                "memory s | passes (tree -> fused) |")
+AVG_DISP_SEP = "|" + "---|" * 9
+
+
+def render_avg_disp(cases=((16, 1 << 20, 1, False), (16, 1 << 20, 4, False),
+                           (16, 1 << 20, 1, True),
+                           (64, 1 << 24, 1, True))) -> str:
+    out = [AVG_DISP_HDR, AVG_DISP_SEP]
+    for m, p, groups, outer in cases:
+        r = avg_disp_roofline(m, p, groups=groups, outer=outer)
+        out.append(
+            f"| {r['kernel']} | {m} | {p} | {groups} | {r['flops']:.2e} | "
+            f"{r['bytes']:.2e} | {r['intensity_flop_per_byte']:.2f} | "
+            f"{r['memory_s']:.2e} | {r['tree_path_passes']} -> "
+            f"{r['fused_passes']} |")
+    return "\n".join(out)
+
+
 def run():
     rows = load()
     n_ok = sum(1 for r in rows if "skipped" not in r)
     n_skip = sum(1 for r in rows if "skipped" in r)
-    print(f"roofline_table,0.0,combos_compiled={n_ok};skipped={n_skip}")
+    r = avg_disp_roofline(16, 1 << 20)
+    print(f"roofline_table,0.0,combos_compiled={n_ok};skipped={n_skip};"
+          f"avg_disp_fb={r['intensity_flop_per_byte']:.2f}")
 
 
 if __name__ == "__main__":
     print(render())
+    print()
+    print(render_avg_disp())

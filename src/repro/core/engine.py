@@ -7,9 +7,9 @@ the host, and blocks on ``float()`` metric reads. This module compiles
 the whole phase instead:
 
     run_phase(state, batches)          # ONE dispatch per phase
-      └─ jax.lax.scan over K steps     # batches prefetched as a stacked
-           └─ vmap over M workers      #   (K, M, ...) device block
-           └─ schedule.decision_code   # on-device: lax.switch applies
+      └─ jax.lax.scan over K steps     # batches gathered on-device from
+           └─ vmap over M workers      #   index blocks, or prefetched as
+           └─ schedule.decision_code   #   a staged (K, M, ...) block
                 none / inner / all averaging (+ outer optimizer)
       └─ loss + dispersion traces accumulated on-device, fetched once
 
@@ -20,6 +20,23 @@ Averaging decisions — including the stochastic schedule's Bernoulli
 draws — are pure functions of a single PRNG key and the step counter
 (``fold_in(key, step)``), so runs are bitwise reproducible and resumable
 from a checkpointed ``EngineState``.
+
+Two device-residency layers sit on top of the PR 1 scan:
+
+- **Flat parameter plane** (default): inside a phase the scan carries
+  the workers as one contiguous ``(M, P)`` float32 plane
+  (:class:`repro.core.flat.FlatSpec`; bit-exact pack/unpack), so every
+  averaging event is a single fused pass — worker mean (global or
+  per-group), Eq. 4 dispersion, broadcast, and the outer-optimizer
+  momentum step — instead of 3–4 params-pytree traversals
+  (``repro.kernels.avg_disp`` on TPU, its jnp twin on CPU). Trees with
+  dtypes that have no exact float32 image fall back to the tree path.
+- **On-device data plane**: :meth:`run` accepts a
+  :class:`repro.data.pipeline.DeviceDataset` — the dataset lives on
+  device, the driver ships (K, M, B) int32 index blocks, and the scan
+  body gathers batches with ``jnp.take`` — zero per-phase host staging.
+  Streaming iterables are staged by a double-buffered
+  :class:`repro.data.pipeline.Prefetcher` thread instead.
 
 Schedules lower to on-device control flow as follows:
 
@@ -45,6 +62,10 @@ import jax.numpy as jnp
 
 from repro.core.averaging import (AveragingSchedule, OuterOptimizer,
                                   average_inner, worker_dispersion)
+from repro.core.flat import FlatSpec
+from repro.data.pipeline import DeviceDataset, Prefetcher
+from repro.kernels.avg_disp import avg_disp, avg_disp_outer
+from repro.kernels.ref import avg_disp_outer_ref, avg_disp_ref
 
 
 # --------------------------------------------------------------------------
@@ -117,12 +138,20 @@ class PhaseEngine:
     bodies with reduced intra-op threading, so compute-heavy losses (e.g.
     convolutions) on CPU backends benefit from ``scan_unroll=True`` (full
     unroll: longer compiles, per-step speed of eager dispatch). On real
-    accelerator meshes leave the default rolled scan."""
+    accelerator meshes leave the default rolled scan.
+
+    ``flat`` selects the (M, P) flat-plane scan carry (default; falls
+    back to the tree carry for trees FlatSpec cannot embed).
+    ``kernel_impl`` picks the fused averaging implementation: "auto"
+    (jnp reference on CPU, Pallas/Mosaic elsewhere), "ref", or
+    "pallas"."""
     loss_fn: Callable
     optimizer: Any
     schedule: AveragingSchedule
     outer: OuterOptimizer | None = None
     scan_unroll: int | bool = 1
+    flat: bool = True
+    kernel_impl: str = "auto"
 
     @cached_property
     def worker_step(self):
@@ -140,7 +169,40 @@ class PhaseEngine:
         return EngineState(wp, opt_state, outer_state, key, dec_key,
                            jnp.zeros((), jnp.int32))
 
-    # ---- the compiled phase ---------------------------------------------
+    # ---- fused flat averaging -------------------------------------------
+    def _use_pallas(self) -> bool:
+        if self.kernel_impl == "pallas":
+            return True
+        if self.kernel_impl == "ref":
+            return False
+        return jax.default_backend() != "cpu"
+
+    def _flat_average(self, plane, outer_c, scope: str):
+        """ONE fused pass over the (M, P) plane: mean (global or
+        per-group), Eq. 4 dispersion, broadcast, and — for the all-scope
+        with an outer optimizer — the outer momentum step."""
+        pallas = self._use_pallas()
+        if scope == "inner":
+            groups = max(self.schedule.inner_groups, 1)
+            if pallas:
+                plane, disp = avg_disp(plane, groups=groups)
+            else:
+                plane, disp = avg_disp_ref(plane, groups=groups)
+            return plane, outer_c, disp
+        if self.outer is not None and outer_c != ():
+            prev, vel = outer_c
+            fused = avg_disp_outer if pallas else avg_disp_outer_ref
+            plane, prev, vel, disp = fused(
+                plane, prev, vel, lr=self.outer.lr,
+                momentum=self.outer.momentum, nesterov=self.outer.nesterov)
+            return plane, (prev, vel), disp
+        if pallas:
+            plane, disp = avg_disp(plane)
+        else:
+            plane, disp = avg_disp_ref(plane)
+        return plane, outer_c, disp
+
+    # ---- tree-path averaging (flat=False, and FlatSpec fallback) ---------
     def _apply_all_average(self, wp, outer_state, num_workers):
         avg = consensus(wp)
         if self.outer is not None:
@@ -149,60 +211,103 @@ class PhaseEngine:
             outer_state = (avg, vel)
         return replicate(avg, num_workers), outer_state
 
-    @partial(jax.jit, static_argnums=0, donate_argnums=1)
-    def run_phase(self, state: EngineState, batches):
-        """One compiled dispatch: scan K steps over a stacked (K, M, ...)
-        batch block, averaging fused per the schedule. Returns the new
+    def _tree_average(self, wp, outer_c, scope: str, num_workers: int):
+        disp = worker_dispersion(wp).astype(jnp.float32)
+        if scope == "inner":
+            return (average_inner(wp, max(self.schedule.inner_groups, 1)),
+                    outer_c, disp)
+        wp, outer_c = self._apply_all_average(wp, outer_c, num_workers)
+        return wp, outer_c, disp
+
+    # ---- the compiled phase ---------------------------------------------
+    def _phase(self, state: EngineState, xs, fetch):
+        """Trace the whole phase: scan the K entries of ``xs``
+        (pre-staged batches, or index blocks that ``fetch`` gathers
+        on-device), averaging fused per the schedule. Returns the new
         state and per-step traces {loss, dispersion, avg_code} — the only
         host transfer a phase needs."""
         num_workers = jax.tree.leaves(state.worker_params)[0].shape[0]
         sched = self.schedule
+        use_flat = self.flat and FlatSpec.supports(state.worker_params)
 
-        def body(carry, batch):
-            wp, opt_state, outer_state, key, step = carry
+        if use_flat:
+            spec = FlatSpec.of(state.worker_params)
+            carry_p = spec.pack(state.worker_params)
+            carry_o = ()
+            if self.outer is not None and state.outer_state != ():
+                prev_avg, vel = state.outer_state
+                carry_o = (spec.pack1(prev_avg), spec.pack1(vel))
+            average = self._flat_average
+        else:
+            spec = None
+            carry_p = state.worker_params
+            carry_o = state.outer_state
+            average = partial(self._tree_average, num_workers=num_workers)
+
+        def body(carry, xs_t):
+            wp_c, opt_state, outer_c, key, step = carry
             step = step + 1
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, num_workers)
+            batch = fetch(xs_t)
+            wp = spec.unpack(wp_c) if use_flat else wp_c
             wp, opt_state, losses, _ = self.worker_step(
                 wp, opt_state, batch, step, rngs)
+            wp_c = spec.pack(wp) if use_flat else wp
             code = sched.decision_code(step, state.dec_key)
             if sched.kind == "oneshot":
                 disp = jnp.zeros((), jnp.float32)
             elif sched.kind == "minibatch":
-                disp = worker_dispersion(wp).astype(jnp.float32)
-                wp, outer_state = self._apply_all_average(
-                    wp, outer_state, num_workers)
+                wp_c, outer_c, disp = average(wp_c, outer_c, "all")
             else:
                 def none_branch(args):
-                    wp, ost = args
-                    return wp, ost, jnp.zeros((), jnp.float32)
+                    wp_c, oc = args
+                    return wp_c, oc, jnp.zeros((), jnp.float32)
 
                 def inner_branch(args):
-                    wp, ost = args
-                    disp = worker_dispersion(wp).astype(jnp.float32)
-                    return (average_inner(wp, max(sched.inner_groups, 1)),
-                            ost, disp)
+                    return average(*args, "inner")
 
                 def all_branch(args):
-                    wp, ost = args
-                    disp = worker_dispersion(wp).astype(jnp.float32)
-                    wp, ost = self._apply_all_average(wp, ost, num_workers)
-                    return wp, ost, disp
+                    return average(*args, "all")
 
-                wp, outer_state, disp = jax.lax.switch(
+                wp_c, outer_c, disp = jax.lax.switch(
                     code, [none_branch, inner_branch, all_branch],
-                    (wp, outer_state))
-            return ((wp, opt_state, outer_state, key, step),
-                    (jnp.mean(losses), disp, code))
+                    (wp_c, outer_c))
+            return ((wp_c, opt_state, outer_c, key, step),
+                    (jnp.mean(losses), disp.astype(jnp.float32), code))
 
-        carry0 = (state.worker_params, state.opt_state, state.outer_state,
-                  state.key, state.step)
-        (wp, opt_state, outer_state, key, step), (loss, disp, code) = \
-            jax.lax.scan(body, carry0, batches, unroll=self.scan_unroll)
+        carry0 = (carry_p, state.opt_state, carry_o, state.key, state.step)
+        (wp_c, opt_state, outer_c, key, step), (loss, disp, code) = \
+            jax.lax.scan(body, carry0, xs, unroll=self.scan_unroll)
+
+        if use_flat:
+            wp = spec.unpack(wp_c)
+            outer_state = state.outer_state
+            if carry_o != ():
+                outer_state = (spec.unpack1(outer_c[0]),
+                               spec.unpack1(outer_c[1], dtypes=jnp.float32))
+        else:
+            wp, outer_state = wp_c, outer_c
         new_state = EngineState(wp, opt_state, outer_state, key,
                                 state.dec_key, step)
         return new_state, {"loss": loss, "dispersion": disp,
                            "avg_code": code}
+
+    @partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def run_phase(self, state: EngineState, batches):
+        """One compiled dispatch over a pre-staged (K, M, ...) batch
+        block."""
+        return self._phase(state, batches, lambda b: b)
+
+    @partial(jax.jit, static_argnums=0, donate_argnums=1)
+    def run_phase_indexed(self, state: EngineState, dataset, idx_block):
+        """One compiled dispatch over a (K, M, B) int32 index block:
+        batches are gathered from the device-resident ``dataset``
+        INSIDE the scan (``jnp.take``), so the host ships only
+        indices."""
+        def fetch(idx):
+            return jax.tree.map(lambda a: jnp.take(a, idx, axis=0), dataset)
+        return self._phase(state, idx_block, fetch)
 
     def default_phase_len(self) -> int:
         """Compile-size heuristic: align phase blocks with the schedule's
@@ -218,12 +323,18 @@ class PhaseEngine:
         return 64  # oneshot / minibatch: any block size
 
     # ---- drivers ---------------------------------------------------------
-    def run(self, params, batches, *, num_workers: int, seed: int = 0,
+    def run(self, params, data, *, num_workers: int, seed: int = 0,
             record_every: int = 0, eval_fn=None, worker_eval_fn=None,
-            phase_len: int | None = None):
+            phase_len: int | None = None, steps: int | None = None,
+            prefetch: bool = True):
         """Production driver: one run_phase dispatch per block of steps.
 
-        batches: iterable of per-step worker batches (leading axis M).
+        data: an iterable of per-step worker batches (leading axis M) —
+        staged to device by a background :class:`Prefetcher` thread
+        (``prefetch=False`` stages synchronously) — or a
+        :class:`DeviceDataset`, in which case batches are gathered
+        on-device from index blocks and ``steps`` bounds the run (it
+        defaults to the dataset's precomputed index list, if any).
         eval_fn(consensus_params) / worker_eval_fn(worker_params) run on
         host every ``record_every`` steps (phase blocks are cut so record
         boundaries coincide with phase ends). Returns (final averaged
@@ -231,27 +342,21 @@ class PhaseEngine:
         """
         state = self.init(params, num_workers, seed)
         block = phase_len or self.default_phase_len()
-        needs_eval = record_every and (eval_fn or worker_eval_fn)
+        needs_eval = bool(record_every and (eval_fn or worker_eval_fn))
         hist = {"loss": [], "dispersion": [], "averages": 0, "eval": [],
                 "worker_eval": []}
-        it = iter(batches)
-        t, done = 0, False
-        while not done:
+
+        def take_at(t):
             take = block
             if needs_eval:
                 take = min(take, record_every - t % record_every)
-            chunk = []
-            while len(chunk) < take:
-                try:
-                    chunk.append(next(it))
-                except StopIteration:
-                    done = True
-                    break
-            if not chunk:
-                break
-            state, trace = self.run_phase(state, tree_stack(chunk))
+            if steps is not None:
+                take = min(take, steps - t)
+            return take
+
+        def consume(t, k, trace):
             trace = jax.device_get(trace)
-            for i in range(len(chunk)):
+            for i in range(k):
                 t += 1
                 if trace["avg_code"][i]:
                     hist["dispersion"].append(
@@ -266,6 +371,57 @@ class PhaseEngine:
                 if worker_eval_fn is not None:
                     hist["worker_eval"].append(
                         (t, worker_eval_fn(state.worker_params)))
+            return t
+
+        if isinstance(data, DeviceDataset):
+            assert data.num_workers == num_workers, \
+                (data.num_workers, num_workers)
+            total = steps if steps is not None else data.num_steps
+            assert total is not None, \
+                "DeviceDataset with a sampler needs steps="
+            if data.num_steps is not None:
+                # like a streaming source, a precomputed index list ends
+                # the run when exhausted
+                total = min(total, data.num_steps)
+            steps = total
+            t = 0
+            while t < total:
+                take = take_at(t)
+                idx = jnp.asarray(data.index_block(take))
+                state, trace = self.run_phase_indexed(state, data.arrays,
+                                                      idx)
+                t = consume(t, take, trace)
+            return consensus(state.worker_params), hist
+
+        def staged_blocks():
+            it = iter(data)
+            t, done = 0, False
+            while not done:
+                take = take_at(t)
+                if take <= 0:
+                    return
+                chunk = []
+                while len(chunk) < take:
+                    try:
+                        chunk.append(next(it))
+                    except StopIteration:
+                        done = True
+                        break
+                if not chunk:
+                    return
+                t += len(chunk)
+                yield len(chunk), tree_stack(chunk)
+
+        blocks = Prefetcher(staged_blocks()) if prefetch \
+            else staged_blocks()
+        t = 0
+        try:
+            for k, staged in blocks:
+                state, trace = self.run_phase(state, staged)
+                t = consume(t, k, trace)
+        finally:
+            if isinstance(blocks, Prefetcher):
+                blocks.close()
         return consensus(state.worker_params), hist
 
     # ---- legacy host-driven loop (benchmark baseline / equivalence) ------
@@ -287,12 +443,14 @@ class PhaseEngine:
         return wp, outer_state, disp
 
     def run_host(self, params, batches, *, num_workers: int, seed: int = 0,
-                 record_every: int = 0, eval_fn=None):
+                 record_every: int = 0, eval_fn=None, worker_eval_fn=None):
         """Per-step host-driven loop: one jit dispatch per step, the
         averaging decision read on host, blocking ``float()`` metric
         reads. Numerically identical to :meth:`run` (same per-step rng
         splits, same fold_in decision stream) — kept as the dispatch-bound
-        baseline the engine is benchmarked against."""
+        baseline the engine is benchmarked against. The history dict has
+        the same keys and semantics as :meth:`run`'s, including
+        ``worker_eval``."""
         state = self.init(params, num_workers, seed)
         wp, opt_state, outer_state = (state.worker_params, state.opt_state,
                                       state.outer_state)
@@ -316,4 +474,7 @@ class PhaseEngine:
                 hist["loss"].append((step, float(loss)))
                 if eval_fn is not None:
                     hist["eval"].append((step, eval_fn(consensus(wp))))
+                if worker_eval_fn is not None:
+                    hist["worker_eval"].append(
+                        (step, worker_eval_fn(wp)))
         return consensus(wp), hist

@@ -1,0 +1,117 @@
+"""Flat parameter plane: the whole worker model as ONE (M, P) buffer.
+
+The phase engine's averaging events are pure worker-axis reductions —
+mean over M, dispersion around that mean, an optional outer-optimizer
+step on the mean. On a params *pytree* each of those is a separate tree
+traversal (PR 1 paid 3–4 per event); on a contiguous ``(M, P)`` plane
+they are one tiled pass over a single buffer, which is exactly the shape
+``repro.kernels.avg_disp`` fuses.
+
+:class:`FlatSpec` records the leaf layout (treedef, shapes, dtypes,
+column offsets) so packing is invertible:
+
+    spec  = FlatSpec.of(worker_params)        # leaves (M, *shape)
+    plane = spec.pack(worker_params)          # (M, P) float32
+    tree  = spec.unpack(plane)                # == worker_params bit-exact
+
+The plane dtype is float32. float32 leaves are stored verbatim;
+bfloat16/float16 leaves are stored as their exact float32 image (both
+formats embed losslessly in float32) and rounded back on unpack, so the
+pack→unpack roundtrip is bit-exact for every finite value and ±inf.
+Integer / wider-than-32-bit leaves are not representable this way —
+:func:`FlatSpec.supports` reports that, and the engine falls back to the
+tree path for such trees.
+
+``pack1``/``unpack1`` are the rank-(P,) variants for trees WITHOUT the
+worker axis (consensus params, outer-optimizer state).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+_PACKABLE = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+
+def _packable(dtype) -> bool:
+    return any(jnp.dtype(dtype) == jnp.dtype(d) for d in _PACKABLE)
+
+
+@dataclass(frozen=True)
+class FlatSpec:
+    """Layout of a params pytree inside a flat float32 plane."""
+    treedef: Any
+    shapes: tuple          # per-leaf shapes WITHOUT the worker axis
+    dtypes: tuple          # per-leaf original dtypes
+    offsets: tuple         # per-leaf first column
+    width: int             # P: total columns
+
+    # ---- construction ----------------------------------------------------
+    @classmethod
+    def of(cls, tree, *, worker_axis: bool = True) -> "FlatSpec":
+        """Build the spec from a (possibly abstract) pytree. With
+        ``worker_axis`` the leading dim of every leaf is the worker axis
+        and is excluded from the layout."""
+        leaves, treedef = jax.tree.flatten(tree)
+        shapes, dtypes, offsets = [], [], []
+        off = 0
+        for x in leaves:
+            if not _packable(x.dtype):
+                raise TypeError(
+                    f"FlatSpec: dtype {x.dtype} has no exact float32 "
+                    "image; use the tree path for this tree")
+            shape = tuple(x.shape[1:] if worker_axis else x.shape)
+            shapes.append(shape)
+            dtypes.append(jnp.dtype(x.dtype))
+            offsets.append(off)
+            off += math.prod(shape)
+        return cls(treedef, tuple(shapes), tuple(dtypes), tuple(offsets),
+                   off)
+
+    @staticmethod
+    def supports(tree) -> bool:
+        """True iff every leaf dtype embeds exactly in float32."""
+        return all(_packable(x.dtype) for x in jax.tree.leaves(tree))
+
+    # ---- (M, P) plane <-> worker tree ------------------------------------
+    def pack(self, tree):
+        """Leaves (M, *shape) -> (M, P) float32, columns in leaf order."""
+        leaves = self.treedef.flatten_up_to(tree)
+        m = leaves[0].shape[0] if leaves else 0
+        cols = [jnp.asarray(x).astype(jnp.float32).reshape(m, -1)
+                for x in leaves]
+        return jnp.concatenate(cols, axis=1) if cols else \
+            jnp.zeros((m, 0), jnp.float32)
+
+    def unpack(self, plane):
+        """(M, P) float32 -> leaves (M, *shape) in their original dtype."""
+        m = plane.shape[0]
+        leaves = [
+            plane[:, o:o + math.prod(s)].reshape((m,) + s).astype(dt)
+            for o, s, dt in zip(self.offsets, self.shapes, self.dtypes)]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+    # ---- (P,) vector <-> consensus tree ----------------------------------
+    def pack1(self, tree):
+        """Leaves of exactly ``shape`` (no worker axis) -> (P,) float32."""
+        leaves = self.treedef.flatten_up_to(tree)
+        cols = [jnp.asarray(x).astype(jnp.float32).reshape(-1)
+                for x in leaves]
+        return jnp.concatenate(cols) if cols else jnp.zeros((0,),
+                                                            jnp.float32)
+
+    def unpack1(self, vec, *, dtypes=None):
+        """(P,) float32 -> consensus tree. ``dtypes`` overrides the cast
+        (e.g. ``jnp.float32`` for outer-optimizer velocity, which mirrors
+        the param structure but stays float32)."""
+        if dtypes is None:
+            dtypes = self.dtypes
+        elif not isinstance(dtypes, tuple):
+            dtypes = (jnp.dtype(dtypes),) * len(self.shapes)
+        leaves = [vec[o:o + math.prod(s)].reshape(s).astype(dt)
+                  for o, s, dt in zip(self.offsets, self.shapes, dtypes)]
+        return jax.tree.unflatten(self.treedef, leaves)

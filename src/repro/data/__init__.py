@@ -3,4 +3,9 @@ from repro.data.synthetic import (  # noqa: F401
     mnist_like,
     token_stream,
 )
-from repro.data.pipeline import WorkerSharder, worker_batches  # noqa: F401
+from repro.data.pipeline import (  # noqa: F401
+    DeviceDataset,
+    Prefetcher,
+    WorkerSharder,
+    worker_batches,
+)

@@ -1,12 +1,24 @@
-"""Worker-sharded batching.
+"""Worker-sharded batching and the on-device data plane.
 
 The paper's setups use (a) sampling with replacement from a common pool
 (theory, Eq. 2) and (b) a distinct permutation of the dataset per worker
 (§3.2 CNN). ``WorkerSharder`` implements both; ``worker_batches`` adapts
 any single-stream iterator into per-worker batches with a leading worker
 axis — the layout the LocalSGD runtime shards over the mesh worker axes.
+
+Two pieces keep the phase engine's hot path free of host staging:
+
+- :class:`DeviceDataset` pins an in-memory dataset on device ONCE and
+  feeds the engine `(K, M, B)` *index* blocks; batches are gathered
+  on-device inside the phase scan (``jnp.take``), so a phase dispatch
+  transfers K·M·B int32 indices instead of K stacked batches.
+- :class:`Prefetcher` double-buffers streaming sources: a daemon thread
+  stacks and stages block t+1 while block t computes.
 """
 from __future__ import annotations
+
+import queue
+import threading
 
 import numpy as np
 
@@ -20,32 +32,171 @@ class WorkerSharder:
         self.n = num_samples
         self.m = num_workers
         self.mode = mode
-        self.rngs = [np.random.default_rng(seed * 10_007 + i)
-                     for i in range(num_workers)]
-        self._perms = [r.permutation(num_samples) for r in self.rngs]
-        self._cursor = [0] * num_workers
+        if mode == "permute":
+            self.rngs = [np.random.default_rng(seed * 10_007 + i)
+                         for i in range(num_workers)]
+            self._perms = [r.permutation(num_samples) for r in self.rngs]
+            self._cursor = [0] * num_workers
+        else:
+            # replacement mode draws all workers (and all steps of a
+            # block) from ONE stacked stream in a single batched
+            # ``integers`` call — no per-worker generators/permutations
+            self._rng = np.random.default_rng(seed * 10_007)
 
     def next_indices(self, batch: int) -> np.ndarray:
         """(num_workers, batch) int — each worker's next sample indices."""
+        if self.mode == "replacement":
+            return self._rng.integers(0, self.n, (self.m, batch))
         out = np.empty((self.m, batch), np.int64)
         for i in range(self.m):
-            if self.mode == "replacement":
-                out[i] = self.rngs[i].integers(0, self.n, batch)
-            else:
-                idx = []
-                while len(idx) < batch:
-                    take = min(batch - len(idx), self.n - self._cursor[i])
-                    idx.extend(self._perms[i][self._cursor[i]:self._cursor[i] + take])
-                    self._cursor[i] += take
-                    if self._cursor[i] >= self.n:  # re-shuffle per epoch
-                        self._perms[i] = self.rngs[i].permutation(self.n)
-                        self._cursor[i] = 0
-                out[i] = np.asarray(idx)
+            idx = []
+            while len(idx) < batch:
+                take = min(batch - len(idx), self.n - self._cursor[i])
+                idx.extend(self._perms[i][self._cursor[i]:self._cursor[i] + take])
+                self._cursor[i] += take
+                if self._cursor[i] >= self.n:  # re-shuffle per epoch
+                    self._perms[i] = self.rngs[i].permutation(self.n)
+                    self._cursor[i] = 0
+            out[i] = np.asarray(idx)
         return out
+
+    def next_index_block(self, steps: int, batch: int) -> np.ndarray:
+        """(steps, num_workers, batch) int — a whole phase block of
+        indices. In replacement mode this is ONE batched draw (numpy
+        fills C-order from the bit stream, so it equals ``steps``
+        successive :meth:`next_indices` calls); permute mode walks the
+        per-worker epoch cursors."""
+        if self.mode == "replacement":
+            return self._rng.integers(0, self.n, (steps, self.m, batch))
+        return np.stack([self.next_indices(batch) for _ in range(steps)])
 
 
 def worker_batches(stream, num_workers: int):
     """Group a single-batch iterator into (num_workers, ...) stacked
-    batches: one independent batch per worker per step."""
+    batches: one independent batch per worker per step. Ends (dropping
+    any partial worker group) when the stream ends."""
     while True:
-        yield np.stack([next(stream) for _ in range(num_workers)], axis=0)
+        group = []
+        for _ in range(num_workers):
+            try:
+                group.append(next(stream))
+            except StopIteration:
+                # under PEP 479 letting StopIteration escape a generator
+                # raises RuntimeError — end the generator instead
+                return
+        yield np.stack(group, axis=0)
+
+
+class DeviceDataset:
+    """In-memory dataset resident on device; the engine gathers batches
+    on-device from index blocks — zero per-phase host staging.
+
+    arrays: pytree of (N, ...) arrays (``device_put`` once, here).
+    Either pass ``batch_size`` (+ ``mode``/``seed``) to sample via
+    :class:`WorkerSharder`, or ``indices`` — a precomputed (S, M, B) or
+    (S, M) int array — for paired-draw protocols (bench_fig2).
+    """
+
+    def __init__(self, arrays, num_workers: int, *, batch_size: int = 0,
+                 seed: int = 0, mode: str = "replacement", indices=None):
+        import jax
+        import jax.numpy as jnp
+        self.arrays = jax.tree.map(
+            lambda a: jax.device_put(jnp.asarray(a)), arrays)
+        sizes = {x.shape[0] for x in jax.tree.leaves(self.arrays)}
+        assert len(sizes) == 1, f"inconsistent leading dims {sizes}"
+        self.num_samples = sizes.pop()
+        self.num_workers = num_workers
+        self.batch_size = batch_size
+        self._indices = None
+        self._cursor = 0
+        self.sharder = None
+        if indices is None:
+            assert batch_size > 0, "batch_size required without indices"
+            self.sharder = WorkerSharder(self.num_samples, num_workers,
+                                         seed=seed, mode=mode)
+        else:
+            self._indices = np.asarray(indices)
+            assert self._indices.shape[1] == num_workers, \
+                (self._indices.shape, num_workers)
+
+    @property
+    def num_steps(self) -> int | None:
+        """Steps still available from the precomputed index list (the
+        cursor advances across runs); None = unbounded sampler."""
+        if self._indices is None:
+            return None
+        return len(self._indices) - self._cursor
+
+    def index_block(self, steps: int) -> np.ndarray:
+        """(steps, M, B) (or (steps, M) for single-sample batches) int32
+        sample indices for the next phase block."""
+        if self._indices is not None:
+            blk = self._indices[self._cursor:self._cursor + steps]
+            assert len(blk) == steps, "index list exhausted"
+            self._cursor += steps
+            return np.asarray(blk, np.int32)
+        return self.sharder.next_index_block(
+            steps, self.batch_size).astype(np.int32)
+
+
+class Prefetcher:
+    """Double-buffered background staging: a daemon thread materialises
+    the wrapped iterator's items (e.g. host-stacked + device_put phase
+    blocks) up to ``depth`` ahead of the consumer. Exceptions from the
+    producer re-raise at the consumer's ``next()``. Call :meth:`close`
+    (or exhaust the iterator) if the consumer stops early, so the
+    producer thread exits instead of blocking on a full queue with
+    staged device blocks pinned."""
+
+    _END = object()
+
+    def __init__(self, it, *, depth: int = 2):
+        self._q = queue.Queue(maxsize=max(depth, 1))
+        self._err = None
+        self._stop = threading.Event()
+        self._thread = threading.Thread(
+            target=self._work, args=(iter(it),), daemon=True)
+        self._thread.start()
+
+    def _put(self, item) -> bool:
+        while not self._stop.is_set():
+            try:
+                self._q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _work(self, it):
+        try:
+            for item in it:
+                if not self._put(item):
+                    return
+        except BaseException as e:  # surfaced in __next__
+            self._err = e
+        finally:
+            self._put(self._END)
+
+    def close(self):
+        """Stop the producer and drop any staged items."""
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass
+        self._thread.join(timeout=5.0)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._stop.is_set():
+            raise StopIteration
+        item = self._q.get()
+        if item is self._END:
+            if self._err is not None:
+                raise self._err
+            raise StopIteration
+        return item

@@ -1,0 +1,144 @@
+"""Pallas fused worker-average + dispersion over the flat (M, P) plane.
+
+One averaging event in the phase engine needs, per the paper: the worker
+mean w̄ (or per-group means for the hierarchical schedule), the Eq. 4
+dispersion E||w_i - w̄||², the mean broadcast back into every worker row,
+and — with the DiLoCo-style outer optimizer — a momentum step on the
+mean. The tree path pays 3–4 separate traversals of the params pytree
+for that; here it is ONE tiled pass over the contiguous plane.
+
+Grid (P // block_p,): each program reads a full-height (M, block_p)
+column block (M is the worker count, 4–64 — far below a VMEM tile, so
+the whole worker axis rides along in one block), reduces over workers on
+the VPU, writes the broadcast block back, and emits its partial
+dispersion sum into an SMEM scalar slot; the partials are summed outside
+the kernel. P is padded to a lane multiple with zero columns, which are
+mean-0 / dispersion-0 and sliced off.
+
+On CPU (this container) the kernels run in interpret mode for
+correctness validation; on TPU the same calls compile to Mosaic. The
+engine's default CPU path uses the jnp twin in ``kernels/ref.py`` —
+identical math, no interpreter overhead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_P = 1024
+
+
+def _avg_disp_kernel(x_ref, o_ref, d_ref, *, groups):
+    x = x_ref[...]                                   # (M, block_p) f32
+    m, bp = x.shape
+    glob = jnp.mean(x, axis=0)                       # (block_p,)
+    d_ref[0, 0] = jnp.sum(jnp.square(x - glob[None])) / m
+    if groups > 1:
+        gm = jnp.mean(x.reshape(groups, m // groups, bp), axis=1)
+        out = jnp.broadcast_to(gm[:, None], (groups, m // groups, bp))
+        o_ref[...] = out.reshape(m, bp)
+    else:
+        o_ref[...] = jnp.broadcast_to(glob[None], (m, bp))
+
+
+def _avg_disp_outer_kernel(x_ref, p_ref, v_ref, o_ref, a_ref, w_ref, d_ref,
+                           *, lr, momentum, nesterov):
+    x = x_ref[...]                                   # (M, block_p) f32
+    m = x.shape[0]
+    avg = jnp.mean(x, axis=0)
+    d_ref[0, 0] = jnp.sum(jnp.square(x - avg[None])) / m
+    g = p_ref[0] - avg                               # outer gradient
+    vel = momentum * v_ref[0] + g
+    step = momentum * vel + g if nesterov else vel
+    upd = p_ref[0] - lr * step
+    a_ref[0, :] = upd
+    w_ref[0, :] = vel
+    o_ref[...] = jnp.broadcast_to(upd[None], x.shape)
+
+
+def _pad_cols(x, p_pad):
+    p = x.shape[-1]
+    if p_pad == p:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p_pad - p)])
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("groups", "block_p", "interpret"))
+def avg_disp(plane, *, groups: int = 1, block_p: int = DEFAULT_BLOCK_P,
+             interpret: bool | None = None):
+    """plane: (M, P) float32 -> (averaged plane, Eq. 4 dispersion scalar).
+
+    ``groups`` > 1 broadcasts per-group means (hierarchical inner
+    average); the dispersion is always against the global mean."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, p = plane.shape
+    assert groups >= 1 and m % groups == 0, (m, groups)
+    block_p = min(block_p, max(p, 1))
+    p_pad = -(-max(p, 1) // block_p) * block_p
+    x = _pad_cols(plane.astype(jnp.float32), p_pad)
+    nb = p_pad // block_p
+    out, dpart = pl.pallas_call(
+        functools.partial(_avg_disp_kernel, groups=groups),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((m, block_p), lambda i: (0, i))],
+        out_specs=[
+            pl.BlockSpec((m, block_p), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, p_pad), jnp.float32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x)
+    return out[:, :p], jnp.sum(dpart)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("lr", "momentum", "nesterov", "block_p",
+                                    "interpret"))
+def avg_disp_outer(plane, prev_avg, vel, *, lr: float, momentum: float,
+                   nesterov: bool = True, block_p: int = DEFAULT_BLOCK_P,
+                   interpret: bool | None = None):
+    """Fused all-average + dispersion + outer momentum step.
+
+    plane: (M, P) f32; prev_avg/vel: (P,) f32. Returns
+    (averaged plane, new_avg, new_vel, dispersion) — the flat twin of
+    ``worker_dispersion`` + ``consensus`` + ``OuterOptimizer.apply`` +
+    ``replicate`` in one pass."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, p = plane.shape
+    block_p = min(block_p, max(p, 1))
+    p_pad = -(-max(p, 1) // block_p) * block_p
+    x = _pad_cols(plane.astype(jnp.float32), p_pad)
+    pa = _pad_cols(prev_avg.astype(jnp.float32)[None], p_pad)
+    ve = _pad_cols(vel.astype(jnp.float32)[None], p_pad)
+    nb = p_pad // block_p
+    row = pl.BlockSpec((1, block_p), lambda i: (0, i))
+    out, avg, new_vel, dpart = pl.pallas_call(
+        functools.partial(_avg_disp_outer_kernel, lr=lr, momentum=momentum,
+                          nesterov=nesterov),
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((m, block_p), lambda i: (0, i)), row, row],
+        out_specs=[
+            pl.BlockSpec((m, block_p), lambda i: (0, i)), row, row,
+            pl.BlockSpec((1, 1), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, p_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, p_pad), jnp.float32),
+            jax.ShapeDtypeStruct((1, p_pad), jnp.float32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, pa, ve)
+    return out[:, :p], avg[0, :p], new_vel[0, :p], jnp.sum(dpart)

@@ -5,6 +5,7 @@ kernel body runs in Python for correctness validation; on TPU the same
 calls compile to Mosaic. The model code (repro.models.*) calls these via
 ``impl="pallas"``.
 """
+from repro.kernels.avg_disp import avg_disp, avg_disp_outer  # noqa: F401
 from repro.kernels.flash_attention import flash_attention  # noqa: F401
 from repro.kernels.rglru_scan import rglru_scan  # noqa: F401
 from repro.kernels.rwkv6_scan import rwkv6_scan  # noqa: F401

@@ -34,6 +34,46 @@ def flash_attention_ref(q, k, v, *, causal: bool, window: int = 0,
     return out.astype(q.dtype)
 
 
+def avg_disp_ref(plane, *, groups: int = 1):
+    """Fused worker-average + dispersion on the flat (M, P) float32 plane.
+
+    Returns (averaged plane, dispersion). ``groups`` > 1 averages within
+    ``groups`` contiguous worker groups (hierarchical inner average);
+    the dispersion is ALWAYS measured against the global mean — the
+    paper's Eq. 4 diagnostic E||w_i - w̄||², matching
+    ``repro.core.averaging.worker_dispersion``.
+    """
+    m, p = plane.shape
+    glob = jnp.mean(plane, axis=0)
+    disp = jnp.sum(jnp.square(plane - glob[None])) / m
+    if groups > 1:
+        gm = jnp.mean(plane.reshape(groups, m // groups, p), axis=1)
+        out = jnp.broadcast_to(gm[:, None], (groups, m // groups, p))
+        out = out.reshape(m, p)
+    else:
+        out = jnp.broadcast_to(glob[None], (m, p))
+    return out, disp
+
+
+def avg_disp_outer_ref(plane, prev_avg, vel, *, lr: float, momentum: float,
+                       nesterov: bool = True):
+    """avg_disp with the outer-optimizer momentum step folded in: the
+    consensus mean becomes the outer gradient target, the updated average
+    is broadcast back into the plane. Mirrors
+    ``repro.core.averaging.OuterOptimizer.apply`` on flat f32 buffers.
+
+    plane: (M, P); prev_avg/vel: (P,). Returns
+    (averaged plane, new_avg, new_vel, dispersion)."""
+    m = plane.shape[0]
+    avg = jnp.mean(plane, axis=0)
+    disp = jnp.sum(jnp.square(plane - avg[None])) / m
+    g = prev_avg - avg
+    vel = momentum * vel + g
+    step = momentum * vel + g if nesterov else vel
+    upd = prev_avg - lr * step
+    return jnp.broadcast_to(upd[None], plane.shape), upd, vel, disp
+
+
 def rglru_scan_ref(a, b):
     """h_t = a_t h_{t-1} + b_t, h_0 = 0. a,b: (B,S,W) fp32. Sequential."""
     def step(h, ab):

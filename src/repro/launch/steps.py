@@ -13,6 +13,8 @@ import jax.numpy as jnp
 from repro.configs import ModelConfig, ShapeConfig
 from repro.core.averaging import average_all, average_inner
 from repro.core.engine import make_worker_step
+from repro.core.flat import FlatSpec
+from repro.kernels.ref import avg_disp_ref
 from repro.models import transformer as tfm
 from repro.models.layers import cdtype
 from repro.optim import Momentum
@@ -119,11 +121,16 @@ def make_train_step(cfg: ModelConfig, *, impl: str = "xla",
 
 def make_phase_step(cfg: ModelConfig, *, phase_len: int, impl: str = "xla",
                     remat: bool = True, avg: str = "all",
-                    inner_groups: int = 0, optimizer=None):
+                    inner_groups: int = 0, optimizer=None,
+                    flat: bool = False):
     """The engine's compiled phase as a lowerable function: scan
     ``phase_len`` local steps over a stacked (K, W, ...) batch block, then
     fuse the phase-end average ("all" | "inner" | "none") into the same
     program — one dispatch, one cross-worker all-reduce per phase.
+
+    ``flat`` runs the scan carry on the (W, P) flat plane and the
+    phase-end average as the fused single-pass op, mirroring the
+    production engine's default path when lowered for a mesh.
 
     batches: leaves (K, W, ...); step0: steps completed before the phase.
     Returns (worker_params, opt_state, per-step mean losses (K,)).
@@ -132,18 +139,31 @@ def make_phase_step(cfg: ModelConfig, *, phase_len: int, impl: str = "xla",
     wstep = make_worker_step(_lm_loss_fn(cfg, impl=impl, remat=remat), opt)
 
     def phase_step(worker_params, opt_state, batches, step0):
+        spec = FlatSpec.of(worker_params) if flat else None
+
         def body(carry, inp):
-            wp, os = carry
+            wp_c, os = carry
             batch, i = inp
+            wp = spec.unpack(wp_c) if flat else wp_c
             wp, os, loss, _ = wstep(wp, os, batch, step0 + i + 1)
-            return (wp, os), jnp.mean(loss)
-        (wp, os), losses = jax.lax.scan(
-            body, (worker_params, opt_state),
-            (batches, jnp.arange(phase_len, dtype=jnp.int32)))
-        if avg == "inner" and inner_groups:
-            wp = average_inner(wp, inner_groups)
+            return ((spec.pack(wp) if flat else wp), os), jnp.mean(loss)
+
+        carry0 = (spec.pack(worker_params) if flat else worker_params,
+                  opt_state)
+        (wp_c, os), losses = jax.lax.scan(
+            body, carry0, (batches, jnp.arange(phase_len, dtype=jnp.int32)))
+        if flat:
+            if avg != "none":
+                wp_c, _ = avg_disp_ref(
+                    wp_c, groups=inner_groups if avg == "inner" and
+                    inner_groups else 1)
+            wp = spec.unpack(wp_c)
+        elif avg == "inner" and inner_groups:
+            wp = average_inner(wp_c, inner_groups)
         elif avg != "none":  # "all", or "inner" on a mesh with one group
-            wp = average_all(wp)
+            wp = average_all(wp_c)
+        else:
+            wp = wp_c
         return wp, os, losses
 
     return phase_step

@@ -54,6 +54,13 @@ def main(argv=None):
     ap.add_argument("--scan-unroll", type=int, default=1,
                     help="lax.scan unroll for the phase engine (0 = full "
                          "unroll; speeds up compute-heavy bodies on CPU)")
+    ap.add_argument("--tree-engine", action="store_true",
+                    help="carry the params pytree through the phase scan "
+                         "instead of the default flat (M, P) plane "
+                         "(PR 1 baseline path)")
+    ap.add_argument("--no-prefetch", action="store_true",
+                    help="stage phase blocks synchronously instead of via "
+                         "the double-buffered prefetch thread")
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--seed", type=int, default=0)
@@ -85,7 +92,8 @@ def main(argv=None):
     outer = (OuterOptimizer(lr=1.0, momentum=args.outer_momentum)
              if args.outer_momentum > 0 else None)
     engine = PhaseEngine(loss_fn, opt, sch, outer=outer,
-                         scan_unroll=args.scan_unroll or True)
+                         scan_unroll=args.scan_unroll or True,
+                         flat=not args.tree_engine)
 
     # per-worker independent data streams (paper §3.2: distinct shuffles)
     def batch_iter():
@@ -98,7 +106,8 @@ def main(argv=None):
 
     t0 = time.time()
     final, hist = engine.run(params, batch_iter(), num_workers=args.workers,
-                             seed=args.seed, record_every=10)
+                             seed=args.seed, record_every=10,
+                             prefetch=not args.no_prefetch)
     dt = time.time() - t0
     losses = hist["loss"]
     print(f"[train] {args.steps} steps in {dt:.1f}s "

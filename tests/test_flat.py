@@ -1,0 +1,416 @@
+"""Flat parameter plane + fused avg_disp kernel + device data plane.
+
+Three layers of guarantees:
+  1. FlatSpec pack→unpack is bit-exact for nested trees with mixed
+     (float32 / bfloat16 / float16) dtypes — deterministic sweeps plus a
+     hypothesis property when available.
+  2. The Pallas avg_disp kernels (interpret mode on CPU) match the
+     kernels/ref.py jnp twins, and both match the tree-path operators
+     (consensus / worker_dispersion / average_inner / OuterOptimizer).
+  3. The flat-plane engine (default), the tree-path engine, and the
+     indexed on-device data plane all produce the host loop's trajectory
+     for all 5 schedules.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (AveragingSchedule, FlatSpec, OuterOptimizer,
+                        PhaseEngine, consensus)
+from repro.core.averaging import (average_inner, worker_dispersion)
+from repro.data.pipeline import DeviceDataset, Prefetcher, WorkerSharder, \
+    worker_batches
+from repro.kernels.avg_disp import avg_disp, avg_disp_outer
+from repro.kernels.ref import avg_disp_outer_ref, avg_disp_ref
+from repro.optim import SGD
+
+KEY = jax.random.PRNGKey(0)
+WORKERS, STEPS, DIM, SAMPLES = 4, 65, 12, 256
+
+
+# --------------------------------------------------------------------------
+# 1. FlatSpec roundtrip
+# --------------------------------------------------------------------------
+
+def _mixed_tree(m, seed=0):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {
+        "dense": {"w": jax.random.normal(ks[0], (m, 3, 5)),
+                  "b": jax.random.normal(ks[1], (m, 5)).astype(jnp.bfloat16)},
+        "head": (jax.random.normal(ks[2], (m, 7)).astype(jnp.float16),
+                 jax.random.normal(ks[3], (m,))),  # scalar-per-worker leaf
+    }
+
+
+@pytest.mark.parametrize("m", [1, 2, 4, 8])
+def test_pack_unpack_bit_exact_mixed_dtypes(m):
+    tree = _mixed_tree(m, seed=m)
+    spec = FlatSpec.of(tree)
+    plane = spec.pack(tree)
+    assert plane.shape == (m, 15 + 5 + 7 + 1) and plane.dtype == jnp.float32
+    back = spec.unpack(plane)
+    assert jax.tree.structure(back) == jax.tree.structure(tree)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(
+            np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_pack1_unpack1_roundtrip_and_dtype_override():
+    tree = jax.tree.map(lambda x: x[0], _mixed_tree(2))
+    spec = FlatSpec.of(tree, worker_axis=False)
+    vec = spec.pack1(tree)
+    assert vec.shape == (spec.width,)
+    back = spec.unpack1(vec)
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    f32 = spec.unpack1(vec, dtypes=jnp.float32)
+    assert all(x.dtype == jnp.float32 for x in jax.tree.leaves(f32))
+
+
+def test_flatspec_rejects_unembeddable_dtypes():
+    assert not FlatSpec.supports({"i": jnp.zeros((2, 3), jnp.int32)})
+    with pytest.raises(TypeError):
+        FlatSpec.of({"i": jnp.zeros((2, 3), jnp.int32)})
+    assert FlatSpec.supports(_mixed_tree(2))
+
+
+def test_pack_unpack_property():
+    """Hypothesis property: arbitrary nested shapes/dtypes roundtrip."""
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    dtypes = st.sampled_from([jnp.float32, jnp.bfloat16, jnp.float16])
+    shapes = st.lists(st.sampled_from([(3,), (2, 4), (1, 1, 5), ()]),
+                      min_size=1, max_size=4)
+
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 10_000), m=st.sampled_from([1, 2, 4]),
+           shapes=shapes, data=st.data())
+    def prop(seed, m, shapes, data):
+        rng = np.random.default_rng(seed)
+        tree = {}
+        for i, s in enumerate(shapes):
+            dt = data.draw(dtypes)
+            tree[f"l{i}"] = jnp.asarray(
+                rng.standard_normal((m,) + s), jnp.float32).astype(dt)
+        spec = FlatSpec.of(tree)
+        back = spec.unpack(spec.pack(tree))
+        for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert a.dtype == b.dtype
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+
+    prop()
+
+
+# --------------------------------------------------------------------------
+# 2. avg_disp kernel == ref == tree operators
+# --------------------------------------------------------------------------
+
+class TestAvgDispKernel:
+    @pytest.mark.parametrize("m,p,groups,bp", [
+        (4, 300, 1, 128),   # padding path
+        (8, 1024, 1, 256),
+        (8, 1024, 2, 512),
+        (8, 96, 4, 96),
+        (16, 33, 1, 1024),  # single partial block
+    ])
+    def test_matches_ref(self, m, p, groups, bp):
+        x = jax.random.normal(jax.random.PRNGKey(p), (m, p))
+        out, disp = avg_disp(x, groups=groups, block_p=bp)
+        oref, dref = avg_disp_ref(x, groups=groups)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(oref),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(float(disp), float(dref), rtol=1e-5)
+
+    @pytest.mark.parametrize("nesterov", [True, False])
+    @pytest.mark.parametrize("bp", [128, 1024])
+    def test_outer_matches_ref(self, nesterov, bp):
+        ks = jax.random.split(KEY, 3)
+        x = jax.random.normal(ks[0], (8, 300))
+        prev = jax.random.normal(ks[1], (300,))
+        vel = jax.random.normal(ks[2], (300,)) * 0.1
+        got = avg_disp_outer(x, prev, vel, lr=0.8, momentum=0.5,
+                             nesterov=nesterov, block_p=bp)
+        ref = avg_disp_outer_ref(x, prev, vel, lr=0.8, momentum=0.5,
+                                 nesterov=nesterov)
+        for a, b in zip(got, ref):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-5, atol=1e-6)
+
+    def test_ref_matches_tree_operators(self):
+        """The fused flat op == consensus/average_inner + Eq. 4
+        dispersion on the equivalent pytree."""
+        tree = {"a": jax.random.normal(KEY, (8, 11)),
+                "b": {"c": jax.random.normal(KEY, (8, 2, 3))}}
+        spec = FlatSpec.of(tree)
+        plane = spec.pack(tree)
+        for groups in (1, 2, 4):
+            out, disp = avg_disp_ref(plane, groups=groups)
+            want = average_inner(tree, groups) if groups > 1 else \
+                jax.tree.map(lambda x: jnp.broadcast_to(
+                    jnp.mean(x, axis=0, keepdims=True), x.shape), tree)
+            for a, b in zip(jax.tree.leaves(spec.unpack(out)),
+                            jax.tree.leaves(want)):
+                np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                           rtol=1e-6, atol=1e-7)
+            np.testing.assert_allclose(float(disp),
+                                       float(worker_dispersion(tree)),
+                                       rtol=1e-5)
+
+    def test_outer_ref_matches_outer_optimizer(self):
+        tree = {"a": jax.random.normal(KEY, (8, 11))}
+        spec = FlatSpec.of(tree)
+        plane = spec.pack(tree)
+        prev = {"a": jax.random.normal(jax.random.PRNGKey(7), (11,))}
+        outer = OuterOptimizer(lr=0.7, momentum=0.4, nesterov=True)
+        vel = outer.init(prev)
+        _, upd_vec, vel_vec, _ = avg_disp_outer_ref(
+            plane, spec.pack1(prev), spec.pack1(vel), lr=0.7, momentum=0.4,
+            nesterov=True)
+        want_upd, want_vel = outer.apply(prev, consensus(tree), vel)
+        np.testing.assert_allclose(np.asarray(upd_vec),
+                                   np.asarray(want_upd["a"]), rtol=1e-6)
+        np.testing.assert_allclose(np.asarray(vel_vec),
+                                   np.asarray(want_vel["a"]), rtol=1e-6)
+
+
+# --------------------------------------------------------------------------
+# 3. flat engine == tree engine == host loop, all 5 schedules
+# --------------------------------------------------------------------------
+
+SCHEDULES = {
+    "oneshot": AveragingSchedule("oneshot"),
+    "minibatch": AveragingSchedule("minibatch"),
+    "periodic": AveragingSchedule("periodic", 8),
+    "stochastic": AveragingSchedule("stochastic", zeta=0.2),
+    "hierarchical": AveragingSchedule("hierarchical", inner_phase_len=5,
+                                      outer_phase_len=20, inner_groups=2),
+}
+
+
+def _convex_problem(seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((SAMPLES, DIM))
+    y = X @ rng.standard_normal(DIM) + 0.1 * rng.standard_normal(SAMPLES)
+    return X, y
+
+
+def _loss_fn(params, batch, rng):
+    r = batch["x"] @ params["w"]["inner"] - batch["y"]
+    return 0.5 * jnp.mean(r * r), {}
+
+
+def _params():
+    return {"w": {"inner": jnp.zeros(DIM)}}
+
+
+def _index_draws(seed=1, steps=STEPS):
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, SAMPLES, (steps, WORKERS, 8))
+
+
+def _batches(X, y, idx):
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    for t in range(len(idx)):
+        yield {"x": Xj[idx[t]], "y": yj[idx[t]]}
+
+
+@pytest.mark.parametrize("name", list(SCHEDULES))
+def test_flat_tree_indexed_all_match_host(name):
+    """Default (flat) engine, tree-path engine, and the on-device indexed
+    data plane reproduce the host loop for every schedule."""
+    X, y = _convex_problem()
+    idx = _index_draws()
+    kw = dict(num_workers=WORKERS, seed=3, record_every=1)
+
+    def final(engine, data, **extra):
+        f, h = engine.run(_params(), data, **kw, **extra)
+        return np.asarray(f["w"]["inner"]), h
+
+    flat_eng = PhaseEngine(_loss_fn, SGD(lr=0.05), SCHEDULES[name])
+    tree_eng = PhaseEngine(_loss_fn, SGD(lr=0.05), SCHEDULES[name],
+                           flat=False)
+    assert flat_eng.flat and not tree_eng.flat
+    f_flat, h_flat = final(flat_eng, _batches(X, y, idx))
+    f_tree, h_tree = final(tree_eng, _batches(X, y, idx))
+    ds = DeviceDataset({"x": X, "y": y}, WORKERS, indices=idx)
+    f_idx, h_idx = final(flat_eng, ds)
+    f_host, h_host = flat_eng.run_host(_params(), _batches(X, y, idx),
+                                       num_workers=WORKERS, seed=3,
+                                       record_every=1)
+    f_host = np.asarray(f_host["w"]["inner"])
+
+    np.testing.assert_array_equal(f_flat, f_idx)  # same program modulo gather
+    assert h_flat == h_idx
+    for got in (f_flat, f_tree):
+        np.testing.assert_allclose(got, f_host, rtol=1e-6, atol=1e-7)
+    for h in (h_flat, h_tree):
+        assert h["averages"] == h_host["averages"]
+        assert [t for t, _ in h["dispersion"]] == \
+            [t for t, _ in h_host["dispersion"]]
+        np.testing.assert_allclose([v for _, v in h["dispersion"]],
+                                   [v for _, v in h_host["dispersion"]],
+                                   rtol=1e-5, atol=1e-8)
+        np.testing.assert_allclose([v for _, v in h["loss"]],
+                                   [v for _, v in h_host["loss"]],
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_flat_engine_with_outer_matches_tree_engine():
+    X, y = _convex_problem()
+    idx = _index_draws(seed=5)
+    mk = lambda flat: PhaseEngine(
+        _loss_fn, SGD(lr=0.05), AveragingSchedule("periodic", 8),
+        outer=OuterOptimizer(lr=0.8, momentum=0.5), flat=flat)
+    f_a, h_a = mk(True).run(_params(), _batches(X, y, idx),
+                            num_workers=WORKERS, seed=5, record_every=1)
+    f_b, h_b = mk(False).run(_params(), _batches(X, y, idx),
+                             num_workers=WORKERS, seed=5, record_every=1)
+    np.testing.assert_allclose(np.asarray(f_a["w"]["inner"]),
+                               np.asarray(f_b["w"]["inner"]),
+                               rtol=1e-6, atol=1e-7)
+    assert h_a["averages"] == h_b["averages"]
+
+
+@pytest.mark.filterwarnings(
+    "ignore:Casting from complex:DeprecationWarning")
+def test_flat_falls_back_for_unembeddable_leaves():
+    """Trees FlatSpec cannot embed (here: a complex64 leaf) still run
+    under flat=True — the engine silently takes the tree path."""
+    X, y = _convex_problem()
+    idx = _index_draws()
+
+    def loss(params, batch, rng):
+        r = batch["x"] @ params["w"] - batch["y"]
+        return 0.5 * jnp.mean(r * r) + 0.0 * jnp.real(jnp.sum(params["c"])), {}
+
+    p0 = {"w": jnp.zeros(DIM), "c": jnp.zeros(3, jnp.complex64)}
+    assert not FlatSpec.supports(p0)
+    eng = PhaseEngine(loss, SGD(lr=0.05), AveragingSchedule("periodic", 8))
+    f, hist = eng.run(p0, _batches(X, y, idx), num_workers=WORKERS, seed=0)
+    assert hist["averages"] == STEPS // 8
+    assert np.isfinite(np.asarray(f["w"])).all()
+
+
+def test_device_dataset_sampler_and_steps():
+    """Sampler-backed DeviceDataset: steps= bounds the run; replacement
+    draws come from the stacked single-stream generator."""
+    X, y = _convex_problem()
+    ds = DeviceDataset({"x": X, "y": y}, WORKERS, batch_size=8, seed=4,
+                       mode="replacement")
+    eng = PhaseEngine(_loss_fn, SGD(lr=0.05), AveragingSchedule("periodic", 8))
+    _, hist = eng.run(_params(), ds, num_workers=WORKERS, seed=0,
+                      record_every=8, steps=32)
+    assert hist["averages"] == 4
+    assert [t for t, _ in hist["loss"]] == [8, 16, 24, 32]
+
+
+def test_prefetch_matches_sync_staging():
+    X, y = _convex_problem()
+    idx = _index_draws(seed=9)
+    eng = PhaseEngine(_loss_fn, SGD(lr=0.05),
+                      AveragingSchedule("stochastic", zeta=0.3))
+    f_a, h_a = eng.run(_params(), _batches(X, y, idx), num_workers=WORKERS,
+                       seed=1, record_every=1, prefetch=True)
+    f_b, h_b = eng.run(_params(), _batches(X, y, idx), num_workers=WORKERS,
+                       seed=1, record_every=1, prefetch=False)
+    np.testing.assert_array_equal(np.asarray(f_a["w"]["inner"]),
+                                  np.asarray(f_b["w"]["inner"]))
+    assert h_a == h_b
+
+
+def test_indexed_run_clamps_to_available_indices():
+    """steps= beyond the precomputed index list ends like a streaming
+    source (partial history), not mid-run assertion."""
+    X, y = _convex_problem()
+    idx = _index_draws(steps=24)
+    ds = DeviceDataset({"x": X, "y": y}, WORKERS, indices=idx)
+    eng = PhaseEngine(_loss_fn, SGD(lr=0.05), AveragingSchedule("periodic", 8))
+    _, hist = eng.run(_params(), ds, num_workers=WORKERS, seed=0,
+                      record_every=8, steps=1000)
+    assert [t for t, _ in hist["loss"]] == [8, 16, 24]
+    assert ds.num_steps == 0  # cursor exhausted, not overrun
+
+
+def test_prefetcher_close_unblocks_producer():
+    produced = []
+
+    def src():
+        for i in range(100):
+            produced.append(i)
+            yield i
+
+    pf = Prefetcher(src(), depth=1)
+    assert next(pf) == 0
+    pf.close()  # consumer abandons: producer must exit, not block
+    assert not pf._thread.is_alive()
+    assert len(produced) < 100
+    with pytest.raises(StopIteration):
+        next(pf)
+
+
+def test_prefetcher_propagates_producer_errors():
+    def bad():
+        yield 1
+        raise ValueError("boom")
+
+    pf = Prefetcher(bad())
+    assert next(pf) == 1
+    with pytest.raises(ValueError, match="boom"):
+        for _ in pf:
+            pass
+
+
+# --------------------------------------------------------------------------
+# Satellites: finite streams, sharder vectorization, run_host worker_eval
+# --------------------------------------------------------------------------
+
+def test_worker_batches_finite_stream_ends_cleanly():
+    """PEP 479 regression: an exhausted stream must END the generator,
+    not raise RuntimeError; a partial final worker group is dropped."""
+    stream = iter([np.full(3, i) for i in range(7)])
+    got = list(worker_batches(stream, 2))  # 7 = 3 full groups + partial
+    assert len(got) == 3
+    assert all(b.shape == (2, 3) for b in got)
+    np.testing.assert_array_equal(got[2][1], np.full(3, 5))
+
+
+def test_sharder_replacement_block_equals_successive_draws():
+    a = WorkerSharder(100, 4, seed=5, mode="replacement")
+    b = WorkerSharder(100, 4, seed=5, mode="replacement")
+    blk = a.next_index_block(6, 8)
+    assert blk.shape == (6, 4, 8) and blk.min() >= 0 and blk.max() < 100
+    np.testing.assert_array_equal(
+        blk, np.stack([b.next_indices(8) for _ in range(6)]))
+
+
+def test_sharder_permute_block_walks_epoch_cursors():
+    a = WorkerSharder(32, 2, seed=1, mode="permute")
+    blk = a.next_index_block(4, 8)  # exactly one epoch per worker
+    assert blk.shape == (4, 2, 8)
+    for w in range(2):
+        assert sorted(blk[:, w].ravel()) == list(range(32))
+
+
+def test_run_host_records_worker_eval():
+    X, y = _convex_problem()
+    idx = _index_draws()
+    eng = PhaseEngine(_loss_fn, SGD(lr=0.05), AveragingSchedule("periodic", 8))
+
+    def worker_eval(wp):
+        assert jax.tree.leaves(wp)[0].shape[0] == WORKERS
+        return 2.0
+
+    _, h_eng = eng.run(_params(), _batches(X, y, idx), num_workers=WORKERS,
+                       seed=0, record_every=20, worker_eval_fn=worker_eval)
+    _, h_host = eng.run_host(_params(), _batches(X, y, idx),
+                             num_workers=WORKERS, seed=0, record_every=20,
+                             worker_eval_fn=worker_eval)
+    assert set(h_eng) == set(h_host)  # identical history dict keys
+    assert h_eng["worker_eval"] == h_host["worker_eval"] == \
+        [(20, 2.0), (40, 2.0), (60, 2.0)]
