@@ -1,31 +1,51 @@
-"""Phase-engine benchmark on the reduced convex (least-squares) workload.
+"""Phase-engine benchmark on reduced convex workloads.
 
-Four runtimes, same periodic(K) schedule on identical sample draws:
+Runtimes, same periodic(K) schedule on identical sample draws:
 
-  host         — PhaseEngine.run_host: one jit dispatch per step,
-                 averaging decided on host (the seed runtime).
-  tree         — PR 1 engine: compiled phase scans, params-pytree carry,
-                 per-phase host staging (tree_stack), no prefetch.
-  flat_staged  — flat (M, P) plane carry + fused avg_disp averaging,
-                 still host-staged (sync and prefetch variants — the
-                 prefetch-vs-stack column).
-  flat_indexed — the full device-resident pipeline: flat plane + fused
-                 kernel + on-device data plane (DeviceDataset index
-                 blocks gathered inside the scan; zero host stacking).
+  host          — PhaseEngine.run_host: one jit dispatch per step,
+                  averaging decided on host (the seed runtime).
+  tree          — PR 1 engine: compiled phase scans, params-pytree carry.
+  flat_staged   — flat (M, P) plane + fused averaging, host-staged from
+                  an in-memory list (sync).
+  flat_prefetch — same list source with prefetch=True: run() now detects
+                  the materialized source and skips the prefetch thread,
+                  so this column ≈ flat_staged (the PR 2 regression —
+                  speedup_prefetch_vs_stack < 1 on every row — is gone).
+  stream_sync / stream_prefetch — a TRUE stream source (host indexing +
+                  device transfer per step): the double-buffered
+                  Prefetcher only ever engages here.
+  flat_indexed  — PR 2 engine: flat plane + on-device index blocks, but
+                  per-step spec.unpack/spec.pack round-trips around the
+                  tree-mapped optimizer (fused_opt=False).
+  flat_fusedopt — PR 3 flat-NATIVE engine: optimizer state as (M, P)
+                  planes in the scan carry, fused opt_step update —
+                  zero per-step pack/unpack.
+  flat_sharded  — flat_fusedopt under shard_map over the available
+                  devices (psum averaging collective); needs >= 2
+                  devices (CI runs it under
+                  XLA_FLAGS=--xla_force_host_platform_device_count=8).
 
-Sweeps K in {1, 4, 8, 64, 512} x workers in {4, 16}; the acceptance
-column is ``speedup_flat_vs_tree`` (tree / flat_indexed) on the
-averaging-heavy schedules (minibatch / periodic K<=8). Also times the
-WorkerSharder setup cost: the batched replacement draw vs the PR 1
-per-worker python loop. Emits JSON via benchmarks/common.py
+Two Momentum workloads: ``ls`` (single-leaf least squares — PR 1/2
+continuity; pytree overhead is negligible at one leaf) and ``deep`` (a
+36-leaf narrow tanh MLP — the regime the fused optimizer planes target;
+the acceptance column ``speedup_fusedopt_vs_flat`` is flat_indexed /
+flat_fusedopt). Deep rows sweep scan_unroll: rolled scans let XLA elide
+much of the tree path's per-step pack/unpack, unrolled scans (the
+CPU-recommended setting for compute-heavy bodies) expose it — the
+flat-native carry is robust to both.
+
+Also times the WorkerSharder batched replacement draw and, with >= 2
+devices, records whether the gather-collective sharded run is
+bit-identical to single-device. Emits JSON via benchmarks/common.py
 (results/bench_engine.json). ``--tiny`` runs CI-smoke shapes (no host
-baseline, no JSON).
+baseline; pass ``--save`` to still write JSON for the CI artifact).
 """
 from __future__ import annotations
 
-import sys
+import argparse
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -33,22 +53,59 @@ from benchmarks.common import emit, save
 from repro.core import AveragingSchedule, PhaseEngine
 from repro.data import convex_dataset
 from repro.data.pipeline import DeviceDataset, WorkerSharder
-from repro.optim import SGD
+from repro.launch.mesh import make_worker_mesh
+from repro.optim import Momentum
 
 DIM, SAMPLES, STEPS = 64, 1024, 512
 PHASE_LENS = (1, 4, 8, 64, 512)
+DEEP_PHASE_LENS = (1, 8, 64)
 WORKER_COUNTS = (4, 16)
 AVG_HEAVY_K = 8  # minibatch / periodic K<=8: the averaging-heavy regime
+DEEP_LAYERS, DEEP_WIDTH = 16, 32
 
 
-def loss_fn(params, batch, rng):
-    return 0.5 * jnp.square(batch["x"] @ params["w"] - batch["y"]), {}
+def ls_mean_loss(params, batch, rng):
+    r = batch["x"] @ params["w"] - batch["y"]
+    return 0.5 * jnp.mean(r * r), {}
 
 
-def make_engine(phase_len: int, *, flat: bool):
-    sch = (AveragingSchedule("minibatch") if phase_len == 1
-           else AveragingSchedule("periodic", phase_len))
-    return PhaseEngine(loss_fn, SGD(lr=0.01), sch, flat=flat)
+def deep_params(dim):
+    ks = jax.random.split(jax.random.PRNGKey(0), DEEP_LAYERS + 1)
+    h = DEEP_WIDTH
+    p = {"in": {"w": jax.random.normal(ks[0], (dim, h)) * 0.3,
+                "b": jnp.zeros(h)}}
+    for i in range(DEEP_LAYERS):
+        p[f"h{i:02d}"] = {"w": jax.random.normal(ks[i + 1], (h, h)) * 0.3,
+                          "b": jnp.zeros(h)}
+    p["out"] = {"w": jnp.zeros((h, 1)), "b": jnp.zeros(1)}
+    return p
+
+
+def deep_loss(params, batch, rng):
+    h = jnp.tanh(batch["x"] @ params["in"]["w"] + params["in"]["b"])
+    for i in range(DEEP_LAYERS):
+        h = jnp.tanh(h @ params[f"h{i:02d}"]["w"] + params[f"h{i:02d}"]["b"])
+    out = (h @ params["out"]["w"] + params["out"]["b"])[:, 0]
+    return 0.5 * jnp.mean(jnp.square(out - batch["y"])), {}
+
+
+def schedule(phase_len: int) -> AveragingSchedule:
+    return (AveragingSchedule("minibatch") if phase_len == 1
+            else AveragingSchedule("periodic", phase_len))
+
+
+def make_engine(loss_fn, phase_len: int, *, flat: bool = True,
+                fused: bool = True, unroll: int = 1, mesh=None):
+    return PhaseEngine(loss_fn, Momentum(lr=0.01, mu=0.9),
+                       schedule(phase_len), flat=flat, fused_opt=fused,
+                       scan_unroll=unroll, mesh=mesh)
+
+
+def worker_mesh(workers: int):
+    """The production worker mesh when enough devices are visible to
+    actually shard, else None (sharded columns skipped)."""
+    mesh = make_worker_mesh(workers)
+    return mesh if mesh.shape["data"] >= 2 else None
 
 
 def time_run(fn, steps, *, reps: int = 3) -> float:
@@ -93,69 +150,173 @@ def _timed(fn):
     return time.perf_counter() - t0
 
 
-def run(tiny: bool = False):
+def check_sharded_bitexact(loss_fn, params, arrays, idx, workers,
+                           mesh) -> bool:
+    """gather-collective sharded run == single-device run, bitwise —
+    final params AND the full history (losses, dispersions, decisions).
+    Holds for SGD/Momentum (mul-add update math lowers identically in
+    both compilation contexts on every backend tested); AdamW's
+    div/sqrt and deep matmul losses agree to f32 roundoff instead, so
+    the recorded guarantee is scoped to the paper's Momentum recipe on
+    the convex workload (tests/test_sharded.py covers all 5
+    schedules)."""
+    kw = dict(num_workers=workers, seed=3, record_every=1)
+    sch = AveragingSchedule("periodic", 8)
+    single = PhaseEngine(loss_fn, Momentum(lr=0.01, mu=0.9), sch)
+    f0, h0 = single.run(params, DeviceDataset(arrays, workers, indices=idx),
+                        **kw)
+    sharded = PhaseEngine(loss_fn, Momentum(lr=0.01, mu=0.9), sch,
+                          mesh=mesh, collective="gather")
+    f1, h1 = sharded.run(params, DeviceDataset(arrays, workers,
+                                               indices=idx), **kw)
+    same = all(bool((np.asarray(a) == np.asarray(b)).all())
+               for a, b in zip(jax.tree.leaves(f0), jax.tree.leaves(f1)))
+    return same and h0 == h1
+
+
+def run(tiny: bool = False, workers_override: int | None = None,
+        save_json: bool | None = None):
     steps = 64 if tiny else STEPS
     phase_lens = (1, 8) if tiny else PHASE_LENS
+    deep_phase_lens = (8,) if tiny else DEEP_PHASE_LENS
     worker_counts = (4,) if tiny else WORKER_COUNTS
+    if workers_override:
+        worker_counts = (workers_override,)
     dim, samples = (16, 256) if tiny else (DIM, SAMPLES)
     reps = 1 if tiny else 3
+    if save_json is None:
+        save_json = not tiny
 
     X, y, _ = convex_dataset("ls", samples, dim, sparsity=0.2, noise=0.1,
                              seed=0)
+    Xn, yn = np.asarray(X), np.asarray(y)
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
     w0 = {"w": jnp.zeros(dim)}
+
     results = []
     for workers in worker_counts:
+        mesh = worker_mesh(workers)
         rng = np.random.default_rng(0)
-        idx = rng.integers(0, samples, size=(steps, workers))
-        Xj, yj = jnp.asarray(X), jnp.asarray(y)
+        idx = rng.integers(0, samples, size=(steps, workers, 8))
         batches = [{"x": Xj[idx[t]], "y": yj[idx[t]]} for t in range(steps)]
+
+        def stream():
+            for t in range(steps):
+                yield {"x": jnp.asarray(Xn[idx[t]]),
+                       "y": jnp.asarray(yn[idx[t]])}
+
         for k in phase_lens:
             # small-K schedules still scan big blocks: averaging decisions
             # are per-step and on-device, so one compiled block may span
             # many averaging periods
             block = max(k, 64)
-            tree_eng = make_engine(k, flat=False)
-            flat_eng = make_engine(k, flat=True)
+            tree_eng = make_engine(ls_mean_loss, k, flat=False)
+            pr2_eng = make_engine(ls_mean_loss, k, fused=False)
+            fused_eng = make_engine(ls_mean_loss, k)
 
-            def staged(eng, prefetch):
-                return lambda: eng.run(w0, batches, num_workers=workers,
+            def staged(eng, data_fn, prefetch):
+                # data_fn: factory — generators are consumed per run
+                return lambda: eng.run(w0, data_fn(), num_workers=workers,
                                        seed=0, phase_len=block,
                                        prefetch=prefetch)
 
-            def indexed():
-                ds = DeviceDataset({"x": Xj, "y": yj}, workers, indices=idx)
-                return flat_eng.run(w0, ds, num_workers=workers, seed=0,
-                                    phase_len=block)
+            def indexed(eng):
+                return lambda: eng.run(
+                    w0, DeviceDataset({"x": Xj, "y": yj}, workers,
+                                      indices=idx),
+                    num_workers=workers, seed=0, phase_len=block)
 
-            row = {"workers": workers, "phase_len": k, "steps": steps}
+            row = {"workload": "ls", "workers": workers, "phase_len": k,
+                   "steps": steps, "scan_unroll": 1}
             if not tiny:
                 row["host_ms_per_step"] = time_run(
                     lambda: tree_eng.run_host(w0, batches,
                                               num_workers=workers, seed=0),
                     steps, reps=reps)
             row["tree_ms_per_step"] = time_run(
-                staged(tree_eng, False), steps, reps=reps)
+                staged(tree_eng, lambda: batches, False), steps, reps=reps)
             row["flat_staged_ms_per_step"] = time_run(
-                staged(flat_eng, False), steps, reps=reps)
+                staged(fused_eng, lambda: batches, False), steps, reps=reps)
             row["flat_prefetch_ms_per_step"] = time_run(
-                staged(flat_eng, True), steps, reps=reps)
+                staged(fused_eng, lambda: batches, True), steps, reps=reps)
+            row["stream_sync_ms_per_step"] = time_run(
+                staged(fused_eng, stream, False), steps, reps=reps)
+            row["stream_prefetch_ms_per_step"] = time_run(
+                staged(fused_eng, stream, True), steps, reps=reps)
             row["flat_indexed_ms_per_step"] = time_run(
-                indexed, steps, reps=reps)
+                indexed(pr2_eng), steps, reps=reps)
+            row["flat_fusedopt_ms_per_step"] = time_run(
+                indexed(fused_eng), steps, reps=reps)
+            if mesh is not None:
+                sharded_eng = make_engine(ls_mean_loss, k, mesh=mesh)
+                row["flat_sharded_ms_per_step"] = time_run(
+                    indexed(sharded_eng), steps, reps=reps)
             row["speedup_flat_vs_tree"] = (row["tree_ms_per_step"] /
-                                           row["flat_indexed_ms_per_step"])
+                                           row["flat_fusedopt_ms_per_step"])
+            row["speedup_fusedopt_vs_flat"] = (
+                row["flat_indexed_ms_per_step"] /
+                row["flat_fusedopt_ms_per_step"])
             row["speedup_prefetch_vs_stack"] = (
                 row["flat_staged_ms_per_step"] /
                 row["flat_prefetch_ms_per_step"])
+            row["speedup_stream_prefetch"] = (
+                row["stream_sync_ms_per_step"] /
+                row["stream_prefetch_ms_per_step"])
             if not tiny:
                 row["speedup_vs_host"] = (row["host_ms_per_step"] /
-                                          row["flat_indexed_ms_per_step"])
+                                          row["flat_fusedopt_ms_per_step"])
             results.append(row)
-            emit(f"engine_K{k}_M{workers}",
-                 row["flat_indexed_ms_per_step"] * 1e3,
+            emit(f"engine_ls_K{k}_M{workers}",
+                 row["flat_fusedopt_ms_per_step"] * 1e3,
                  f"tree_ms/step={row['tree_ms_per_step']:.3f};"
-                 f"flat_indexed_ms/step={row['flat_indexed_ms_per_step']:.3f};"
+                 f"fusedopt_ms/step="
+                 f"{row['flat_fusedopt_ms_per_step']:.3f};"
                  f"flat_vs_tree={row['speedup_flat_vs_tree']:.2f}x;"
-                 f"prefetch_vs_stack={row['speedup_prefetch_vs_stack']:.2f}x")
+                 f"fusedopt_vs_flat="
+                 f"{row['speedup_fusedopt_vs_flat']:.2f}x;"
+                 f"prefetch_vs_stack="
+                 f"{row['speedup_prefetch_vs_stack']:.2f}x")
+
+        # deep multi-leaf Momentum workload: the fused-optimizer target
+        dp = deep_params(dim)
+        for k in deep_phase_lens:
+            for unroll in ((4,) if tiny else (1, 4)):
+                block = 256 if not tiny else 64
+                pr2_eng = make_engine(deep_loss, k, fused=False,
+                                      unroll=unroll)
+                fused_eng = make_engine(deep_loss, k, unroll=unroll)
+
+                def indexed_deep(eng):
+                    return lambda: eng.run(
+                        dp, DeviceDataset({"x": Xj, "y": yj}, workers,
+                                          indices=idx),
+                        num_workers=workers, seed=0, phase_len=block)
+
+                row = {"workload": "deep", "workers": workers,
+                       "phase_len": k, "steps": steps,
+                       "scan_unroll": unroll,
+                       "num_leaves": len(jax.tree.leaves(dp))}
+                row["flat_indexed_ms_per_step"] = time_run(
+                    indexed_deep(pr2_eng), steps, reps=reps)
+                row["flat_fusedopt_ms_per_step"] = time_run(
+                    indexed_deep(fused_eng), steps, reps=reps)
+                if mesh is not None:
+                    row["flat_sharded_ms_per_step"] = time_run(
+                        indexed_deep(make_engine(deep_loss, k,
+                                                 unroll=unroll, mesh=mesh)),
+                        steps, reps=reps)
+                row["speedup_fusedopt_vs_flat"] = (
+                    row["flat_indexed_ms_per_step"] /
+                    row["flat_fusedopt_ms_per_step"])
+                results.append(row)
+                emit(f"engine_deep_K{k}_M{workers}_u{unroll}",
+                     row["flat_fusedopt_ms_per_step"] * 1e3,
+                     f"indexed_ms/step="
+                     f"{row['flat_indexed_ms_per_step']:.3f};"
+                     f"fusedopt_ms/step="
+                     f"{row['flat_fusedopt_ms_per_step']:.3f};"
+                     f"fusedopt_vs_flat="
+                     f"{row['speedup_fusedopt_vs_flat']:.2f}x")
 
     sharder = bench_sharder(max(worker_counts), steps)
     emit("sharder_replacement", sharder["sharder_block_us"],
@@ -163,16 +324,56 @@ def run(tiny: bool = False):
          f"block_us={sharder['sharder_block_us']:.0f};"
          f"speedup={sharder['sharder_speedup']:.1f}x")
 
+    sharded_bitexact = None
+    mesh = worker_mesh(max(worker_counts))
+    if mesh is not None:
+        m = max(worker_counts)
+        rng = np.random.default_rng(1)
+        cidx = rng.integers(0, samples, size=(33, m, 8))
+        sharded_bitexact = check_sharded_bitexact(
+            ls_mean_loss, {"w": jnp.zeros(dim)}, {"x": Xj, "y": yj},
+            cidx, m, mesh)
+        emit("engine_sharded_bitexact", 0.0 if sharded_bitexact else 1.0,
+             f"gather-collective == single-device: {sharded_bitexact}")
+        if not sharded_bitexact:
+            # the bench-smoke CI job gates on this: a regression in the
+            # gather-collective bit-identity must fail the PR, not just
+            # flip a field in the JSON artifact
+            raise SystemExit(
+                "sharded gather-collective run is NOT bit-identical to "
+                "single-device")
+
+    fused = [r["speedup_fusedopt_vs_flat"] for r in results
+             if r["workload"] == "deep"]
     heavy = [r["speedup_flat_vs_tree"] for r in results
-             if r["phase_len"] <= AVG_HEAVY_K]
-    print(f"min flat-vs-tree speedup at K<={AVG_HEAVY_K}: {min(heavy):.2f}x")
-    if not tiny:
+             if r["workload"] == "ls" and r["phase_len"] <= AVG_HEAVY_K]
+    if heavy:
+        print(f"min flat-vs-tree speedup at K<={AVG_HEAVY_K}: "
+              f"{min(heavy):.2f}x")
+    if fused:
+        print(f"max fusedopt-vs-PR2-flat speedup (deep workload): "
+              f"{max(fused):.2f}x")
+    if save_json:
         save("bench_engine", {
-            "workload": {"dim": DIM, "samples": SAMPLES, "steps": STEPS,
-                         "kind": "ls"},
+            "workload": {"dim": dim, "samples": samples, "steps": steps,
+                         "kind": "ls+deep", "optimizer": "momentum",
+                         "deep_layers": DEEP_LAYERS,
+                         "deep_width": DEEP_WIDTH},
+            "devices": len(jax.devices()),
+            "sharded_gather_bitexact": sharded_bitexact,
             "rows": results, "sharder": sharder})
     return results
 
 
 if __name__ == "__main__":
-    run(tiny="--tiny" in sys.argv[1:])
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--save", action="store_true",
+                    help="write results/bench_engine.json even with --tiny")
+    ap.add_argument("--workers", type=int, default=None,
+                    help="override the worker-count sweep (CI smoke runs "
+                         "--workers 8 under forced host device count to "
+                         "exercise the sharded path)")
+    args = ap.parse_args()
+    run(tiny=args.tiny, workers_override=args.workers,
+        save_json=args.save or not args.tiny)

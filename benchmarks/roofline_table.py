@@ -99,9 +99,63 @@ def avg_disp_roofline(m: int, p: int, *, groups: int = 1,
     }
 
 
+def opt_step_roofline(m: int, p: int, *, kind: str = "momentum",
+                      mode: str = "mean", hw: HW = HW()) -> dict:
+    """Bytes / FLOPs of ONE fused opt_step pass (repro.kernels.opt_step):
+    local optimizer update on the (M, P) plane + S state planes, plus —
+    on averaging steps (mode != "none") — worker mean, Eq. 4 dispersion
+    and broadcast in the same pass.
+
+    Reads: param plane + grad plane + S state planes; writes: param
+    plane + S state planes (each M·P·4 B). FLOPs per element: sgd 2
+    (fma), momentum 4, adamw ~12 (incl. div/sqrt), + ~4 for
+    mean/dispersion/broadcast when averaging. The un-fused path pays an
+    extra read+write sweep of the plane for the optimizer update before
+    the avg_disp pass (3 sweeps on averaging steps; tree-path
+    optimizers additionally traverse every leaf)."""
+    s = {"sgd": 0, "momentum": 1, "adamw": 2}[kind]
+    upd_f = {"sgd": 2, "momentum": 4, "adamw": 12}[kind]
+    elems = m * p
+    read_b = 4 * elems * (2 + s)
+    write_b = 4 * elems * (1 + s)
+    flops = upd_f * elems
+    if mode != "none":
+        flops += 4 * elems + 2 * p
+    bytes_total = read_b + write_b
+    return {
+        "kernel": f"opt_step[{kind},{mode}]",
+        "m": m, "p": p, "state_planes": s,
+        "flops": flops, "bytes": bytes_total,
+        "intensity_flop_per_byte": flops / bytes_total,
+        "compute_s": flops / hw.peak_flops,
+        "memory_s": bytes_total / hw.hbm_bw,
+        "bound": "memory",  # intensity < 1.5 F/B << machine balance
+        "unfused_passes": 3 if mode != "none" else 2,
+        "fused_passes": 1,
+    }
+
+
 AVG_DISP_HDR = ("| kernel | M | P | groups | FLOPs | bytes | F/B | "
                 "memory s | passes (tree -> fused) |")
 AVG_DISP_SEP = "|" + "---|" * 9
+
+OPT_STEP_HDR = ("| kernel | M | P | S | FLOPs | bytes | F/B | memory s | "
+                "passes (unfused -> fused) |")
+OPT_STEP_SEP = "|" + "---|" * 9
+
+
+def render_opt_step(cases=(("sgd", "none"), ("momentum", "none"),
+                           ("momentum", "mean"), ("adamw", "mean")),
+                    m: int = 16, p: int = 1 << 20) -> str:
+    out = [OPT_STEP_HDR, OPT_STEP_SEP]
+    for kind, mode in cases:
+        r = opt_step_roofline(m, p, kind=kind, mode=mode)
+        out.append(
+            f"| {r['kernel']} | {m} | {p} | {r['state_planes']} | "
+            f"{r['flops']:.2e} | {r['bytes']:.2e} | "
+            f"{r['intensity_flop_per_byte']:.2f} | {r['memory_s']:.2e} | "
+            f"{r['unfused_passes']} -> {r['fused_passes']} |")
+    return "\n".join(out)
 
 
 def render_avg_disp(cases=((16, 1 << 20, 1, False), (16, 1 << 20, 4, False),
@@ -123,11 +177,15 @@ def run():
     n_ok = sum(1 for r in rows if "skipped" not in r)
     n_skip = sum(1 for r in rows if "skipped" in r)
     r = avg_disp_roofline(16, 1 << 20)
+    o = opt_step_roofline(16, 1 << 20, kind="momentum", mode="mean")
     print(f"roofline_table,0.0,combos_compiled={n_ok};skipped={n_skip};"
-          f"avg_disp_fb={r['intensity_flop_per_byte']:.2f}")
+          f"avg_disp_fb={r['intensity_flop_per_byte']:.2f};"
+          f"opt_step_fb={o['intensity_flop_per_byte']:.2f}")
 
 
 if __name__ == "__main__":
     print(render())
     print()
     print(render_avg_disp())
+    print()
+    print(render_opt_step())

@@ -1,1 +1,2 @@
-from repro.checkpoint.io import load_checkpoint, save_checkpoint  # noqa: F401
+from repro.checkpoint.io import (load_checkpoint, load_engine_state,  # noqa: F401
+                                 save_checkpoint, save_engine_state)

@@ -48,3 +48,27 @@ def load_checkpoint(path: str, like_tree):
     leaves = [np.asarray(g).astype(np.asarray(w).dtype)
               for g, w in zip(leaves, like_leaves)]
     return jax.tree_util.tree_unflatten(treedef, leaves), meta["step"]
+
+
+# --------------------------------------------------------------------------
+# Full EngineState checkpointing (resume mid-run without losing worker
+# diversity, optimizer moments, PRNG streams or the step counter)
+# --------------------------------------------------------------------------
+
+def save_engine_state(path: str, state, *, extra: dict | None = None):
+    """Checkpoint a full ``repro.core.EngineState`` — worker params,
+    optimizer state, outer-optimizer state, both PRNG keys and the step
+    counter — so ``PhaseEngine.run(..., state=loaded)`` continues the
+    run bit-identically to one that was never interrupted (averaging
+    decisions are pure functions of (dec_key, step), and the data-rng
+    key carries forward)."""
+    state = jax.device_get(state)
+    save_checkpoint(path, state, step=int(state.step), extra=extra)
+
+
+def load_engine_state(path: str, like_state):
+    """Restore an EngineState saved by :func:`save_engine_state` into
+    the structure of ``like_state`` (e.g. ``engine.init(params, M)``).
+    Returns (state, step)."""
+    state, step = load_checkpoint(path, like_state)
+    return state, step

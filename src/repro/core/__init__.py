@@ -8,8 +8,8 @@ from repro.core.averaging import (  # noqa: F401
     worker_dispersion,
 )
 from repro.core.engine import (EngineState, PhaseEngine,  # noqa: F401
-                               make_worker_step, tree_stack)
-from repro.core.flat import FlatSpec  # noqa: F401
+                               make_plane_step, make_worker_step, tree_stack)
+from repro.core.flat import FlatOptSpec, FlatSpec  # noqa: F401
 from repro.core.local_sgd import LocalSGD, consensus, replicate, unreplicate  # noqa: F401
 from repro.core.theory import (  # noqa: F401
     lemma1_asymptotic_variance,

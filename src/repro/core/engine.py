@@ -59,13 +59,18 @@ from typing import Any, Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core.averaging import (AveragingSchedule, OuterOptimizer,
                                   average_inner, worker_dispersion)
-from repro.core.flat import FlatSpec
+from repro.core.flat import FlatOptSpec, FlatSpec
 from repro.data.pipeline import DeviceDataset, Prefetcher
 from repro.kernels.avg_disp import avg_disp, avg_disp_outer
-from repro.kernels.ref import avg_disp_outer_ref, avg_disp_ref
+from repro.kernels.opt_step import opt_step
+from repro.kernels.ref import (avg_disp_outer_ref, avg_disp_ref,
+                               opt_step_ref, plane_average_ref,
+                               plane_update_ref, round_to_codes)
 
 
 # --------------------------------------------------------------------------
@@ -119,6 +124,33 @@ def make_worker_step(loss_fn: Callable, optimizer) -> Callable:
     return step_fn
 
 
+def make_plane_step(loss_fn: Callable, spec: FlatSpec) -> Callable:
+    """The flat-native local step: losses and gradients straight on the
+    (M, P) plane. Each worker row is unpacked to a params *view*
+    (``FlatSpec.unpack1``) only inside the traced loss — the plane is
+    the only carried representation — and the per-leaf gradients come
+    back as one plane row via a single ``pack1`` concatenation (the
+    efficient transpose of the unpack: differentiating through the row
+    slices instead would build each leaf's cotangent as a full-width
+    pad-and-add).
+
+    Returns grads_fn(plane, batch, rngs) -> (losses (M,), aux,
+    grad plane (M, P) f32). ``rngs=None`` supports rng-free losses
+    (launch/dryrun abstract paths)."""
+    def one(row, batch, rng):
+        params = spec.unpack1(row)
+        (loss, aux), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, batch, rng)
+        return loss, aux, spec.pack1(grads)
+
+    def grads_fn(plane, batch, rngs=None):
+        if rngs is None:
+            return jax.vmap(lambda r, b: one(r, b, None))(plane, batch)
+        return jax.vmap(one)(plane, batch, rngs)
+
+    return grads_fn
+
+
 class EngineState(NamedTuple):
     """Everything a phase consumes and produces; donated to run_phase."""
     worker_params: Any   # leaves (M, ...)
@@ -141,10 +173,25 @@ class PhaseEngine:
     accelerator meshes leave the default rolled scan.
 
     ``flat`` selects the (M, P) flat-plane scan carry (default; falls
-    back to the tree carry for trees FlatSpec cannot embed).
-    ``kernel_impl`` picks the fused averaging implementation: "auto"
-    (jnp reference on CPU, Pallas/Mosaic elsewhere), "ref", or
-    "pallas"."""
+    back to the tree carry for trees FlatSpec cannot embed). With
+    ``fused_opt`` (default) and an optimizer that speaks the plane
+    protocol (SGD/Momentum/AdamW: ``plane_kind``/``plane_hypers``/
+    ``plane_scalars`` + a ``FlatOptSpec``-alignable state), the scan is
+    *flat-native*: optimizer state rides as extra (M, P) planes, grads
+    come from one vjp through the unpacked view, and every step is one
+    fused ``opt_step`` pass (update + optional average + Eq. 4
+    dispersion + broadcast) — zero per-step pack/unpack.
+    ``kernel_impl`` picks the fused implementation: "auto" (jnp
+    reference on CPU, Pallas/Mosaic elsewhere), "ref", or "pallas".
+
+    ``mesh`` shards the phase over a device mesh via ``shard_map``: the
+    plane's worker axis M is split over the mesh's worker axes
+    (``shard_axes``; defaults to ("pod","data") ∩ mesh axes) and every
+    averaging event becomes a cross-shard collective — ``collective=
+    "psum"`` (production: O(P) bytes/device) or ``"gather"``
+    (full-gather validation mode: bit-identical to the unsharded engine
+    for SGD/Momentum; see ``_phase_sharded``). Sharded runs require the
+    flat-native path."""
     loss_fn: Callable
     optimizer: Any
     schedule: AveragingSchedule
@@ -152,6 +199,10 @@ class PhaseEngine:
     scan_unroll: int | bool = 1
     flat: bool = True
     kernel_impl: str = "auto"
+    fused_opt: bool = True
+    mesh: Any = None
+    shard_axes: tuple = ()
+    collective: str = "psum"
 
     @cached_property
     def worker_step(self):
@@ -202,6 +253,101 @@ class PhaseEngine:
             plane, disp = avg_disp_ref(plane)
         return plane, outer_c, disp
 
+    # ---- flat-native fused step (+ averaging) ---------------------------
+    def _opt_spec(self, spec: FlatSpec, opt_state) -> FlatOptSpec | None:
+        """The FlatOptSpec for flat-native scans, or None when the
+        optimizer or its state can't ride the plane."""
+        if not self.fused_opt or getattr(self.optimizer, "plane_kind",
+                                         None) is None:
+            return None
+        return FlatOptSpec.of(spec, opt_state)
+
+    def _fused_step_average(self, spec, plane, gplane, planes, outer_c,
+                            scalars, scope: str):
+        """ONE fused pass: local optimizer update on the plane (+ state
+        planes) and, per ``scope``, the averaging event — mean (global or
+        per-group), Eq. 4 dispersion, broadcast. The all-scope with an
+        outer optimizer chains the fused update into the fused
+        avg+outer-momentum kernel (two passes total on those rare
+        steps)."""
+        codes = spec.rounding_codes()
+        kw = dict(kind=self.optimizer.plane_kind, codes=codes,
+                  **self.optimizer.plane_hypers())
+        fused = opt_step if self._use_pallas() else opt_step_ref
+        if scope == "none":
+            plane, planes, disp = fused(plane, gplane, planes, scalars,
+                                        mode="none", **kw)
+            return plane, planes, outer_c, disp
+        if self.outer is not None and outer_c != ():
+            plane, planes, _ = fused(plane, gplane, planes, scalars,
+                                     mode="none", **kw)
+            prev, vel = outer_c
+            # mixed-dtype trees need the ref twin: the Pallas outer
+            # kernel has no rounding-codes path
+            if codes is None and self._use_pallas():
+                of = avg_disp_outer
+            else:
+                of = partial(avg_disp_outer_ref, codes=codes)
+            plane, prev, vel, disp = of(
+                plane, prev, vel, lr=self.outer.lr,
+                momentum=self.outer.momentum, nesterov=self.outer.nesterov)
+            return plane, planes, (prev, vel), disp
+        plane, planes, disp = fused(plane, gplane, planes, scalars,
+                                    mode="mean", **kw)
+        return plane, planes, outer_c, disp
+
+    def _plane_avg_event(self, spec, plane, outer_c, scope: str):
+        """Averaging event alone (no optimizer update) on the plane —
+        used by the switch branches of rare-averaging schedules, where
+        the update is hoisted before the switch so XLA can fuse it with
+        the gradient computation. Mixed-dtype trees round the broadcast
+        mean (and the outer-optimizer's gradient target and update)
+        through the leaf dtypes (``rounding_codes``), matching the tree
+        operators' ``.astype``."""
+        codes = spec.rounding_codes()
+        if codes is None:
+            return self._flat_average(plane, outer_c, scope)
+        if scope == "all" and self.outer is not None and outer_c != ():
+            prev, vel = outer_c
+            plane, prev, vel, disp = avg_disp_outer_ref(
+                plane, prev, vel, lr=self.outer.lr,
+                momentum=self.outer.momentum,
+                nesterov=self.outer.nesterov, codes=codes)
+            return plane, (prev, vel), disp
+        groups = (max(self.schedule.inner_groups, 1)
+                  if scope == "inner" else 1)
+        plane, disp = plane_average_ref(plane, groups=groups, codes=codes)
+        return plane, outer_c, disp
+
+    def _flat_native_step(self, spec, plane, gplane, planes, outer_c,
+                          scalars, code):
+        """One flat-native step: fused update(+average) for the
+        every-step schedules, update-then-switched-average for the rare
+        ones. Returns (plane, state planes, outer_c, dispersion)."""
+        sched = self.schedule
+        if sched.kind == "minibatch":
+            return self._fused_step_average(spec, plane, gplane, planes,
+                                            outer_c, scalars, "all")
+        if sched.kind == "oneshot":
+            return self._fused_step_average(spec, plane, gplane, planes,
+                                            outer_c, scalars, "none")
+        plane, planes, outer_c, _ = self._fused_step_average(
+            spec, plane, gplane, planes, outer_c, scalars, "none")
+
+        def none_branch(args):
+            return args[0], args[1], jnp.zeros((), jnp.float32)
+
+        def inner_branch(args):
+            return self._plane_avg_event(spec, args[0], args[1], "inner")
+
+        def all_branch(args):
+            return self._plane_avg_event(spec, args[0], args[1], "all")
+
+        plane, outer_c, disp = jax.lax.switch(
+            code, [none_branch, inner_branch, all_branch],
+            (plane, outer_c))
+        return plane, planes, outer_c, disp
+
     # ---- tree-path averaging (flat=False, and FlatSpec fallback) ---------
     def _apply_all_average(self, wp, outer_state, num_workers):
         avg = consensus(wp)
@@ -225,79 +371,313 @@ class PhaseEngine:
         (pre-staged batches, or index blocks that ``fetch`` gathers
         on-device), averaging fused per the schedule. Returns the new
         state and per-step traces {loss, dispersion, avg_code} — the only
-        host transfer a phase needs."""
+        host transfer a phase needs.
+
+        Three carries, picked per (flat, optimizer) support:
+          flat-native — params AND optimizer state as (M, P) planes,
+            grads via one vjp through the unpacked view, every step one
+            fused opt_step pass (zero per-step pack/unpack);
+          flat        — params plane with per-step pack/unpack around the
+            tree-mapped optimizer (optimizers without plane support);
+          tree        — params pytree carry (dtypes FlatSpec can't
+            embed)."""
         num_workers = jax.tree.leaves(state.worker_params)[0].shape[0]
         sched = self.schedule
         use_flat = self.flat and FlatSpec.supports(state.worker_params)
+        spec = FlatSpec.of(state.worker_params) if use_flat else None
+        opt_spec = self._opt_spec(spec, state.opt_state) if use_flat else None
+        flat_native = opt_spec is not None
 
         if use_flat:
-            spec = FlatSpec.of(state.worker_params)
             carry_p = spec.pack(state.worker_params)
+            carry_s = (opt_spec.pack(state.opt_state) if flat_native
+                       else state.opt_state)
             carry_o = ()
             if self.outer is not None and state.outer_state != ():
                 prev_avg, vel = state.outer_state
                 carry_o = (spec.pack1(prev_avg), spec.pack1(vel))
             average = self._flat_average
         else:
-            spec = None
             carry_p = state.worker_params
+            carry_s = state.opt_state
             carry_o = state.outer_state
             average = partial(self._tree_average, num_workers=num_workers)
+        grads_fn = (make_plane_step(self.loss_fn, spec) if flat_native
+                    else None)
 
         def body(carry, xs_t):
-            wp_c, opt_state, outer_c, key, step = carry
+            wp_c, opt_c, outer_c, key, step = carry
             step = step + 1
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, num_workers)
             batch = fetch(xs_t)
-            wp = spec.unpack(wp_c) if use_flat else wp_c
-            wp, opt_state, losses, _ = self.worker_step(
-                wp, opt_state, batch, step, rngs)
-            wp_c = spec.pack(wp) if use_flat else wp
             code = sched.decision_code(step, state.dec_key)
-            if sched.kind == "oneshot":
-                disp = jnp.zeros((), jnp.float32)
-            elif sched.kind == "minibatch":
-                wp_c, outer_c, disp = average(wp_c, outer_c, "all")
+            if flat_native:
+                losses, _, gplane = grads_fn(wp_c, batch, rngs)
+                scal = self.optimizer.plane_scalars(step)
+                wp_c, opt_c, outer_c, disp = self._flat_native_step(
+                    spec, wp_c, gplane, opt_c, outer_c, scal, code)
             else:
-                def none_branch(args):
-                    wp_c, oc = args
-                    return wp_c, oc, jnp.zeros((), jnp.float32)
+                wp = spec.unpack(wp_c) if use_flat else wp_c
+                wp, opt_c, losses, _ = self.worker_step(
+                    wp, opt_c, batch, step, rngs)
+                wp_c = spec.pack(wp) if use_flat else wp
+                if sched.kind == "oneshot":
+                    disp = jnp.zeros((), jnp.float32)
+                elif sched.kind == "minibatch":
+                    wp_c, outer_c, disp = average(wp_c, outer_c, "all")
+                else:
+                    def none_branch(args):
+                        wp_c, oc = args
+                        return wp_c, oc, jnp.zeros((), jnp.float32)
 
-                def inner_branch(args):
-                    return average(*args, "inner")
+                    def inner_branch(args):
+                        return average(*args, "inner")
 
-                def all_branch(args):
-                    return average(*args, "all")
+                    def all_branch(args):
+                        return average(*args, "all")
 
-                wp_c, outer_c, disp = jax.lax.switch(
-                    code, [none_branch, inner_branch, all_branch],
-                    (wp_c, outer_c))
-            return ((wp_c, opt_state, outer_c, key, step),
+                    wp_c, outer_c, disp = jax.lax.switch(
+                        code, [none_branch, inner_branch, all_branch],
+                        (wp_c, outer_c))
+            return ((wp_c, opt_c, outer_c, key, step),
                     (jnp.mean(losses), disp.astype(jnp.float32), code))
 
-        carry0 = (carry_p, state.opt_state, carry_o, state.key, state.step)
-        (wp_c, opt_state, outer_c, key, step), (loss, disp, code) = \
+        carry0 = (carry_p, carry_s, carry_o, state.key, state.step)
+        (wp_c, opt_c, outer_c, key, step), (loss, disp, code) = \
             jax.lax.scan(body, carry0, xs, unroll=self.scan_unroll)
 
         if use_flat:
             wp = spec.unpack(wp_c)
+            opt_state = opt_spec.unpack(opt_c) if flat_native else opt_c
             outer_state = state.outer_state
             if carry_o != ():
                 outer_state = (spec.unpack1(outer_c[0]),
                                spec.unpack1(outer_c[1], dtypes=jnp.float32))
         else:
-            wp, outer_state = wp_c, outer_c
+            wp, opt_state, outer_state = wp_c, opt_c, outer_c
         new_state = EngineState(wp, opt_state, outer_state, key,
                                 state.dec_key, step)
         return new_state, {"loss": loss, "dispersion": disp,
                            "avg_code": code}
 
+    # ---- sharded phase (shard_map over the mesh worker axes) -------------
+    def _worker_axes(self) -> tuple:
+        from repro.sharding.specs import mesh_worker_axes
+        return tuple(self.shard_axes) or mesh_worker_axes(self.mesh)
+
+    def _num_shards(self) -> int:
+        n = 1
+        for a in self._worker_axes():
+            n *= self.mesh.shape[a]
+        return n
+
+    def _shard_index(self):
+        """Flat index of this shard along the worker axes (row-major)."""
+        idx = jnp.zeros((), jnp.int32)
+        for a in self._worker_axes():
+            idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
+        return idx
+
+    def _psum_avg_event(self, spec, plane, outer_c, scope: str,
+                        m_global: int, ml: int):
+        """Cross-shard averaging event (no optimizer update) on this
+        shard's (M_l, P) rows. The all-scope mean is ONE psum of the
+        per-shard column sums (O(P) bytes/device); group (inner)
+        averages all_gather the rows instead (group boundaries need not
+        align with shard boundaries)."""
+        codes = spec.rounding_codes()
+        ax = self._worker_axes()
+        has_outer = (scope == "all" and self.outer is not None
+                     and outer_c != ())
+        if scope == "inner":
+            full = jax.lax.all_gather(plane, ax, axis=0, tiled=True)
+            full, disp = plane_average_ref(
+                full, groups=max(self.schedule.inner_groups, 1),
+                codes=codes)
+            out = jax.lax.dynamic_slice_in_dim(
+                full, self._shard_index() * ml, ml, 0)
+            return out, outer_c, disp
+        glob = jax.lax.psum(jnp.sum(plane, axis=0), ax) / m_global
+        disp = jax.lax.psum(
+            jnp.sum(jnp.square(plane - glob[None])), ax) / m_global
+        if has_outer:
+            prev, vel = outer_c
+            if codes is not None:
+                glob = round_to_codes(glob, codes)
+            g = prev - glob
+            vel = self.outer.momentum * vel + g
+            step = (self.outer.momentum * vel + g if self.outer.nesterov
+                    else vel)
+            upd = prev - self.outer.lr * step
+            if codes is not None:
+                upd = round_to_codes(upd, codes)
+            out = jnp.broadcast_to(upd[None], plane.shape)
+            return out, (upd, vel), disp
+        if codes is not None:
+            glob = round_to_codes(glob, codes)
+        out = jnp.broadcast_to(glob[None], plane.shape)
+        return out, outer_c, disp
+
+    def _flat_native_step_psum(self, spec, plane, gplane, planes, outer_c,
+                               scalars, code, m_global: int, ml: int):
+        """psum-mode flat-native step: local plane update (always shard-
+        local, hoisted before the switch), then the cross-shard
+        averaging event per the decision code."""
+        sched = self.schedule
+        plane, planes = plane_update_ref(
+            plane, gplane, planes, scalars, kind=self.optimizer.plane_kind,
+            codes=spec.rounding_codes(), **self.optimizer.plane_hypers())
+        if sched.kind == "oneshot":
+            return plane, planes, outer_c, jnp.zeros((), jnp.float32)
+        if sched.kind == "minibatch":
+            plane, outer_c, disp = self._psum_avg_event(
+                spec, plane, outer_c, "all", m_global, ml)
+            return plane, planes, outer_c, disp
+
+        def none_branch(args):
+            return args[0], args[1], jnp.zeros((), jnp.float32)
+
+        def inner_branch(args):
+            return self._psum_avg_event(spec, args[0], args[1], "inner",
+                                        m_global, ml)
+
+        def all_branch(args):
+            return self._psum_avg_event(spec, args[0], args[1], "all",
+                                        m_global, ml)
+
+        plane, outer_c, disp = jax.lax.switch(
+            code, [none_branch, inner_branch, all_branch],
+            (plane, outer_c))
+        return plane, planes, outer_c, disp
+
+    def _phase_sharded(self, state: EngineState, xs, fetch, m_global: int):
+        """The phase body as run on ONE shard under shard_map.
+
+        ``collective="psum"`` (production): the local (M_l, P) slice of
+        the plane scans through K fused local steps; averaging events
+        are the only cross-shard communication (one psum of column
+        sums). Local shapes differ from the unsharded engine's, so XLA
+        may vectorize per-worker reductions differently — results agree
+        to f32 roundoff, not bitwise.
+
+        ``collective="gather"`` (validation): every step all_gathers the
+        plane rows, state planes and batch, runs the unsharded fused
+        step on the full worker set, and keeps this shard's row slice —
+        full-shape compute on identical values, so the run reproduces
+        the single-device engine bit-for-bit for the paper's SGD /
+        Momentum recipes (mul-add update math; validated across all 5
+        schedules in tests/test_sharded.py). AdamW's div/sqrt and deep
+        matmul losses may still differ in final ulps (XLA fuses them
+        differently inside the shard_map context) — those agree to f32
+        roundoff. The price: redundant compute and O(M·P) gather bytes
+        per step; use gather to validate a mesh, psum to scale."""
+        sched = self.schedule
+        assert self.flat and FlatSpec.supports(state.worker_params), \
+            "sharded runs require the flat (M, P) plane carry"
+        assert self.collective in ("psum", "gather"), self.collective
+        spec = FlatSpec.of(state.worker_params)
+        opt_spec = self._opt_spec(spec, state.opt_state)
+        assert opt_spec is not None, \
+            "sharded runs need a plane-protocol optimizer (SGD/Momentum/" \
+            "AdamW) and fused_opt=True"
+        ml = jax.tree.leaves(state.worker_params)[0].shape[0]
+        carry_p = spec.pack(state.worker_params)
+        carry_s = opt_spec.pack(state.opt_state)
+        carry_o = ()
+        if self.outer is not None and state.outer_state != ():
+            prev_avg, vel = state.outer_state
+            carry_o = (spec.pack1(prev_avg), spec.pack1(vel))
+        grads_fn = make_plane_step(self.loss_fn, spec)
+        ax = self._worker_axes()
+        i0 = self._shard_index() * ml
+        exact = self.collective == "gather"
+
+        def body(carry, xs_t):
+            wp_c, opt_c, outer_c, key, step = carry
+            step = step + 1
+            key, sub = jax.random.split(key)
+            rngs = jax.random.split(sub, m_global)
+            batch = fetch(xs_t)
+            code = sched.decision_code(step, state.dec_key)
+            scal = self.optimizer.plane_scalars(step)
+            if exact:
+                wp_full = jax.lax.all_gather(wp_c, ax, axis=0, tiled=True)
+                opt_full = tuple(
+                    jax.lax.all_gather(s, ax, axis=0, tiled=True)
+                    for s in opt_c)
+                batch = jax.tree.map(
+                    lambda b: jax.lax.all_gather(b, ax, axis=0, tiled=True),
+                    batch)
+                losses, _, gplane = grads_fn(wp_full, batch, rngs)
+                wp_full, opt_full, outer_c, disp = self._flat_native_step(
+                    spec, wp_full, gplane, opt_full, outer_c, scal, code)
+                loss_t = jnp.mean(losses)
+                wp_c = jax.lax.dynamic_slice_in_dim(wp_full, i0, ml, 0)
+                opt_c = tuple(
+                    jax.lax.dynamic_slice_in_dim(s, i0, ml, 0)
+                    for s in opt_full)
+            else:
+                rngs = jax.lax.dynamic_slice_in_dim(rngs, i0, ml, 0)
+                losses, _, gplane = grads_fn(wp_c, batch, rngs)
+                wp_c, opt_c, outer_c, disp = self._flat_native_step_psum(
+                    spec, wp_c, gplane, opt_c, outer_c, scal, code,
+                    m_global, ml)
+                loss_t = jax.lax.psum(jnp.sum(losses), ax) / m_global
+            return ((wp_c, opt_c, outer_c, key, step),
+                    (loss_t, disp.astype(jnp.float32), code))
+
+        carry0 = (carry_p, carry_s, carry_o, state.key, state.step)
+        (wp_c, opt_c, outer_c, key, step), (loss, disp, code) = \
+            jax.lax.scan(body, carry0, xs, unroll=self.scan_unroll)
+
+        wp = spec.unpack(wp_c)
+        opt_state = opt_spec.unpack(opt_c)
+        outer_state = state.outer_state
+        if carry_o != ():
+            outer_state = (spec.unpack1(outer_c[0]),
+                           spec.unpack1(outer_c[1], dtypes=jnp.float32))
+        new_state = EngineState(wp, opt_state, outer_state, key,
+                                state.dec_key, step)
+        return new_state, {"loss": loss, "dispersion": disp,
+                           "avg_code": code}
+
+    def _state_specs(self, state: EngineState):
+        ax = P(self._worker_axes())
+        return EngineState(
+            jax.tree.map(lambda _: ax, state.worker_params),
+            jax.tree.map(lambda _: ax, state.opt_state),
+            jax.tree.map(lambda _: P(), state.outer_state),
+            P(), P(), P())
+
+    def _trace_specs(self):
+        return {"loss": P(), "dispersion": P(), "avg_code": P()}
+
+    def shard_state(self, state: EngineState) -> EngineState:
+        """Place an EngineState onto the mesh: worker-axis leaves split
+        over the worker axes (``repro.sharding.specs.plane_sharding``
+        layout), the rest replicated."""
+        from repro.sharding.specs import engine_state_sharding
+        return jax.device_put(
+            state, engine_state_sharding(self.mesh, state,
+                                         axes=self._worker_axes()))
+
     @partial(jax.jit, static_argnums=0, donate_argnums=1)
     def run_phase(self, state: EngineState, batches):
         """One compiled dispatch over a pre-staged (K, M, ...) batch
         block."""
-        return self._phase(state, batches, lambda b: b)
+        if self.mesh is None:
+            return self._phase(state, batches, lambda b: b)
+        m = jax.tree.leaves(state.worker_params)[0].shape[0]
+        assert m % self._num_shards() == 0, (m, self._num_shards())
+        sspec = self._state_specs(state)
+        ax = self._worker_axes()
+        return shard_map(
+            lambda s, xs: self._phase_sharded(s, xs, lambda b: b, m),
+            mesh=self.mesh,
+            in_specs=(sspec, jax.tree.map(lambda _: P(None, ax), batches)),
+            out_specs=(sspec, self._trace_specs()),
+            check_rep=False)(state, batches)
 
     @partial(jax.jit, static_argnums=0, donate_argnums=1)
     def run_phase_indexed(self, state: EngineState, dataset, idx_block):
@@ -305,9 +685,23 @@ class PhaseEngine:
         batches are gathered from the device-resident ``dataset``
         INSIDE the scan (``jnp.take``), so the host ships only
         indices."""
-        def fetch(idx):
-            return jax.tree.map(lambda a: jnp.take(a, idx, axis=0), dataset)
-        return self._phase(state, idx_block, fetch)
+        def fetch_from(ds):
+            return lambda idx: jax.tree.map(
+                lambda a: jnp.take(a, idx, axis=0), ds)
+        if self.mesh is None:
+            return self._phase(state, idx_block, fetch_from(dataset))
+        m = jax.tree.leaves(state.worker_params)[0].shape[0]
+        assert m % self._num_shards() == 0, (m, self._num_shards())
+        sspec = self._state_specs(state)
+        ax = self._worker_axes()
+        return shard_map(
+            lambda s, ds, idx: self._phase_sharded(
+                s, idx, fetch_from(ds), m),
+            mesh=self.mesh,
+            in_specs=(sspec, jax.tree.map(lambda _: P(), dataset),
+                      jax.tree.map(lambda _: P(None, ax), idx_block)),
+            out_specs=(sspec, self._trace_specs()),
+            check_rep=False)(state, dataset, idx_block)
 
     def default_phase_len(self) -> int:
         """Compile-size heuristic: align phase blocks with the schedule's
@@ -326,12 +720,16 @@ class PhaseEngine:
     def run(self, params, data, *, num_workers: int, seed: int = 0,
             record_every: int = 0, eval_fn=None, worker_eval_fn=None,
             phase_len: int | None = None, steps: int | None = None,
-            prefetch: bool = True):
+            prefetch: bool = True, state: EngineState | None = None,
+            return_state: bool = False):
         """Production driver: one run_phase dispatch per block of steps.
 
         data: an iterable of per-step worker batches (leading axis M) —
         staged to device by a background :class:`Prefetcher` thread
-        (``prefetch=False`` stages synchronously) — or a
+        (``prefetch=False`` stages synchronously; in-memory list/tuple
+        sources skip the prefetch thread automatically, and a
+        :class:`DeviceDataset` always takes the indexed on-device path,
+        so only true streams ever pay for staging) — or a
         :class:`DeviceDataset`, in which case batches are gathered
         on-device from index blocks and ``steps`` bounds the run (it
         defaults to the dataset's precomputed index list, if any).
@@ -339,20 +737,43 @@ class PhaseEngine:
         host every ``record_every`` steps (phase blocks are cut so record
         boundaries coincide with phase ends). Returns (final averaged
         params, history dict).
+
+        ``return_state`` appends the final :class:`EngineState` to the
+        return tuple (for ``repro.checkpoint.save_engine_state``).
+        ``state`` resumes a checkpointed :class:`EngineState`
+        (``repro.checkpoint.load_engine_state``) instead of initializing
+        from ``params``: step numbering, PRNG streams and averaging
+        decisions continue exactly where the checkpoint stopped, and
+        ``steps`` counts steps to run in THIS call. The returned history
+        covers only this call.
         """
-        state = self.init(params, num_workers, seed)
+        if state is None:
+            state = self.init(params, num_workers, seed)
+        if self.mesh is not None:
+            state = self.shard_state(state)
+        t0 = int(state.step)
         block = phase_len or self.default_phase_len()
         needs_eval = bool(record_every and (eval_fn or worker_eval_fn))
         hist = {"loss": [], "dispersion": [], "averages": 0, "eval": [],
                 "worker_eval": []}
+        total = None if steps is None else t0 + steps
 
         def take_at(t):
             take = block
             if needs_eval:
                 take = min(take, record_every - t % record_every)
-            if steps is not None:
-                take = min(take, steps - t)
+            if total is not None:
+                take = min(take, total - t)
             return take
+
+        def unshard(tree):
+            # a mesh-sharded worker axis is reassembled on the default
+            # device so reductions over it (consensus) lower exactly
+            # like the single-device engine's
+            if self.mesh is None:
+                return tree
+            return jax.tree.map(lambda x: jnp.asarray(jax.device_get(x)),
+                                tree)
 
         def consume(t, k, trace):
             trace = jax.device_get(trace)
@@ -367,35 +788,38 @@ class PhaseEngine:
             if needs_eval and t % record_every == 0:
                 if eval_fn is not None:
                     hist["eval"].append(
-                        (t, eval_fn(consensus(state.worker_params))))
+                        (t, eval_fn(consensus(unshard(
+                            state.worker_params)))))
                 if worker_eval_fn is not None:
                     hist["worker_eval"].append(
-                        (t, worker_eval_fn(state.worker_params)))
+                        (t, worker_eval_fn(unshard(state.worker_params))))
             return t
 
         if isinstance(data, DeviceDataset):
             assert data.num_workers == num_workers, \
                 (data.num_workers, num_workers)
-            total = steps if steps is not None else data.num_steps
-            assert total is not None, \
+            remaining = steps if steps is not None else data.num_steps
+            assert remaining is not None, \
                 "DeviceDataset with a sampler needs steps="
             if data.num_steps is not None:
                 # like a streaming source, a precomputed index list ends
                 # the run when exhausted
-                total = min(total, data.num_steps)
-            steps = total
-            t = 0
+                remaining = min(remaining, data.num_steps)
+            total = t0 + remaining
+            t = t0
             while t < total:
                 take = take_at(t)
                 idx = jnp.asarray(data.index_block(take))
                 state, trace = self.run_phase_indexed(state, data.arrays,
                                                       idx)
                 t = consume(t, take, trace)
-            return consensus(state.worker_params), hist
+            final = consensus(unshard(state.worker_params))
+            return (final, hist, state) if return_state else (final,
+                                                              hist)
 
         def staged_blocks():
             it = iter(data)
-            t, done = 0, False
+            t, done = t0, False
             while not done:
                 take = take_at(t)
                 if take <= 0:
@@ -412,17 +836,20 @@ class PhaseEngine:
                 t += len(chunk)
                 yield len(chunk), tree_stack(chunk)
 
-        blocks = Prefetcher(staged_blocks()) if prefetch \
-            else staged_blocks()
-        t = 0
+        # a materialized in-memory source gains nothing from background
+        # staging — the prefetch thread only contends with dispatch
+        prefetch = prefetch and not isinstance(data, (list, tuple))
+        pf = Prefetcher(staged_blocks()) if prefetch else None
+        t = t0
         try:
-            for k, staged in blocks:
+            for k, staged in (pf if pf is not None else staged_blocks()):
                 state, trace = self.run_phase(state, staged)
                 t = consume(t, k, trace)
         finally:
-            if isinstance(blocks, Prefetcher):
-                blocks.close()
-        return consensus(state.worker_params), hist
+            if pf is not None:
+                pf.close()
+        final = consensus(unshard(state.worker_params))
+        return (final, hist, state) if return_state else (final, hist)
 
     # ---- legacy host-driven loop (benchmark baseline / equivalence) ------
     @partial(jax.jit, static_argnums=0)

@@ -24,6 +24,15 @@ tree path for such trees.
 
 ``pack1``/``unpack1`` are the rank-(P,) variants for trees WITHOUT the
 worker axis (consensus params, outer-optimizer state).
+
+:class:`FlatOptSpec` extends the plane to the *optimizer state*: when an
+optimizer's state is S structural copies of the params tree in float32
+(Momentum velocity: S=1; AdamW moments: S=2; SGD: S=0), the state packs
+into S extra ``(M, P)`` planes whose columns align 1:1 with the param
+plane — the layout ``repro.kernels.opt_step`` fuses the local update
+into. ``rounding_codes`` gives the per-column dtype codes that let a
+plane-resident update round exactly like the pytree optimizers'
+``.astype(p.dtype)`` after every step.
 """
 from __future__ import annotations
 
@@ -33,8 +42,13 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 _PACKABLE = (jnp.float32, jnp.bfloat16, jnp.float16)
+
+#: per-column dtype codes for plane-resident rounding (0 = float32
+#: verbatim, 1 = round through bfloat16, 2 = round through float16)
+ROUND_F32, ROUND_BF16, ROUND_F16 = 0, 1, 2
 
 
 def _packable(dtype) -> bool:
@@ -87,13 +101,37 @@ class FlatSpec:
         return jnp.concatenate(cols, axis=1) if cols else \
             jnp.zeros((m, 0), jnp.float32)
 
-    def unpack(self, plane):
-        """(M, P) float32 -> leaves (M, *shape) in their original dtype."""
+    def unpack(self, plane, *, dtypes=None):
+        """(M, P) float32 -> leaves (M, *shape) in their original dtype.
+        ``dtypes`` overrides the cast (e.g. ``jnp.float32`` for optimizer
+        moments, which mirror the param structure but stay float32)."""
+        if dtypes is None:
+            dtypes = self.dtypes
+        elif not isinstance(dtypes, tuple):
+            dtypes = (jnp.dtype(dtypes),) * len(self.shapes)
         m = plane.shape[0]
         leaves = [
             plane[:, o:o + math.prod(s)].reshape((m,) + s).astype(dt)
-            for o, s, dt in zip(self.offsets, self.shapes, self.dtypes)]
+            for o, s, dt in zip(self.offsets, self.shapes, dtypes)]
         return jax.tree.unflatten(self.treedef, leaves)
+
+    # ---- per-column dtype rounding ----------------------------------------
+    def rounding_codes(self):
+        """(P,) float32 per-column rounding codes (``ROUND_*``), or None
+        when every leaf is float32 (no rounding pass needed). The codes
+        let a plane-resident optimizer update reproduce the pytree path's
+        ``.astype(p.dtype)`` bit-exactly: a bf16/f16 leaf's columns are
+        rounded through their dtype after every update, so the plane
+        always holds the exact float32 image of the tree."""
+        if all(dt == jnp.dtype(jnp.float32) for dt in self.dtypes):
+            return None
+        codes = np.zeros(self.width, np.float32)
+        for o, s, dt in zip(self.offsets, self.shapes, self.dtypes):
+            if dt == jnp.dtype(jnp.bfloat16):
+                codes[o:o + math.prod(s)] = ROUND_BF16
+            elif dt == jnp.dtype(jnp.float16):
+                codes[o:o + math.prod(s)] = ROUND_F16
+        return codes
 
     # ---- (P,) vector <-> consensus tree ----------------------------------
     def pack1(self, tree):
@@ -114,4 +152,59 @@ class FlatSpec:
             dtypes = (jnp.dtype(dtypes),) * len(self.shapes)
         leaves = [vec[o:o + math.prod(s)].reshape(s).astype(dt)
                   for o, s, dt in zip(self.offsets, self.shapes, dtypes)]
+        return jax.tree.unflatten(self.treedef, leaves)
+
+
+@dataclass(frozen=True)
+class FlatOptSpec:
+    """Layout of an optimizer-state pytree as S extra (M, P) planes.
+
+    Applies when the state is S structural copies of the params tree —
+    float32 leaves of the param shapes, grouped copy-by-copy in flatten
+    order (Momentum velocity S=1; AdamW ``{"m": .., "v": ..}`` S=2; SGD
+    ``()`` S=0). Each copy packs through the param :class:`FlatSpec`, so
+    state column j describes the same parameter as param column j — the
+    alignment ``repro.kernels.opt_step`` relies on. :meth:`of` returns
+    None for states that don't align (the engine then falls back to the
+    per-step pack/unpack path).
+    """
+    treedef: Any           # the full opt-state treedef
+    num_planes: int        # S
+    param: FlatSpec
+
+    @classmethod
+    def of(cls, param: FlatSpec, opt_state) -> "FlatOptSpec | None":
+        leaves, treedef = jax.tree.flatten(opt_state)
+        n = len(param.shapes)
+        if n == 0:
+            return None
+        if not leaves:
+            return cls(treedef, 0, param)
+        if len(leaves) % n:
+            return None
+        s = len(leaves) // n
+        for k in range(s):
+            for j in range(n):
+                x = leaves[k * n + j]
+                if (jnp.dtype(x.dtype) != jnp.dtype(jnp.float32)
+                        or tuple(x.shape[1:]) != param.shapes[j]):
+                    return None
+        return cls(treedef, s, param)
+
+    def pack(self, opt_state) -> tuple:
+        """State tree -> tuple of S (M, P) float32 planes."""
+        leaves = self.treedef.flatten_up_to(opt_state)
+        n = len(self.param.shapes)
+        return tuple(
+            self.param.pack(
+                jax.tree.unflatten(self.param.treedef,
+                                   leaves[k * n:(k + 1) * n]))
+            for k in range(self.num_planes))
+
+    def unpack(self, planes: tuple):
+        """Tuple of S (M, P) planes -> state tree (float32 leaves)."""
+        leaves = []
+        for pl in planes:
+            leaves.extend(jax.tree.leaves(
+                self.param.unpack(pl, dtypes=jnp.float32)))
         return jax.tree.unflatten(self.treedef, leaves)

@@ -1,0 +1,165 @@
+"""Pallas fused optimizer step (+ optional averaging) on the (M, P) plane.
+
+The phase engine's flat-native inner loop (paper Eq. 3: K cheap local
+steps, then average) needs, per step: the optimizer update applied to
+every worker row, and — on averaging steps — the worker mean (global or
+per-group), the Eq. 4 dispersion, and the broadcast. Doing those as
+separate passes costs 2–3 extra sweeps of the plane per averaging event
+and a tree-mapped optimizer apply per local step; this kernel does
+update + mean + dispersion + broadcast in ONE tiled pass.
+
+Grid (P // block_p,): each program reads full-height (M, block_p) column
+blocks of the param plane, the grad plane and the S optimizer-state
+planes (S=0 SGD, 1 Momentum, 2 AdamW — layouts from
+``repro.core.flat.FlatOptSpec``), applies the update on the VPU, reduces
+over the worker axis (M rides in-block, as in ``avg_disp``), writes the
+updated/broadcast block plus state blocks back, and emits its partial
+dispersion into an SMEM slot. Dynamic per-step scalars (lr and the AdamW
+bias corrections) arrive as one (1, 4) SMEM vector; per-column dtype
+rounding codes (``FlatSpec.rounding_codes``) ride as an f32 row so
+bf16/f16 params round exactly like the pytree optimizers.
+
+On CPU the kernel runs in interpret mode for validation; the engine's
+CPU path uses the jnp twin ``repro.kernels.ref.opt_step_ref`` (identical
+math). On TPU the same call compiles to Mosaic.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_P = 1024
+_KINDS = ("sgd", "momentum", "adamw")
+_MODES = ("none", "mean", "group")
+
+
+def _round_codes(x, codes):
+    bf = x.astype(jnp.bfloat16).astype(jnp.float32)
+    f16 = x.astype(jnp.float16).astype(jnp.float32)
+    return jnp.where(codes == 1.0, bf, jnp.where(codes == 2.0, f16, x))
+
+
+def _opt_step_kernel(*refs, kind, mode, groups, nstate, has_codes,
+                     mu, nesterov, b1, b2, eps, weight_decay):
+    i = 0
+    x_ref, g_ref = refs[0], refs[1]
+    i = 2
+    s_refs = refs[i:i + nstate]
+    i += nstate
+    codes_ref = refs[i] if has_codes else None
+    i += int(has_codes)
+    scal_ref = refs[i]
+    i += 1
+    o_ref = refs[i]
+    s_out = refs[i + 1:i + 1 + nstate]
+    d_ref = refs[-1]
+
+    x = x_ref[...]                                   # (M, block_p) f32
+    g = g_ref[...]
+    lr = scal_ref[0, 0]
+    if kind == "sgd":
+        upd = x - lr * g
+    elif kind == "momentum":
+        v = mu * s_refs[0][...] + g
+        upd = x - lr * (g + mu * v if nesterov else v)
+        s_out[0][...] = v
+    else:  # adamw
+        c1, c2 = scal_ref[0, 1], scal_ref[0, 2]
+        m2 = b1 * s_refs[0][...] + (1 - b1) * g
+        v2 = b2 * s_refs[1][...] + (1 - b2) * g * g
+        d = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+        upd = x - lr * (d + weight_decay * x)
+        s_out[0][...] = m2
+        s_out[1][...] = v2
+    if has_codes:
+        upd = _round_codes(upd, codes_ref[...])
+
+    if mode == "none":
+        o_ref[...] = upd
+        d_ref[0, 0] = jnp.zeros((), jnp.float32)
+        return
+    m, bp = upd.shape
+    glob = jnp.mean(upd, axis=0)                     # (block_p,)
+    d_ref[0, 0] = jnp.sum(jnp.square(upd - glob[None])) / m
+    if mode == "group" and groups > 1:
+        gm = jnp.mean(upd.reshape(groups, m // groups, bp), axis=1)
+        out = jnp.broadcast_to(gm[:, None], (groups, m // groups, bp))
+        out = out.reshape(m, bp)
+    else:
+        out = jnp.broadcast_to(glob[None], (m, bp))
+    if has_codes:
+        out = _round_codes(out, codes_ref[...])
+    o_ref[...] = out
+
+
+def _pad_cols(x, p_pad):
+    p = x.shape[-1]
+    if p_pad == p:
+        return x
+    return jnp.pad(x, [(0, 0)] * (x.ndim - 1) + [(0, p_pad - p)])
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("kind", "mode", "groups", "mu", "nesterov", "b1", "b2",
+                     "eps", "weight_decay", "block_p", "interpret"))
+def opt_step(plane, grads, planes, scalars, *, kind, mode="none",
+             groups: int = 1, mu=0.9, nesterov=False, b1=0.9, b2=0.95,
+             eps=1e-8, weight_decay=0.0, codes=None,
+             block_p: int = DEFAULT_BLOCK_P, interpret: bool | None = None):
+    """Fused optimizer step + optional averaging on the (M, P) plane.
+
+    plane/grads: (M, P) f32; planes: tuple of S f32 state planes
+    (``FlatOptSpec`` layout); scalars: (4,) f32 [lr, c1, c2, _];
+    codes: optional (P,) f32 rounding codes. mode: "none" | "mean" |
+    "group". Returns (plane, state planes, Eq. 4 dispersion scalar —
+    0 for mode "none"). Matches ``repro.kernels.ref.opt_step_ref``.
+    """
+    assert kind in _KINDS, kind
+    assert mode in _MODES, mode
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, p = plane.shape
+    assert groups >= 1 and m % groups == 0, (m, groups)
+    nstate = len(planes)
+    block_p = min(block_p, max(p, 1))
+    p_pad = -(-max(p, 1) // block_p) * block_p
+    nb = p_pad // block_p
+    has_codes = codes is not None
+
+    x = _pad_cols(plane.astype(jnp.float32), p_pad)
+    g = _pad_cols(grads.astype(jnp.float32), p_pad)
+    ins = [x, g] + [_pad_cols(s.astype(jnp.float32), p_pad) for s in planes]
+    blk = pl.BlockSpec((m, block_p), lambda i: (0, i))
+    in_specs = [blk, blk] + [blk] * nstate
+    if has_codes:
+        ins.append(_pad_cols(jnp.asarray(codes, jnp.float32)[None], p_pad))
+        in_specs.append(pl.BlockSpec((1, block_p), lambda i: (0, i)))
+    ins.append(jnp.asarray(scalars, jnp.float32).reshape(1, 4))
+    in_specs.append(pl.BlockSpec((1, 4), lambda i: (0, 0),
+                                 memory_space=pltpu.SMEM))
+
+    out_shape = ([jax.ShapeDtypeStruct((m, p_pad), jnp.float32)]
+                 * (1 + nstate)
+                 + [jax.ShapeDtypeStruct((nb, 1), jnp.float32)])
+    out_specs = ([blk] * (1 + nstate)
+                 + [pl.BlockSpec((1, 1), lambda i: (i, 0),
+                                 memory_space=pltpu.SMEM)])
+    outs = pl.pallas_call(
+        functools.partial(_opt_step_kernel, kind=kind, mode=mode,
+                          groups=groups, nstate=nstate, has_codes=has_codes,
+                          mu=mu, nesterov=nesterov, b1=b1, b2=b2, eps=eps,
+                          weight_decay=weight_decay),
+        grid=(nb,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        interpret=interpret,
+    )(*ins)
+    out, dpart = outs[0], outs[-1]
+    new_planes = tuple(o[:, :p] for o in outs[1:1 + nstate])
+    return out[:, :p], new_planes, jnp.sum(dpart)

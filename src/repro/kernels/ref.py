@@ -56,22 +56,115 @@ def avg_disp_ref(plane, *, groups: int = 1):
 
 
 def avg_disp_outer_ref(plane, prev_avg, vel, *, lr: float, momentum: float,
-                       nesterov: bool = True):
+                       nesterov: bool = True, codes=None):
     """avg_disp with the outer-optimizer momentum step folded in: the
     consensus mean becomes the outer gradient target, the updated average
     is broadcast back into the plane. Mirrors
     ``repro.core.averaging.OuterOptimizer.apply`` on flat f32 buffers.
+
+    ``codes`` (``FlatSpec.rounding_codes``) reproduces the tree path's
+    dtype rounding for mixed-dtype params: the consensus mean is rounded
+    before it becomes the outer gradient target (``consensus`` yields a
+    leaf-dtype mean) and the updated average is rounded before carry and
+    broadcast (``OuterOptimizer.apply`` ends with ``.astype(p.dtype)``).
+    Dispersion stays measured against the unrounded f32 mean, like
+    ``worker_dispersion``.
 
     plane: (M, P); prev_avg/vel: (P,). Returns
     (averaged plane, new_avg, new_vel, dispersion)."""
     m = plane.shape[0]
     avg = jnp.mean(plane, axis=0)
     disp = jnp.sum(jnp.square(plane - avg[None])) / m
+    if codes is not None:
+        avg = round_to_codes(avg, codes)
     g = prev_avg - avg
     vel = momentum * vel + g
     step = momentum * vel + g if nesterov else vel
     upd = prev_avg - lr * step
+    if codes is not None:
+        upd = round_to_codes(upd, codes)
     return jnp.broadcast_to(upd[None], plane.shape), upd, vel, disp
+
+
+def round_to_codes(x, codes):
+    """Round each column of ``x`` through its original dtype (codes from
+    ``FlatSpec.rounding_codes``: 0 f32, 1 bf16, 2 f16) and back to f32 —
+    the plane-resident twin of the pytree optimizers' ``.astype(p.dtype)``
+    after every update. ``codes`` broadcasts over leading axes."""
+    bf = x.astype(jnp.bfloat16).astype(jnp.float32)
+    f16 = x.astype(jnp.float16).astype(jnp.float32)
+    return jnp.where(codes == 1.0, bf, jnp.where(codes == 2.0, f16, x))
+
+
+def plane_update_ref(plane, grads, planes, scalars, *, kind, mu=0.9,
+                     nesterov=False, b1=0.9, b2=0.95, eps=1e-8,
+                     weight_decay=0.0, codes=None):
+    """The local optimizer step on the flat (M, P) plane — bit-exact twin
+    of ``repro.optim`` SGD/Momentum/AdamW ``apply`` on the packed tree.
+
+    plane/grads: (M, P) f32 (grads = f32 image of the param-dtype grads,
+    i.e. what one vjp through ``FlatSpec.unpack`` yields); planes: tuple
+    of S state planes; scalars: (4,) f32 [lr, c1, c2, _]. Returns
+    (updated plane, new state planes)."""
+    lr, c1, c2 = scalars[0], scalars[1], scalars[2]
+    g = grads
+    if kind == "sgd":
+        upd, planes = plane - lr * g, ()
+    elif kind == "momentum":
+        v = mu * planes[0] + g
+        upd = plane - lr * (g + mu * v if nesterov else v)
+        planes = (v,)
+    elif kind == "adamw":
+        m2 = b1 * planes[0] + (1 - b1) * g
+        v2 = b2 * planes[1] + (1 - b2) * g * g
+        d = (m2 / c1) / (jnp.sqrt(v2 / c2) + eps)
+        upd = plane - lr * (d + weight_decay * plane)
+        planes = (m2, v2)
+    else:
+        raise ValueError(f"unknown plane optimizer kind {kind!r}")
+    if codes is not None:
+        upd = round_to_codes(upd, codes[None])
+    return upd, planes
+
+
+def plane_average_ref(plane, *, groups: int = 1, codes=None):
+    """Worker mean (global, or per contiguous group) + Eq. 4 dispersion
+    + broadcast on the (M, P) plane. Like ``avg_disp_ref`` but with the
+    per-column dtype rounding the tree operators apply (``average_all``
+    casts the mean back to the leaf dtype)."""
+    m, p = plane.shape
+    glob = jnp.mean(plane, axis=0)
+    disp = jnp.sum(jnp.square(plane - glob[None])) / m
+    if groups > 1:
+        gm = jnp.mean(plane.reshape(groups, m // groups, p), axis=1)
+        out = jnp.broadcast_to(gm[:, None], (groups, m // groups, p))
+        out = out.reshape(m, p)
+    else:
+        out = jnp.broadcast_to(glob[None], (m, p))
+    if codes is not None:
+        out = round_to_codes(out, codes[None])
+    return out, disp
+
+
+def opt_step_ref(plane, grads, planes, scalars, *, kind, mode="none",
+                 groups: int = 1, mu=0.9, nesterov=False, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.0, codes=None):
+    """Fused local optimizer step + optional averaging event in one pass
+    over the flat (M, P) plane — the jnp twin of
+    ``repro.kernels.opt_step``.
+
+    mode: "none" (pure local step; dispersion 0), "mean" (step + worker
+    mean + Eq. 4 dispersion + broadcast), or "group" (per-group means;
+    dispersion still against the global mean). Returns
+    (plane, new state planes, dispersion)."""
+    upd, planes = plane_update_ref(
+        plane, grads, planes, scalars, kind=kind, mu=mu, nesterov=nesterov,
+        b1=b1, b2=b2, eps=eps, weight_decay=weight_decay, codes=codes)
+    if mode == "none":
+        return upd, planes, jnp.zeros((), jnp.float32)
+    out, disp = plane_average_ref(
+        upd, groups=groups if mode == "group" else 1, codes=codes)
+    return out, planes, disp
 
 
 def rglru_scan_ref(a, b):

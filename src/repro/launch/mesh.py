@@ -34,6 +34,20 @@ def make_host_mesh(data: int = 2, model: int = 2, pod: int = 0):
     return jax.make_mesh(shape, axes)
 
 
+def make_worker_mesh(num_workers: int):
+    """1-D ("data",) mesh over the available devices for the sharded
+    flat engine: uses the largest device count that divides
+    ``num_workers`` (every shard must hold the same number of worker
+    rows). On CPU, launch with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` to validate
+    the sharded path without accelerators."""
+    n = min(num_workers, len(jax.devices()))
+    while num_workers % n:
+        n -= 1
+    set_axis_sizes({"data": n})
+    return jax.make_mesh((n,), ("data",))
+
+
 def worker_axes(mesh, *, hierarchical: bool = False):
     """Mesh axes that form the local-SGD worker axis."""
     if "pod" in mesh.axis_names:

@@ -12,9 +12,9 @@ import jax.numpy as jnp
 
 from repro.configs import ModelConfig, ShapeConfig
 from repro.core.averaging import average_all, average_inner
-from repro.core.engine import make_worker_step
-from repro.core.flat import FlatSpec
-from repro.kernels.ref import avg_disp_ref
+from repro.core.engine import make_plane_step, make_worker_step
+from repro.core.flat import FlatOptSpec, FlatSpec
+from repro.kernels.ref import avg_disp_ref, plane_average_ref, plane_update_ref
 from repro.models import transformer as tfm
 from repro.models.layers import cdtype
 from repro.optim import Momentum
@@ -128,36 +128,56 @@ def make_phase_step(cfg: ModelConfig, *, phase_len: int, impl: str = "xla",
     fuse the phase-end average ("all" | "inner" | "none") into the same
     program — one dispatch, one cross-worker all-reduce per phase.
 
-    ``flat`` runs the scan carry on the (W, P) flat plane and the
-    phase-end average as the fused single-pass op, mirroring the
-    production engine's default path when lowered for a mesh.
+    ``flat`` runs the scan flat-NATIVE, mirroring the production
+    engine's default path when lowered for a mesh: params AND optimizer
+    state ride as (W, P) planes, grads come from one vjp through the
+    unpacked view (``make_plane_step``), each local step is one fused
+    plane update, and the phase-end average is the fused single-pass op.
+    Optimizers without plane support fall back to per-step pack/unpack
+    around the tree-mapped apply.
 
     batches: leaves (K, W, ...); step0: steps completed before the phase.
     Returns (worker_params, opt_state, per-step mean losses (K,)).
     """
     opt = optimizer or make_optimizer()
-    wstep = make_worker_step(_lm_loss_fn(cfg, impl=impl, remat=remat), opt)
+    loss_fn = _lm_loss_fn(cfg, impl=impl, remat=remat)
+    wstep = make_worker_step(loss_fn, opt)
 
     def phase_step(worker_params, opt_state, batches, step0):
         spec = FlatSpec.of(worker_params) if flat else None
+        opt_spec = (FlatOptSpec.of(spec, opt_state)
+                    if flat and getattr(opt, "plane_kind", None) else None)
+        native = opt_spec is not None
+        grads_fn = make_plane_step(loss_fn, spec) if native else None
+        groups = inner_groups if avg == "inner" and inner_groups else 1
 
         def body(carry, inp):
             wp_c, os = carry
             batch, i = inp
+            step = step0 + i + 1
+            if native:
+                losses, _, gplane = grads_fn(wp_c, batch)
+                wp_c, os = plane_update_ref(
+                    wp_c, gplane, os, opt.plane_scalars(step),
+                    kind=opt.plane_kind, codes=spec.rounding_codes(),
+                    **opt.plane_hypers())
+                return (wp_c, os), jnp.mean(losses)
             wp = spec.unpack(wp_c) if flat else wp_c
-            wp, os, loss, _ = wstep(wp, os, batch, step0 + i + 1)
+            wp, os, loss, _ = wstep(wp, os, batch, step)
             return ((spec.pack(wp) if flat else wp), os), jnp.mean(loss)
 
         carry0 = (spec.pack(worker_params) if flat else worker_params,
-                  opt_state)
+                  opt_spec.pack(opt_state) if native else opt_state)
         (wp_c, os), losses = jax.lax.scan(
             body, carry0, (batches, jnp.arange(phase_len, dtype=jnp.int32)))
+        if native and avg != "none":
+            wp_c, _ = plane_average_ref(wp_c, groups=groups,
+                                        codes=spec.rounding_codes())
+        elif flat and not native and avg != "none":
+            wp_c, _ = avg_disp_ref(wp_c, groups=groups)
         if flat:
-            if avg != "none":
-                wp_c, _ = avg_disp_ref(
-                    wp_c, groups=inner_groups if avg == "inner" and
-                    inner_groups else 1)
             wp = spec.unpack(wp_c)
+            os = opt_spec.unpack(os) if native else os
         elif avg == "inner" and inner_groups:
             wp = average_inner(wp_c, inner_groups)
         elif avg != "none":  # "all", or "inner" on a mesh with one group

@@ -18,10 +18,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.checkpoint import save_checkpoint
+from repro.checkpoint import (load_engine_state, save_checkpoint,
+                              save_engine_state)
 from repro.configs import ARCHS, get_config
 from repro.core import AveragingSchedule, OuterOptimizer, PhaseEngine
 from repro.data import token_stream, worker_batches
+from repro.launch.mesh import make_worker_mesh
 from repro.models import init_params, lm_loss
 from repro.optim import AdamW, Momentum
 
@@ -61,8 +63,26 @@ def main(argv=None):
     ap.add_argument("--no-prefetch", action="store_true",
                     help="stage phase blocks synchronously instead of via "
                          "the double-buffered prefetch thread")
+    ap.add_argument("--no-fused-opt", action="store_true",
+                    help="disable the flat-native fused optimizer planes "
+                         "(PR 2 behavior: per-step pack/unpack around the "
+                         "tree-mapped optimizer)")
+    ap.add_argument("--shard", action="store_true",
+                    help="shard the flat (M, P) plane's worker axis over "
+                         "the available devices via shard_map (on CPU set "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         "count=N first)")
+    ap.add_argument("--collective", default="psum",
+                    choices=["psum", "gather"],
+                    help="sharded averaging collective: psum (production; "
+                         "one psum of column sums per event) or gather "
+                         "(validation; bit-identical to single-device)")
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--checkpoint", default=None)
+    ap.add_argument("--resume", default=None,
+                    help="path of a full-EngineState checkpoint "
+                         "(--checkpoint writes <path>.state) to resume "
+                         "from; --steps counts additional steps")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args(argv)
 
@@ -91,9 +111,18 @@ def main(argv=None):
         inner_groups=args.inner_groups)
     outer = (OuterOptimizer(lr=1.0, momentum=args.outer_momentum)
              if args.outer_momentum > 0 else None)
+    mesh = None
+    if args.shard:
+        mesh = make_worker_mesh(args.workers)
+        shards = mesh.shape["data"]
+        print(f"[train] sharding {args.workers} workers over {shards} "
+              f"devices ({args.workers // shards} rows/shard, "
+              f"collective={args.collective})")
     engine = PhaseEngine(loss_fn, opt, sch, outer=outer,
                          scan_unroll=args.scan_unroll or True,
-                         flat=not args.tree_engine)
+                         flat=not args.tree_engine,
+                         fused_opt=not args.no_fused_opt,
+                         mesh=mesh, collective=args.collective)
 
     # per-worker independent data streams (paper §3.2: distinct shuffles)
     def batch_iter():
@@ -104,10 +133,17 @@ def main(argv=None):
             toks = np.stack([next(s) for s in streams])
             yield {"tokens": jnp.asarray(toks)}
 
+    resume_state = None
+    if args.resume:
+        like = engine.init(params, args.workers, args.seed)
+        resume_state, at = load_engine_state(args.resume, like)
+        print(f"[train] resuming from {args.resume} at step {at}")
+
     t0 = time.time()
-    final, hist = engine.run(params, batch_iter(), num_workers=args.workers,
-                             seed=args.seed, record_every=10,
-                             prefetch=not args.no_prefetch)
+    final, hist, state = engine.run(
+        params, batch_iter(), num_workers=args.workers, seed=args.seed,
+        record_every=10, prefetch=not args.no_prefetch,
+        state=resume_state, return_state=True)
     dt = time.time() - t0
     losses = hist["loss"]
     print(f"[train] {args.steps} steps in {dt:.1f}s "
@@ -119,8 +155,10 @@ def main(argv=None):
         print(f"[train] final pre-average worker dispersion: "
               f"{hist['dispersion'][-1][1]:.3e}")
     if args.checkpoint:
-        save_checkpoint(args.checkpoint, final, step=args.steps)
-        print(f"[train] saved consensus model to {args.checkpoint}")
+        save_checkpoint(args.checkpoint, final, step=int(state.step))
+        save_engine_state(args.checkpoint + ".state", state)
+        print(f"[train] saved consensus model to {args.checkpoint} "
+              f"(+ resumable EngineState at {args.checkpoint}.state)")
     return final, hist
 
 

@@ -16,6 +16,9 @@ class AdamW:
     eps: float = 1e-8
     weight_decay: float = 0.0
 
+    plane_kind = "adamw"
+    state_planes = 2  # first/second moments, in {"m","v"} flatten order
+
     def _lr(self, step):
         return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
 
@@ -25,20 +28,34 @@ class AdamW:
 
     def apply(self, params, grads, state, step):
         lr = self._lr(step)
-        t = step.astype(jnp.float32) + 1.0
+        t = jnp.asarray(step).astype(jnp.float32) + 1.0
         c1 = 1.0 - self.b1 ** t
         c2 = 1.0 - self.b2 ** t
 
-        def upd(p, g, m, v):
-            g = g.astype(jnp.float32)
-            m2 = self.b1 * m + (1 - self.b1) * g
-            v2 = self.b2 * v + (1 - self.b2) * g * g
+        # three plain tree.map passes — params may be arbitrarily nested
+        # pytrees (incl. tuples), so no is_leaf tricks on mapped outputs
+        m = jax.tree.map(
+            lambda mm, g: self.b1 * mm + (1 - self.b1) * g.astype(jnp.float32),
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda vv, g: (self.b2 * vv
+                           + (1 - self.b2) * g.astype(jnp.float32)
+                           * g.astype(jnp.float32)),
+            state["v"], grads)
+
+        def upd(p, m2, v2):
             d = (m2 / c1) / (jnp.sqrt(v2 / c2) + self.eps)
             p32 = p.astype(jnp.float32)
-            p32 = p32 - lr * (d + self.weight_decay * p32)
-            return p32.astype(p.dtype), m2, v2
+            return (p32 - lr * (d + self.weight_decay * p32)).astype(p.dtype)
 
-        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
-        pick = lambda i: jax.tree.map(lambda t: t[i], out,
-                                      is_leaf=lambda t: isinstance(t, tuple))
-        return pick(0), {"m": pick(1), "v": pick(2)}
+        return jax.tree.map(upd, params, m, v), {"m": m, "v": v}
+
+    def plane_hypers(self) -> dict:
+        return {"b1": self.b1, "b2": self.b2, "eps": self.eps,
+                "weight_decay": self.weight_decay}
+
+    def plane_scalars(self, step):
+        from repro.optim.sgd import _scalars
+        t = jnp.asarray(step).astype(jnp.float32) + 1.0
+        return _scalars(self._lr(step), 1.0 - self.b1 ** t,
+                        1.0 - self.b2 ** t)

@@ -9,6 +9,11 @@ import jax.numpy as jnp
 
 
 class schedules:
+    """Learning-rate schedules. Every schedule casts ``step`` to float32
+    first, so host-path calls with a Python int produce the same strong
+    float32 value (not a weak / float64-promoted one) as the engine's
+    traced int32 step — traces stay bit-identical across both paths."""
+
     @staticmethod
     def constant(lr: float) -> Callable:
         return lambda step: jnp.asarray(lr, jnp.float32)
@@ -16,20 +21,35 @@ class schedules:
     @staticmethod
     def inverse(alpha: float, d: float) -> Callable:
         """The paper's §3.1 schedule: alpha / (t + d)."""
-        return lambda step: jnp.asarray(alpha, jnp.float32) / (step + d)
+        return lambda step: (jnp.asarray(alpha, jnp.float32)
+                             / (jnp.asarray(step, jnp.float32) + d))
 
     @staticmethod
     def exponential_epoch(lr0: float, decay: float, steps_per_epoch: int):
         """The paper's §3.2 CNN schedule: x``decay`` each epoch."""
         def fn(step):
+            step = jnp.asarray(step, jnp.float32)
             epoch = jnp.floor(step / steps_per_epoch)
             return jnp.asarray(lr0, jnp.float32) * decay ** epoch
         return fn
 
 
+def _scalars(lr, c1=1.0, c2=1.0):
+    """(4,) float32 dynamic-scalar vector for repro.kernels.opt_step:
+    [lr, bias-correction c1, bias-correction c2, unused]."""
+    z = jnp.zeros((), jnp.float32)
+    return jnp.stack([jnp.asarray(lr, jnp.float32).reshape(()),
+                      jnp.asarray(c1, jnp.float32).reshape(()),
+                      jnp.asarray(c2, jnp.float32).reshape(()), z])
+
+
 @dataclass(frozen=True)
 class SGD:
     lr: Callable | float = 0.01
+
+    # plane protocol (repro.core.flat.FlatOptSpec / repro.kernels.opt_step)
+    plane_kind = "sgd"
+    state_planes = 0
 
     def _lr(self, step):
         return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
@@ -45,6 +65,14 @@ class SGD:
             params, grads)
         return new, state
 
+    def plane_hypers(self) -> dict:
+        """Static hyperparameters for the fused plane update."""
+        return {}
+
+    def plane_scalars(self, step):
+        """Per-step dynamic scalars (see ``_scalars``)."""
+        return _scalars(self._lr(step))
+
 
 @dataclass(frozen=True)
 class Momentum:
@@ -52,6 +80,9 @@ class Momentum:
     lr: Callable | float = 0.01
     mu: float = 0.9
     nesterov: bool = False
+
+    plane_kind = "momentum"
+    state_planes = 1  # velocity
 
     def _lr(self, step):
         return self.lr(step) if callable(self.lr) else jnp.asarray(self.lr)
@@ -69,3 +100,9 @@ class Momentum:
             )).astype(p.dtype),
             params, grads, vel)
         return new, vel
+
+    def plane_hypers(self) -> dict:
+        return {"mu": self.mu, "nesterov": self.nesterov}
+
+    def plane_scalars(self, step):
+        return _scalars(self._lr(step))

@@ -132,6 +132,39 @@ def _flat(axes):
     return tuple(out)
 
 
+# --------------------------------------------------------------------------
+# Flat (M, P) plane sharding (the phase engine's worker-axis layout)
+# --------------------------------------------------------------------------
+
+def mesh_worker_axes(mesh) -> tuple:
+    """The mesh axes that form the local-SGD worker axis: ("pod","data")
+    when both exist, else ("data",), else the mesh's first axis."""
+    axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    return axes or tuple(mesh.axis_names[:1])
+
+
+def plane_sharding(mesh, *, axes=None):
+    """NamedSharding for the flat (M, P) plane — and for any engine leaf
+    with a leading worker axis: M splits over the worker mesh axes, all
+    trailing dims (the P columns) stay replicated within a worker
+    shard."""
+    axes = tuple(axes) if axes else mesh_worker_axes(mesh)
+    return jax.sharding.NamedSharding(mesh, P(axes))
+
+
+def engine_state_sharding(mesh, state, *, axes=None):
+    """Shardings for a full ``repro.core.EngineState``: worker-axis
+    leaves (params + optimizer state) via :func:`plane_sharding`,
+    everything else (outer state, PRNG keys, step) replicated."""
+    ws = plane_sharding(mesh, axes=axes)
+    repl = jax.sharding.NamedSharding(mesh, P())
+    return type(state)(
+        jax.tree.map(lambda _: ws, state.worker_params),
+        jax.tree.map(lambda _: ws, state.opt_state),
+        jax.tree.map(lambda _: repl, state.outer_state),
+        repl, repl, repl)
+
+
 _SIZES = {}
 
 

@@ -1,0 +1,144 @@
+"""Sharded (M, P) plane: shard_map phase over the mesh worker axes.
+
+The heavyweight validation runs in a subprocess with
+``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (jax fixes its
+device count at import, so the parent process can't flip it):
+
+  - gather collective: bit-identical params AND history vs the
+    single-device engine for the paper's Momentum recipe, across all 5
+    averaging schedules (+ the outer optimizer and the indexed
+    on-device data plane);
+  - psum collective: identical decision streams / averaging counts,
+    params and traces equal to f32 roundoff.
+
+In-process tests cover the sharding spec helpers.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding.specs import (engine_state_sharding, mesh_worker_axes,
+                                  plane_sharding)
+
+_SCRIPT = r"""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import AveragingSchedule, PhaseEngine, OuterOptimizer
+from repro.data.pipeline import DeviceDataset
+from repro.optim import Momentum
+
+assert len(jax.devices()) == 8, jax.devices()
+DIM, SAMPLES, WORKERS, STEPS = 12, 256, 16, 41
+rng = np.random.default_rng(0)
+X = rng.standard_normal((SAMPLES, DIM))
+y = X @ rng.standard_normal(DIM)
+Xj, yj = jnp.asarray(X), jnp.asarray(y)
+idx = rng.integers(0, SAMPLES, (STEPS, WORKERS, 8))
+
+def loss_fn(params, batch, rng):
+    r = batch["x"] @ params["w"] - batch["y"]
+    return 0.5 * jnp.mean(r * r), {}
+
+params = {"w": jnp.zeros(DIM)}
+batches = lambda: [{"x": Xj[idx[t]], "y": yj[idx[t]]} for t in range(STEPS)]
+mesh = jax.make_mesh((8,), ("data",))
+kw = dict(num_workers=WORKERS, seed=3, record_every=1)
+opt = lambda: Momentum(lr=0.05, mu=0.9)
+
+scheds = {
+    "oneshot": AveragingSchedule("oneshot"),
+    "minibatch": AveragingSchedule("minibatch"),
+    "periodic": AveragingSchedule("periodic", 8),
+    "stochastic": AveragingSchedule("stochastic", zeta=0.2),
+    "hierarchical": AveragingSchedule("hierarchical", inner_phase_len=5,
+                                      outer_phase_len=20, inner_groups=2),
+}
+for name, sch in scheds.items():
+    f0, h0 = PhaseEngine(loss_fn, opt(), sch).run(params, batches(), **kw)
+    # gather collective: bit-identical
+    f1, h1 = PhaseEngine(loss_fn, opt(), sch, mesh=mesh,
+                         collective="gather").run(params, batches(), **kw)
+    np.testing.assert_array_equal(np.asarray(f0["w"]), np.asarray(f1["w"]))
+    assert h0 == h1, name
+    # psum collective: same decisions, f32-roundoff params/traces
+    f2, h2 = PhaseEngine(loss_fn, opt(), sch, mesh=mesh,
+                         collective="psum").run(params, batches(), **kw)
+    np.testing.assert_allclose(np.asarray(f0["w"]), np.asarray(f2["w"]),
+                               rtol=1e-5, atol=1e-7)
+    assert h0["averages"] == h2["averages"], name
+    assert [t for t, _ in h0["dispersion"]] == \
+        [t for t, _ in h2["dispersion"]], name
+    np.testing.assert_allclose([v for _, v in h0["loss"]],
+                               [v for _, v in h2["loss"]],
+                               rtol=1e-5, atol=1e-7)
+    print("ok", name)
+
+# outer optimizer, sharded
+sch = AveragingSchedule("periodic", 8)
+mk = lambda **e: PhaseEngine(loss_fn, opt(), sch,
+                             outer=OuterOptimizer(lr=0.8, momentum=0.5), **e)
+f0, h0 = mk().run(params, batches(), **kw)
+f1, h1 = mk(mesh=mesh, collective="gather").run(params, batches(), **kw)
+np.testing.assert_array_equal(np.asarray(f0["w"]), np.asarray(f1["w"]))
+assert h0 == h1
+print("ok outer")
+
+# indexed on-device data plane, sharded
+f0, h0 = PhaseEngine(loss_fn, opt(), sch).run(
+    params, DeviceDataset({"x": Xj, "y": yj}, WORKERS, indices=idx), **kw)
+f1, h1 = PhaseEngine(loss_fn, opt(), sch, mesh=mesh,
+                     collective="gather").run(
+    params, DeviceDataset({"x": Xj, "y": yj}, WORKERS, indices=idx), **kw)
+np.testing.assert_array_equal(np.asarray(f0["w"]), np.asarray(f1["w"]))
+assert h0 == h1
+print("ok indexed")
+print("ALL-OK")
+"""
+
+
+def test_sharded_engine_matches_single_device():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.pathsep.join(
+        [os.path.join(os.path.dirname(__file__), "..", "src"),
+         env.get("PYTHONPATH", "")])
+    out = subprocess.run([sys.executable, "-c", _SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=1200)
+    assert out.returncode == 0, out.stdout + "\n" + out.stderr
+    assert "ALL-OK" in out.stdout
+
+
+def test_mesh_worker_axes():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    assert mesh_worker_axes(mesh) == ("data",)
+    mesh3 = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    assert mesh_worker_axes(mesh3) == ("pod", "data")
+
+
+def test_plane_sharding_spec():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    s = plane_sharding(mesh)
+    assert s.spec == P(("data",))
+    s2 = plane_sharding(mesh, axes=("model",))
+    assert s2.spec == P(("model",))
+
+
+def test_engine_state_sharding_tree():
+    from repro.core import EngineState
+    mesh = jax.make_mesh((1,), ("data",))
+    state = EngineState(
+        worker_params={"w": np.zeros((4, 3))},
+        opt_state={"v": np.zeros((4, 3))},
+        outer_state=(),
+        key=np.zeros(2, np.uint32), dec_key=np.zeros(2, np.uint32),
+        step=np.int32(0))
+    sh = engine_state_sharding(mesh, state)
+    assert sh.worker_params["w"].spec == P(("data",))
+    assert sh.opt_state["v"].spec == P(("data",))
+    assert sh.key.spec == P()
+    assert sh.step.spec == P()
