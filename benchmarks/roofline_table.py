@@ -102,25 +102,25 @@ def avg_disp_roofline(m: int, p: int, *, groups: int = 1,
 def opt_step_roofline(m: int, p: int, *, kind: str = "momentum",
                       mode: str = "mean", hw: HW = HW()) -> dict:
     """Bytes / FLOPs of ONE fused opt_step pass (repro.kernels.opt_step):
-    local optimizer update on the (M, P) plane + S state planes, plus —
-    on averaging steps (mode != "none") — worker mean, Eq. 4 dispersion
-    and broadcast in the same pass.
+    local optimizer update on the (M, P) plane + S state planes, plus
+    the worker mean + Eq. 4 dispersion in EVERY mode (the always-on
+    dispersion that drives the adaptive schedules and the per-step
+    trace), and the broadcast on averaging steps (mode != "none").
 
     Reads: param plane + grad plane + S state planes; writes: param
     plane + S state planes (each M·P·4 B). FLOPs per element: sgd 2
-    (fma), momentum 4, adamw ~12 (incl. div/sqrt), + ~4 for
-    mean/dispersion/broadcast when averaging. The un-fused path pays an
-    extra read+write sweep of the plane for the optimizer update before
-    the avg_disp pass (3 sweeps on averaging steps; tree-path
-    optimizers additionally traverse every leaf)."""
+    (fma), momentum 4, adamw ~12 (incl. div/sqrt), + ~4 for the
+    mean/dispersion reduction (all modes — it rides the same sweep, so
+    the always-on measurement adds no memory traffic). The un-fused
+    path pays an extra read+write sweep of the plane for the optimizer
+    update before the avg_disp pass (3 sweeps on averaging steps;
+    tree-path optimizers additionally traverse every leaf)."""
     s = {"sgd": 0, "momentum": 1, "adamw": 2}[kind]
     upd_f = {"sgd": 2, "momentum": 4, "adamw": 12}[kind]
     elems = m * p
     read_b = 4 * elems * (2 + s)
     write_b = 4 * elems * (1 + s)
-    flops = upd_f * elems
-    if mode != "none":
-        flops += 4 * elems + 2 * p
+    flops = upd_f * elems + 4 * elems + 2 * p
     bytes_total = read_b + write_b
     return {
         "kernel": f"opt_step[{kind},{mode}]",

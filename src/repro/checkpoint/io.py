@@ -57,11 +57,13 @@ def load_checkpoint(path: str, like_tree):
 
 def save_engine_state(path: str, state, *, extra: dict | None = None):
     """Checkpoint a full ``repro.core.EngineState`` — worker params,
-    optimizer state, outer-optimizer state, both PRNG keys and the step
-    counter — so ``PhaseEngine.run(..., state=loaded)`` continues the
-    run bit-identically to one that was never interrupted (averaging
-    decisions are pure functions of (dec_key, step), and the data-rng
-    key carries forward)."""
+    optimizer state, outer-optimizer state, both PRNG keys, the step
+    counter and the schedule state — so ``PhaseEngine.run(...,
+    state=loaded)`` continues the run bit-identically to one that was
+    never interrupted (static averaging decisions are pure functions of
+    (dec_key, step); the adaptive schedules' decisions are pure
+    functions of the checkpointed ``SchedState``, which carries the
+    dispersion EMA, pacing credit and budget spent forward)."""
     state = jax.device_get(state)
     save_checkpoint(path, state, step=int(state.step), extra=extra)
 
@@ -69,6 +71,18 @@ def save_engine_state(path: str, state, *, extra: dict | None = None):
 def load_engine_state(path: str, like_state):
     """Restore an EngineState saved by :func:`save_engine_state` into
     the structure of ``like_state`` (e.g. ``engine.init(params, M)``).
-    Returns (state, step)."""
-    state, step = load_checkpoint(path, like_state)
+    Returns (state, step).
+
+    Checkpoints written before ``EngineState`` carried the schedule
+    state load too: the missing ``SchedState`` leaves are taken fresh
+    from ``like_state`` (all-zero bookkeeping — exactly where a run of
+    a pre-SchedState build stood)."""
+    try:
+        state, step = load_checkpoint(path, like_state)
+    except AssertionError:
+        if getattr(like_state, "sched", ()) == ():
+            raise
+        bare = like_state._replace(sched=())
+        state, step = load_checkpoint(path, bare)
+        state = state._replace(sched=like_state.sched)
     return state, step

@@ -3,6 +3,7 @@ SGD, its variance model, and its closed-form theory."""
 from repro.core.averaging import (  # noqa: F401
     AveragingSchedule,
     OuterOptimizer,
+    SchedState,
     average_all,
     average_inner,
     worker_dispersion,

@@ -7,6 +7,24 @@ A *schedule* decides WHEN the M workers' models are averaged:
   - stochastic(ζ): i.i.d. per-step probability ζ (paper §2.3 / Lemma 1)
   - hierarchical : inner groups every K_inner, all workers every K_outer
                    (beyond-paper: matches TPU ICI/DCI bandwidth hierarchy)
+  - adaptive_threshold : average when the running EMA of the Eq. 4
+                   dispersion crosses ``disp_threshold`` — communication
+                   follows the measured gradient-variance envelope the
+                   paper says governs whether averaging helps
+  - adaptive_budget : APA-style (Jiang & Agrawal, arXiv:2007.06134):
+                   spend at most ``comm_budget`` averaging events over
+                   ``budget_horizon`` steps, paced proportionally to the
+                   measured dispersion envelope — high-dispersion
+                   stretches get communication ahead of uniform pacing,
+                   quiet stretches save it
+
+The two adaptive kinds are *stateful*: their decisions are pure
+functions of an explicit :class:`SchedState` (dispersion EMA, cumulative
+dispersion, pacing credit, events spent, steps since the last event)
+threaded through the phase scan and checkpointed in ``EngineState`` —
+see :meth:`AveragingSchedule.decision_state`. The static kinds flow
+through the same transition (their state is pure bookkeeping), so every
+engine path carries one uniform carry.
 
 An averaging *operator* says HOW: plain mean, or an outer optimizer
 (Nesterov momentum on the averaging direction — beyond-paper, DiLoCo-like).
@@ -18,24 +36,53 @@ exactly those axes.
 """
 from __future__ import annotations
 
+import math
 from dataclasses import dataclass
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 
+class SchedState(NamedTuple):
+    """The stateful-schedule carry: everything an adaptive decision may
+    depend on, as jnp scalars so it rides the phase scan and checkpoints
+    inside ``EngineState`` bit-exactly.
+
+    ``disp_ema`` is the running EMA of the per-step Eq. 4 dispersion,
+    reset to 0 at every averaging event (so it measures dispersion built
+    up *since* the last average). ``cum_disp`` is the un-reset running
+    sum (the envelope's integral), ``credit`` the adaptive_budget pacing
+    credit, ``comm_spent`` the number of averaging events so far, and
+    ``since_avg`` the steps since the last event. The static schedule
+    kinds update the same fields (pure bookkeeping), so every engine
+    path carries one uniform state."""
+    disp_ema: jnp.ndarray    # f32 scalar
+    cum_disp: jnp.ndarray    # f32 scalar
+    credit: jnp.ndarray      # f32 scalar
+    comm_spent: jnp.ndarray  # int32 scalar
+    since_avg: jnp.ndarray   # int32 scalar
+
+
 @dataclass(frozen=True)
 class AveragingSchedule:
-    kind: str = "periodic"      # oneshot | minibatch | periodic | stochastic | hierarchical
+    kind: str = "periodic"      # oneshot | minibatch | periodic | stochastic
+    #                           # | hierarchical | adaptive_threshold
+    #                           # | adaptive_budget
     phase_len: int = 128        # K for periodic
     zeta: float = 0.0           # for stochastic
     inner_phase_len: int = 16   # hierarchical: average inner groups every K_i
     outer_phase_len: int = 512  # hierarchical: average everyone every K_o
     inner_groups: int = 1       # hierarchical: number of inner groups
+    disp_threshold: float = 0.0  # adaptive_threshold: EMA trip level
+    disp_ema_beta: float = 0.9  # adaptive: dispersion EMA decay
+    comm_budget: int = 0        # adaptive_budget: max averaging events
+    budget_horizon: int = 0     # adaptive_budget: steps the budget spans
 
     _KINDS = ("oneshot", "minibatch", "periodic", "stochastic",
-              "hierarchical")
+              "hierarchical", "adaptive_threshold", "adaptive_budget")
+    _ADAPTIVE = ("adaptive_threshold", "adaptive_budget")
 
     def __post_init__(self):
         # the engine lowers decisions to traced integer mod / bernoulli
@@ -56,8 +103,38 @@ class AveragingSchedule:
                 "hierarchical needs inner_phase_len/outer_phase_len/"
                 f"inner_groups >= 1, got ({self.inner_phase_len}, "
                 f"{self.outer_phase_len}, {self.inner_groups})")
+        if self.is_adaptive and not 0.0 <= self.disp_ema_beta < 1.0:
+            raise ValueError(f"adaptive schedules need 0 <= disp_ema_beta "
+                             f"< 1, got {self.disp_ema_beta}")
+        if self.kind == "adaptive_threshold" and self.disp_threshold <= 0.0:
+            raise ValueError(f"adaptive_threshold needs disp_threshold > 0, "
+                             f"got {self.disp_threshold}")
+        if self.kind == "adaptive_budget":
+            if self.comm_budget < 1 or self.budget_horizon < 1:
+                raise ValueError(
+                    "adaptive_budget needs comm_budget >= 1 and "
+                    f"budget_horizon >= 1, got ({self.comm_budget}, "
+                    f"{self.budget_horizon})")
+            if self.comm_budget > self.budget_horizon:
+                raise ValueError(
+                    f"adaptive_budget cannot spend {self.comm_budget} "
+                    f"events in {self.budget_horizon} steps (at most one "
+                    "averaging event per step)")
+
+    @property
+    def is_adaptive(self) -> bool:
+        return self.kind in self._ADAPTIVE
 
     def expected_phase_len(self) -> float:
+        """A-priori expected steps between communication events.
+
+        For ``hierarchical`` this counts *any* event (inner or outer):
+        events sit at multiples of K_i or K_o, so the rate is the
+        harmonic combination 1/K_i + 1/K_o - 1/lcm(K_i, K_o) (the lcm
+        term removes the double-counted coinciding steps). For
+        ``adaptive_threshold`` the interval is data-dependent with no
+        a-priori value — returns NaN. For ``adaptive_budget`` it is the
+        budget's paced average interval."""
         if self.kind == "oneshot":
             return float("inf")
         if self.kind == "minibatch":
@@ -67,8 +144,85 @@ class AveragingSchedule:
         if self.kind == "stochastic":
             return 1.0 / max(self.zeta, 1e-12)
         if self.kind == "hierarchical":
-            return float(self.inner_phase_len)
+            ki, ko = self.inner_phase_len, self.outer_phase_len
+            rate = 1.0 / ki + 1.0 / ko - 1.0 / math.lcm(ki, ko)
+            return 1.0 / rate
+        if self.kind == "adaptive_threshold":
+            return float("nan")
+        if self.kind == "adaptive_budget":
+            return self.budget_horizon / self.comm_budget
         raise ValueError(self.kind)
+
+    def init_sched_state(self) -> SchedState:
+        # distinct arrays per field: EngineState is buffer-donated, and
+        # aliased leaves would be donated twice
+        f32 = lambda: jnp.zeros((), jnp.float32)
+        i32 = lambda: jnp.zeros((), jnp.int32)
+        return SchedState(f32(), f32(), f32(), i32(), i32())
+
+    def decision_state(self, step, sched_state: SchedState, disp, key=None):
+        """The stateful on-device decision: one pure transition
+        ``(step, state, dispersion) -> (code, new state)`` shared by
+        every engine path (flat-native scan, tree scan, sharded
+        shard_map body, host loop), so decisions replay bit-identically
+        across paths, phase blockings, and checkpoint/resume.
+
+        ``disp`` is the Eq. 4 dispersion measured at THIS step, after
+        the local update and before any averaging (the fused
+        opt_step/avg_disp passes emit it every step). ``step`` may be a
+        Python int (host loop) or a traced int32 scalar (scan body);
+        the returned code is int32 (0: none, 1: inner, 2: all).
+
+        Transition: the dispersion EMA advances by ``disp_ema_beta``
+        (then resets to 0 when an averaging event fires, so it measures
+        dispersion built since the last average); ``adaptive_threshold``
+        fires when the EMA crosses ``disp_threshold``;
+        ``adaptive_budget`` accrues pacing credit at the uniform rate
+        ``comm_budget / budget_horizon`` scaled by the current EMA
+        relative to the long-run mean dispersion (APA-style: spend the
+        budget where the envelope is high), fires when a whole credit is
+        accumulated, and never exceeds ``comm_budget`` events. Static
+        kinds defer to :meth:`decision_code` and only update the
+        bookkeeping fields.
+
+        Determinism caveat: the transition is bitwise reproducible for
+        a FIXED ``disp`` stream, but ``disp`` itself is a float32
+        reduction whose summation order differs across engine paths
+        (flat plane vs per-leaf tree sums vs psum of shard partials).
+        A run whose EMA lands within a last-ulp tie of the trip level
+        at a decision step could therefore fire one step apart between
+        paths on multi-leaf models; the single-buffer paths (flat vs
+        host on one leaf, gather-collective vs single-device) reduce
+        identically and replay identical decision streams — what the
+        equivalence tests pin."""
+        s = sched_state
+        disp = jnp.asarray(disp, jnp.float32)
+        beta = jnp.asarray(self.disp_ema_beta, jnp.float32)
+        ema = beta * s.disp_ema + (1.0 - beta) * disp
+        cum = s.cum_disp + disp
+        credit = s.credit
+        if self.kind == "adaptive_threshold":
+            code = jnp.where(ema > self.disp_threshold, 2, 0)
+            code = code.astype(jnp.int32)
+        elif self.kind == "adaptive_budget":
+            rate = jnp.asarray(self.comm_budget / self.budget_horizon,
+                               jnp.float32)
+            mean = cum / jnp.maximum(jnp.asarray(step, jnp.float32), 1.0)
+            w = jnp.where(mean > 0.0, ema / jnp.maximum(mean, 1e-30), 0.0)
+            credit = credit + rate * w
+            fire = (credit >= 1.0) & (s.comm_spent < self.comm_budget)
+            code = jnp.where(fire, 2, 0).astype(jnp.int32)
+            credit = jnp.where(fire, credit - 1.0, credit)
+        else:
+            code = self.decision_code(step, key)
+        avg = code > 0
+        new = SchedState(
+            disp_ema=jnp.where(avg, 0.0, ema).astype(jnp.float32),
+            cum_disp=cum,
+            credit=jnp.asarray(credit, jnp.float32),
+            comm_spent=s.comm_spent + avg.astype(jnp.int32),
+            since_avg=jnp.where(avg, 0, s.since_avg + 1).astype(jnp.int32))
+        return code, new
 
     def decision_code(self, step, key=None):
         """On-device decision for step ``step`` (1-indexed steps done).
@@ -80,7 +234,14 @@ class AveragingSchedule:
         schedule a pure function of (key, step): reproducible, resumable
         from a checkpointed key, and identical whether evaluated on-device
         (engine) or eagerly on host (legacy loop).
+
+        The adaptive kinds have no stateless decision — use
+        :meth:`decision_state`.
         """
+        if self.is_adaptive:
+            raise ValueError(
+                f"{self.kind} decisions depend on SchedState; use "
+                "decision_state(step, sched_state, disp, key)")
         if self.kind == "oneshot":
             return jnp.zeros((), jnp.int32)
         if self.kind == "minibatch":
@@ -102,7 +263,12 @@ class AveragingSchedule:
     def wants_average(self, step: int, rng: np.random.Generator | None = None):
         """Legacy host-side decision for step ``step`` (1-indexed steps
         done). Returns "none" | "inner" | "all". Stochastic draws use the
-        numpy generator; the engine path uses ``decision_code`` instead."""
+        numpy generator; the engine path uses ``decision_code`` instead.
+        The adaptive kinds need :meth:`decision_state`."""
+        if self.is_adaptive:
+            raise ValueError(
+                f"{self.kind} decisions depend on SchedState; use "
+                "decision_state(step, sched_state, disp, key)")
         if self.kind == "oneshot":
             return "none"
         if self.kind == "minibatch":

@@ -9,7 +9,7 @@ the whole phase instead:
     run_phase(state, batches)          # ONE dispatch per phase
       └─ jax.lax.scan over K steps     # batches gathered on-device from
            └─ vmap over M workers      #   index blocks, or prefetched as
-           └─ schedule.decision_code   #   a staged (K, M, ...) block
+           └─ schedule.decision_state  #   a staged (K, M, ...) block
                 none / inner / all averaging (+ outer optimizer)
       └─ loss + dispersion traces accumulated on-device, fetched once
 
@@ -45,6 +45,17 @@ Schedules lower to on-device control flow as follows:
   - periodic(K) : ``step % K == 0`` predicate under ``lax.switch``
   - stochastic  : ``bernoulli(fold_in(key, step), ζ)`` under ``lax.switch``
   - hierarchical: two modulo predicates select none / inner / all
+  - adaptive_threshold / adaptive_budget: the fused step passes emit the
+    Eq. 4 dispersion EVERY step; ``AveragingSchedule.decision_state`` —
+    a pure transition on the :class:`repro.core.averaging.SchedState`
+    carried in the scan and in :class:`EngineState` — turns it into the
+    none / all decision under the same ``lax.switch``
+
+Because the fused passes always measure the dispersion, the per-step
+``dispersion`` trace is the true Eq. 4 diagnostic on EVERY step (it used
+to read 0.0 between averaging events), in all four paths: flat-native,
+flat, tree, and the host loop — and in both sharded collectives (psum
+mode pays one extra psum of the per-shard squared sums per step).
 
 :meth:`PhaseEngine.run` is the production driver (one compiled dispatch
 per phase); :meth:`PhaseEngine.run_host` keeps the legacy per-step
@@ -63,7 +74,8 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.averaging import (AveragingSchedule, OuterOptimizer,
-                                  average_inner, worker_dispersion)
+                                  SchedState, average_inner,
+                                  worker_dispersion)
 from repro.core.flat import FlatOptSpec, FlatSpec
 from repro.data.pipeline import DeviceDataset, Prefetcher
 from repro.kernels.avg_disp import avg_disp, avg_disp_outer
@@ -159,6 +171,7 @@ class EngineState(NamedTuple):
     key: Any             # data-rng key, split once per step
     dec_key: Any         # schedule-decision root key (constant)
     step: Any            # int32 scalar, steps completed
+    sched: Any = ()      # SchedState (adaptive-schedule carry), or ()
 
 
 @dataclass(frozen=True, eq=False)  # eq=False: hash by identity for jit
@@ -209,7 +222,21 @@ class PhaseEngine:
         return make_worker_step(self.loss_fn, self.optimizer)
 
     # ---- state -----------------------------------------------------------
+    def _check_workers(self, num_workers: int):
+        """``average_inner`` reshapes the worker axis into inner_groups
+        contiguous groups; a non-dividing group count would surface
+        mid-trace as an opaque reshape error — fail eagerly here, where
+        M is first known."""
+        g = self.schedule.inner_groups
+        if self.schedule.kind == "hierarchical" and num_workers % g:
+            raise ValueError(
+                f"hierarchical inner averaging splits the worker axis "
+                f"into inner_groups={g} contiguous groups, but "
+                f"num_workers={num_workers} is not divisible by it — "
+                "pick inner_groups dividing the worker count")
+
     def init(self, params, num_workers: int, seed: int = 0) -> EngineState:
+        self._check_workers(num_workers)
         wp = replicate(params, num_workers)
         opt_state = jax.vmap(self.optimizer.init)(wp)
         outer_state = ()
@@ -218,7 +245,8 @@ class PhaseEngine:
             outer_state = (avg, self.outer.init(avg))
         key, dec_key = jax.random.split(jax.random.PRNGKey(seed))
         return EngineState(wp, opt_state, outer_state, key, dec_key,
-                           jnp.zeros((), jnp.int32))
+                           jnp.zeros((), jnp.int32),
+                           self.schedule.init_sched_state())
 
     # ---- fused flat averaging -------------------------------------------
     def _use_pallas(self) -> bool:
@@ -320,33 +348,42 @@ class PhaseEngine:
         return plane, outer_c, disp
 
     def _flat_native_step(self, spec, plane, gplane, planes, outer_c,
-                          scalars, code):
+                          scalars, step, sst, dec_key):
         """One flat-native step: fused update(+average) for the
         every-step schedules, update-then-switched-average for the rare
-        ones. Returns (plane, state planes, outer_c, dispersion)."""
+        ones. The fused update always emits the Eq. 4 dispersion of the
+        post-update plane, which feeds the stateful schedule decision
+        (``AveragingSchedule.decision_state``) and the per-step trace.
+        Returns (plane, state planes, outer_c, sched state, dispersion,
+        decision code)."""
         sched = self.schedule
         if sched.kind == "minibatch":
-            return self._fused_step_average(spec, plane, gplane, planes,
-                                            outer_c, scalars, "all")
-        if sched.kind == "oneshot":
-            return self._fused_step_average(spec, plane, gplane, planes,
-                                            outer_c, scalars, "none")
-        plane, planes, outer_c, _ = self._fused_step_average(
+            # the all-average is unconditional — fuse it into the update
+            # pass; the (static) decision still advances the sched state
+            plane, planes, outer_c, disp = self._fused_step_average(
+                spec, plane, gplane, planes, outer_c, scalars, "all")
+            code, sst = sched.decision_state(step, sst, disp, dec_key)
+            return plane, planes, outer_c, sst, disp, code
+        plane, planes, outer_c, disp = self._fused_step_average(
             spec, plane, gplane, planes, outer_c, scalars, "none")
+        code, sst = sched.decision_state(step, sst, disp, dec_key)
+        if sched.kind == "oneshot":
+            return plane, planes, outer_c, sst, disp, code
 
         def none_branch(args):
-            return args[0], args[1], jnp.zeros((), jnp.float32)
+            return args[0], args[1]
 
         def inner_branch(args):
-            return self._plane_avg_event(spec, args[0], args[1], "inner")
+            return self._plane_avg_event(spec, args[0], args[1],
+                                         "inner")[:2]
 
         def all_branch(args):
-            return self._plane_avg_event(spec, args[0], args[1], "all")
+            return self._plane_avg_event(spec, args[0], args[1], "all")[:2]
 
-        plane, outer_c, disp = jax.lax.switch(
+        plane, outer_c = jax.lax.switch(
             code, [none_branch, inner_branch, all_branch],
             (plane, outer_c))
-        return plane, planes, outer_c, disp
+        return plane, planes, outer_c, sst, disp, code
 
     # ---- tree-path averaging (flat=False, and FlatSpec fallback) ---------
     def _apply_all_average(self, wp, outer_state, num_workers):
@@ -382,6 +419,7 @@ class PhaseEngine:
           tree        — params pytree carry (dtypes FlatSpec can't
             embed)."""
         num_workers = jax.tree.leaves(state.worker_params)[0].shape[0]
+        self._check_workers(num_workers)
         sched = self.schedule
         use_flat = self.flat and FlatSpec.supports(state.worker_params)
         spec = FlatSpec.of(state.worker_params) if use_flat else None
@@ -406,45 +444,59 @@ class PhaseEngine:
                     else None)
 
         def body(carry, xs_t):
-            wp_c, opt_c, outer_c, key, step = carry
+            wp_c, opt_c, outer_c, key, step, sst = carry
             step = step + 1
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, num_workers)
             batch = fetch(xs_t)
-            code = sched.decision_code(step, state.dec_key)
             if flat_native:
                 losses, _, gplane = grads_fn(wp_c, batch, rngs)
                 scal = self.optimizer.plane_scalars(step)
-                wp_c, opt_c, outer_c, disp = self._flat_native_step(
-                    spec, wp_c, gplane, opt_c, outer_c, scal, code)
+                wp_c, opt_c, outer_c, sst, disp, code = \
+                    self._flat_native_step(spec, wp_c, gplane, opt_c,
+                                           outer_c, scal, step, sst,
+                                           state.dec_key)
             else:
                 wp = spec.unpack(wp_c) if use_flat else wp_c
                 wp, opt_c, losses, _ = self.worker_step(
                     wp, opt_c, batch, step, rngs)
                 wp_c = spec.pack(wp) if use_flat else wp
+                # the Eq. 4 dispersion is measured EVERY step (post
+                # update, pre average): the stateful decision consumes
+                # it and the trace records the true diagnostic on
+                # non-averaging steps too
+                if use_flat:
+                    glob = jnp.mean(wp_c, axis=0)
+                    disp = (jnp.sum(jnp.square(wp_c - glob[None]))
+                            / num_workers)
+                else:
+                    disp = worker_dispersion(wp_c)
+                code, sst = sched.decision_state(step, sst, disp,
+                                                 state.dec_key)
                 if sched.kind == "oneshot":
-                    disp = jnp.zeros((), jnp.float32)
+                    pass
                 elif sched.kind == "minibatch":
-                    wp_c, outer_c, disp = average(wp_c, outer_c, "all")
+                    wp_c, outer_c, _ = average(wp_c, outer_c, "all")
                 else:
                     def none_branch(args):
-                        wp_c, oc = args
-                        return wp_c, oc, jnp.zeros((), jnp.float32)
+                        return args
 
                     def inner_branch(args):
-                        return average(*args, "inner")
+                        return average(*args, "inner")[:2]
 
                     def all_branch(args):
-                        return average(*args, "all")
+                        return average(*args, "all")[:2]
 
-                    wp_c, outer_c, disp = jax.lax.switch(
+                    wp_c, outer_c = jax.lax.switch(
                         code, [none_branch, inner_branch, all_branch],
                         (wp_c, outer_c))
-            return ((wp_c, opt_c, outer_c, key, step),
+            return ((wp_c, opt_c, outer_c, key, step, sst),
                     (jnp.mean(losses), disp.astype(jnp.float32), code))
 
-        carry0 = (carry_p, carry_s, carry_o, state.key, state.step)
-        (wp_c, opt_c, outer_c, key, step), (loss, disp, code) = \
+        sst0 = (state.sched if isinstance(state.sched, SchedState)
+                else sched.init_sched_state())
+        carry0 = (carry_p, carry_s, carry_o, state.key, state.step, sst0)
+        (wp_c, opt_c, outer_c, key, step, sst), (loss, disp, code) = \
             jax.lax.scan(body, carry0, xs, unroll=self.scan_unroll)
 
         if use_flat:
@@ -457,7 +509,7 @@ class PhaseEngine:
         else:
             wp, opt_state, outer_state = wp_c, opt_c, outer_c
         new_state = EngineState(wp, opt_state, outer_state, key,
-                                state.dec_key, step)
+                                state.dec_key, step, sst)
         return new_state, {"loss": loss, "dispersion": disp,
                            "avg_code": code}
 
@@ -479,32 +531,29 @@ class PhaseEngine:
             idx = idx * self.mesh.shape[a] + jax.lax.axis_index(a)
         return idx
 
-    def _psum_avg_event(self, spec, plane, outer_c, scope: str,
-                        m_global: int, ml: int):
+    def _psum_avg_event(self, spec, plane, outer_c, scope: str, glob,
+                        ml: int):
         """Cross-shard averaging event (no optimizer update) on this
-        shard's (M_l, P) rows. The all-scope mean is ONE psum of the
-        per-shard column sums (O(P) bytes/device); group (inner)
-        averages all_gather the rows instead (group boundaries need not
-        align with shard boundaries)."""
+        shard's (M_l, P) rows. ``glob`` is the (already psum'd) global
+        worker mean — computed once per step OUTSIDE the switch, where
+        the always-on dispersion needs it anyway, so the all-scope
+        broadcast (and the outer step) is shard-local here. Group
+        (inner) averages all_gather the rows instead (group boundaries
+        need not align with shard boundaries)."""
         codes = spec.rounding_codes()
         ax = self._worker_axes()
-        has_outer = (scope == "all" and self.outer is not None
-                     and outer_c != ())
         if scope == "inner":
             full = jax.lax.all_gather(plane, ax, axis=0, tiled=True)
-            full, disp = plane_average_ref(
+            full, _ = plane_average_ref(
                 full, groups=max(self.schedule.inner_groups, 1),
                 codes=codes)
             out = jax.lax.dynamic_slice_in_dim(
                 full, self._shard_index() * ml, ml, 0)
-            return out, outer_c, disp
-        glob = jax.lax.psum(jnp.sum(plane, axis=0), ax) / m_global
-        disp = jax.lax.psum(
-            jnp.sum(jnp.square(plane - glob[None])), ax) / m_global
-        if has_outer:
+            return out, outer_c
+        if codes is not None:
+            glob = round_to_codes(glob, codes)
+        if self.outer is not None and outer_c != ():
             prev, vel = outer_c
-            if codes is not None:
-                glob = round_to_codes(glob, codes)
             g = prev - glob
             vel = self.outer.momentum * vel + g
             step = (self.outer.momentum * vel + g if self.outer.nesterov
@@ -512,44 +561,50 @@ class PhaseEngine:
             upd = prev - self.outer.lr * step
             if codes is not None:
                 upd = round_to_codes(upd, codes)
-            out = jnp.broadcast_to(upd[None], plane.shape)
-            return out, (upd, vel), disp
-        if codes is not None:
-            glob = round_to_codes(glob, codes)
-        out = jnp.broadcast_to(glob[None], plane.shape)
-        return out, outer_c, disp
+            return jnp.broadcast_to(upd[None], plane.shape), (upd, vel)
+        return jnp.broadcast_to(glob[None], plane.shape), outer_c
 
     def _flat_native_step_psum(self, spec, plane, gplane, planes, outer_c,
-                               scalars, code, m_global: int, ml: int):
-        """psum-mode flat-native step: local plane update (always shard-
-        local, hoisted before the switch), then the cross-shard
-        averaging event per the decision code."""
+                               scalars, step, sst, dec_key,
+                               m_global: int, ml: int):
+        """psum-mode flat-native step: shard-local plane update (hoisted
+        before the switch), then the always-on Eq. 4 dispersion — ONE
+        psum of the per-shard column sums gives the global mean, one
+        more psums the per-shard squared-distance sums — feeding the
+        stateful schedule decision, then the cross-shard averaging
+        event per the decision code. Returns (plane, state planes,
+        outer_c, sched state, dispersion, code)."""
         sched = self.schedule
+        ax = self._worker_axes()
         plane, planes = plane_update_ref(
             plane, gplane, planes, scalars, kind=self.optimizer.plane_kind,
             codes=spec.rounding_codes(), **self.optimizer.plane_hypers())
+        glob = jax.lax.psum(jnp.sum(plane, axis=0), ax) / m_global
+        disp = jax.lax.psum(
+            jnp.sum(jnp.square(plane - glob[None])), ax) / m_global
+        code, sst = sched.decision_state(step, sst, disp, dec_key)
         if sched.kind == "oneshot":
-            return plane, planes, outer_c, jnp.zeros((), jnp.float32)
+            return plane, planes, outer_c, sst, disp, code
         if sched.kind == "minibatch":
-            plane, outer_c, disp = self._psum_avg_event(
-                spec, plane, outer_c, "all", m_global, ml)
-            return plane, planes, outer_c, disp
+            plane, outer_c = self._psum_avg_event(
+                spec, plane, outer_c, "all", glob, ml)
+            return plane, planes, outer_c, sst, disp, code
 
         def none_branch(args):
-            return args[0], args[1], jnp.zeros((), jnp.float32)
+            return args
 
         def inner_branch(args):
             return self._psum_avg_event(spec, args[0], args[1], "inner",
-                                        m_global, ml)
+                                        glob, ml)
 
         def all_branch(args):
             return self._psum_avg_event(spec, args[0], args[1], "all",
-                                        m_global, ml)
+                                        glob, ml)
 
-        plane, outer_c, disp = jax.lax.switch(
+        plane, outer_c = jax.lax.switch(
             code, [none_branch, inner_branch, all_branch],
             (plane, outer_c))
-        return plane, planes, outer_c, disp
+        return plane, planes, outer_c, sst, disp, code
 
     def _phase_sharded(self, state: EngineState, xs, fetch, m_global: int):
         """The phase body as run on ONE shard under shard_map.
@@ -573,6 +628,7 @@ class PhaseEngine:
         roundoff. The price: redundant compute and O(M·P) gather bytes
         per step; use gather to validate a mesh, psum to scale."""
         sched = self.schedule
+        self._check_workers(m_global)
         assert self.flat and FlatSpec.supports(state.worker_params), \
             "sharded runs require the flat (M, P) plane carry"
         assert self.collective in ("psum", "gather"), self.collective
@@ -594,12 +650,11 @@ class PhaseEngine:
         exact = self.collective == "gather"
 
         def body(carry, xs_t):
-            wp_c, opt_c, outer_c, key, step = carry
+            wp_c, opt_c, outer_c, key, step, sst = carry
             step = step + 1
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, m_global)
             batch = fetch(xs_t)
-            code = sched.decision_code(step, state.dec_key)
             scal = self.optimizer.plane_scalars(step)
             if exact:
                 wp_full = jax.lax.all_gather(wp_c, ax, axis=0, tiled=True)
@@ -610,8 +665,10 @@ class PhaseEngine:
                     lambda b: jax.lax.all_gather(b, ax, axis=0, tiled=True),
                     batch)
                 losses, _, gplane = grads_fn(wp_full, batch, rngs)
-                wp_full, opt_full, outer_c, disp = self._flat_native_step(
-                    spec, wp_full, gplane, opt_full, outer_c, scal, code)
+                wp_full, opt_full, outer_c, sst, disp, code = \
+                    self._flat_native_step(spec, wp_full, gplane, opt_full,
+                                           outer_c, scal, step, sst,
+                                           state.dec_key)
                 loss_t = jnp.mean(losses)
                 wp_c = jax.lax.dynamic_slice_in_dim(wp_full, i0, ml, 0)
                 opt_c = tuple(
@@ -620,15 +677,18 @@ class PhaseEngine:
             else:
                 rngs = jax.lax.dynamic_slice_in_dim(rngs, i0, ml, 0)
                 losses, _, gplane = grads_fn(wp_c, batch, rngs)
-                wp_c, opt_c, outer_c, disp = self._flat_native_step_psum(
-                    spec, wp_c, gplane, opt_c, outer_c, scal, code,
-                    m_global, ml)
+                wp_c, opt_c, outer_c, sst, disp, code = \
+                    self._flat_native_step_psum(spec, wp_c, gplane, opt_c,
+                                                outer_c, scal, step, sst,
+                                                state.dec_key, m_global, ml)
                 loss_t = jax.lax.psum(jnp.sum(losses), ax) / m_global
-            return ((wp_c, opt_c, outer_c, key, step),
+            return ((wp_c, opt_c, outer_c, key, step, sst),
                     (loss_t, disp.astype(jnp.float32), code))
 
-        carry0 = (carry_p, carry_s, carry_o, state.key, state.step)
-        (wp_c, opt_c, outer_c, key, step), (loss, disp, code) = \
+        sst0 = (state.sched if isinstance(state.sched, SchedState)
+                else sched.init_sched_state())
+        carry0 = (carry_p, carry_s, carry_o, state.key, state.step, sst0)
+        (wp_c, opt_c, outer_c, key, step, sst), (loss, disp, code) = \
             jax.lax.scan(body, carry0, xs, unroll=self.scan_unroll)
 
         wp = spec.unpack(wp_c)
@@ -638,7 +698,7 @@ class PhaseEngine:
             outer_state = (spec.unpack1(outer_c[0]),
                            spec.unpack1(outer_c[1], dtypes=jnp.float32))
         new_state = EngineState(wp, opt_state, outer_state, key,
-                                state.dec_key, step)
+                                state.dec_key, step, sst)
         return new_state, {"loss": loss, "dispersion": disp,
                            "avg_code": code}
 
@@ -648,7 +708,8 @@ class PhaseEngine:
             jax.tree.map(lambda _: ax, state.worker_params),
             jax.tree.map(lambda _: ax, state.opt_state),
             jax.tree.map(lambda _: P(), state.outer_state),
-            P(), P(), P())
+            P(), P(), P(),
+            jax.tree.map(lambda _: P(), state.sched))
 
     def _trace_specs(self):
         return {"loss": P(), "dispersion": P(), "avg_code": P()}
@@ -714,7 +775,11 @@ class PhaseEngine:
             return max(1, min(s.inner_phase_len, 512))
         if s.kind == "stochastic":
             return int(min(max(1.0 / max(s.zeta, 1e-12), 8), 128))
-        return 64  # oneshot / minibatch: any block size
+        if s.kind == "adaptive_budget":
+            return int(min(max(s.budget_horizon / max(s.comm_budget, 1), 8),
+                           128))
+        # oneshot / minibatch / adaptive_threshold: any block size
+        return 64
 
     # ---- drivers ---------------------------------------------------------
     def run(self, params, data, *, num_workers: int, seed: int = 0,
@@ -738,6 +803,12 @@ class PhaseEngine:
         boundaries coincide with phase ends). Returns (final averaged
         params, history dict).
 
+        The history records ``loss`` and ``disp_trace`` — the true
+        per-step Eq. 4 dispersion, measured after the local update and
+        before any averaging — every ``record_every`` steps, and
+        ``dispersion`` (the same pre-average diagnostic) at every
+        averaging event, plus the event count ``averages``.
+
         ``return_state`` appends the final :class:`EngineState` to the
         return tuple (for ``repro.checkpoint.save_engine_state``).
         ``state`` resumes a checkpointed :class:`EngineState`
@@ -747,6 +818,7 @@ class PhaseEngine:
         ``steps`` counts steps to run in THIS call. The returned history
         covers only this call.
         """
+        self._check_workers(num_workers)
         if state is None:
             state = self.init(params, num_workers, seed)
         if self.mesh is not None:
@@ -754,8 +826,8 @@ class PhaseEngine:
         t0 = int(state.step)
         block = phase_len or self.default_phase_len()
         needs_eval = bool(record_every and (eval_fn or worker_eval_fn))
-        hist = {"loss": [], "dispersion": [], "averages": 0, "eval": [],
-                "worker_eval": []}
+        hist = {"loss": [], "dispersion": [], "disp_trace": [],
+                "averages": 0, "eval": [], "worker_eval": []}
         total = None if steps is None else t0 + steps
 
         def take_at(t):
@@ -785,6 +857,8 @@ class PhaseEngine:
                     hist["averages"] += 1
                 if record_every and t % record_every == 0:
                     hist["loss"].append((t, float(trace["loss"][i])))
+                    hist["disp_trace"].append(
+                        (t, float(trace["dispersion"][i])))
             if needs_eval and t % record_every == 0:
                 if eval_fn is not None:
                     hist["eval"].append(
@@ -853,52 +927,61 @@ class PhaseEngine:
 
     # ---- legacy host-driven loop (benchmark baseline / equivalence) ------
     @partial(jax.jit, static_argnums=0)
-    def _host_step(self, wp, opt_state, batch, step, rngs):
+    def _host_step(self, wp, opt_state, batch, step, rngs, sst, dec_key):
+        """One host-loop step: the vmapped local update, the always-on
+        Eq. 4 dispersion (post update, pre average) and the stateful
+        schedule decision in one dispatch; the host reads the decision
+        code and conditionally dispatches the averaging event."""
         wp, opt_state, losses, _ = self.worker_step(wp, opt_state, batch,
                                                     step, rngs)
-        return wp, opt_state, jnp.mean(losses)
+        disp = worker_dispersion(wp).astype(jnp.float32)
+        code, sst = self.schedule.decision_state(step, sst, disp, dec_key)
+        return wp, opt_state, jnp.mean(losses), disp, code, sst
 
     @partial(jax.jit, static_argnums=(0, 3))
     def _host_average(self, wp, outer_state, scope: str):
         num_workers = jax.tree.leaves(wp)[0].shape[0]
-        disp = worker_dispersion(wp).astype(jnp.float32)
         if scope == "inner":
             return (average_inner(wp, max(self.schedule.inner_groups, 1)),
-                    outer_state, disp)
+                    outer_state)
         wp, outer_state = self._apply_all_average(wp, outer_state,
                                                   num_workers)
-        return wp, outer_state, disp
+        return wp, outer_state
 
     def run_host(self, params, batches, *, num_workers: int, seed: int = 0,
                  record_every: int = 0, eval_fn=None, worker_eval_fn=None):
         """Per-step host-driven loop: one jit dispatch per step, the
         averaging decision read on host, blocking ``float()`` metric
         reads. Numerically identical to :meth:`run` (same per-step rng
-        splits, same fold_in decision stream) — kept as the dispatch-bound
-        baseline the engine is benchmarked against. The history dict has
-        the same keys and semantics as :meth:`run`'s, including
-        ``worker_eval``."""
+        splits, same fold_in decision stream, same stateful-schedule
+        transition on the same per-step dispersion) — kept as the
+        dispatch-bound baseline the engine is benchmarked against. The
+        history dict has the same keys and semantics as :meth:`run`'s,
+        including ``disp_trace`` and ``worker_eval``."""
+        self._check_workers(num_workers)
         state = self.init(params, num_workers, seed)
         wp, opt_state, outer_state = (state.worker_params, state.opt_state,
                                       state.outer_state)
-        key = state.key
-        hist = {"loss": [], "dispersion": [], "averages": 0, "eval": [],
-                "worker_eval": []}
+        key, sst = state.key, state.sched
+        hist = {"loss": [], "dispersion": [], "disp_trace": [],
+                "averages": 0, "eval": [], "worker_eval": []}
         step = 0
         for batch in batches:
             step += 1
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, num_workers)
-            wp, opt_state, loss = self._host_step(
-                wp, opt_state, batch, jnp.asarray(step, jnp.int32), rngs)
-            code = int(self.schedule.decision_code(step, state.dec_key))
+            wp, opt_state, loss, disp, code, sst = self._host_step(
+                wp, opt_state, batch, jnp.asarray(step, jnp.int32), rngs,
+                sst, state.dec_key)
+            code = int(code)
             if code:
-                wp, outer_state, disp = self._host_average(
+                wp, outer_state = self._host_average(
                     wp, outer_state, "inner" if code == 1 else "all")
                 hist["dispersion"].append((step, float(disp)))
                 hist["averages"] += 1
             if record_every and step % record_every == 0:
                 hist["loss"].append((step, float(loss)))
+                hist["disp_trace"].append((step, float(disp)))
                 if eval_fn is not None:
                     hist["eval"].append((step, eval_fn(consensus(wp))))
                 if worker_eval_fn is not None:

@@ -78,13 +78,15 @@ def _opt_step_kernel(*refs, kind, mode, groups, nstate, has_codes,
     if has_codes:
         upd = _round_codes(upd, codes_ref[...])
 
-    if mode == "none":
-        o_ref[...] = upd
-        d_ref[0, 0] = jnp.zeros((), jnp.float32)
-        return
     m, bp = upd.shape
     glob = jnp.mean(upd, axis=0)                     # (block_p,)
+    # the Eq. 4 dispersion is emitted in EVERY mode: adaptive schedules
+    # and the per-step diagnostic trace consume it on non-averaging
+    # steps too (zero-padded columns are mean-0, so they contribute 0)
     d_ref[0, 0] = jnp.sum(jnp.square(upd - glob[None])) / m
+    if mode == "none":
+        o_ref[...] = upd
+        return
     if mode == "group" and groups > 1:
         gm = jnp.mean(upd.reshape(groups, m // groups, bp), axis=1)
         out = jnp.broadcast_to(gm[:, None], (groups, m // groups, bp))
@@ -116,8 +118,11 @@ def opt_step(plane, grads, planes, scalars, *, kind, mode="none",
     plane/grads: (M, P) f32; planes: tuple of S f32 state planes
     (``FlatOptSpec`` layout); scalars: (4,) f32 [lr, c1, c2, _];
     codes: optional (P,) f32 rounding codes. mode: "none" | "mean" |
-    "group". Returns (plane, state planes, Eq. 4 dispersion scalar —
-    0 for mode "none"). Matches ``repro.kernels.ref.opt_step_ref``.
+    "group". Returns (plane, state planes, Eq. 4 dispersion scalar).
+    The dispersion of the post-update plane is emitted in every mode —
+    "none" measures without averaging, so adaptive schedules and the
+    per-step diagnostic trace see the true value on every step.
+    Matches ``repro.kernels.ref.opt_step_ref``.
     """
     assert kind in _KINDS, kind
     assert mode in _MODES, mode

@@ -153,15 +153,21 @@ def opt_step_ref(plane, grads, planes, scalars, *, kind, mode="none",
     over the flat (M, P) plane — the jnp twin of
     ``repro.kernels.opt_step``.
 
-    mode: "none" (pure local step; dispersion 0), "mean" (step + worker
-    mean + Eq. 4 dispersion + broadcast), or "group" (per-group means;
-    dispersion still against the global mean). Returns
-    (plane, new state planes, dispersion)."""
+    mode: "none" (pure local step), "mean" (step + worker mean + Eq. 4
+    dispersion + broadcast), or "group" (per-group means; dispersion
+    still against the global mean). Returns
+    (plane, new state planes, dispersion). The Eq. 4 dispersion of the
+    post-update plane is emitted in EVERY mode — "none" measures
+    without averaging, so adaptive schedules and the per-step
+    diagnostic trace see the true value on non-averaging steps too."""
     upd, planes = plane_update_ref(
         plane, grads, planes, scalars, kind=kind, mu=mu, nesterov=nesterov,
         b1=b1, b2=b2, eps=eps, weight_decay=weight_decay, codes=codes)
     if mode == "none":
-        return upd, planes, jnp.zeros((), jnp.float32)
+        m = upd.shape[0]
+        glob = jnp.mean(upd, axis=0)
+        disp = jnp.sum(jnp.square(upd - glob[None])) / m
+        return upd, planes, disp
     out, disp = plane_average_ref(
         upd, groups=groups if mode == "group" else 1, codes=codes)
     return out, planes, disp

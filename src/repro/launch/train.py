@@ -38,9 +38,23 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--avg", default="periodic",
                     choices=["oneshot", "minibatch", "periodic",
-                             "stochastic", "hierarchical"])
+                             "stochastic", "hierarchical",
+                             "adaptive_threshold", "adaptive_budget"])
     ap.add_argument("--phase-len", type=int, default=10)
     ap.add_argument("--zeta", type=float, default=0.01)
+    ap.add_argument("--disp-threshold", type=float, default=0.0,
+                    help="adaptive_threshold: average when the running "
+                         "EMA of the Eq. 4 worker dispersion crosses "
+                         "this level (required > 0)")
+    ap.add_argument("--disp-ema-beta", type=float, default=0.9,
+                    help="adaptive schedules: dispersion EMA decay "
+                         "(0 <= beta < 1)")
+    ap.add_argument("--comm-budget", type=int, default=0,
+                    help="adaptive_budget: max averaging events over "
+                         "the budget horizon (required >= 1)")
+    ap.add_argument("--budget-horizon", type=int, default=0,
+                    help="adaptive_budget: steps the budget spans "
+                         "(default 0 -> --steps)")
     ap.add_argument("--inner-groups", type=int, default=2,
                     help="hierarchical averaging: number of inner worker "
                          "groups (must divide --workers)")
@@ -90,6 +104,29 @@ def main(argv=None):
         if args.inner_groups < 1 or args.workers % args.inner_groups:
             ap.error(f"--workers ({args.workers}) must be divisible by "
                      f"--inner-groups ({args.inner_groups})")
+        outer_len = args.outer_phase_len or args.phase_len * 8
+        if args.phase_len >= outer_len:
+            # every multiple of the outer period wins the decision, so an
+            # inner period >= the outer one silently never (or only
+            # degenerately) inner-averages — refuse at parse time
+            ap.error(f"--avg hierarchical needs the inner period "
+                     f"(--phase-len, {args.phase_len}) < the outer period "
+                     f"(--outer-phase-len, {outer_len}); as given it "
+                     "would never inner-average")
+    if args.avg == "stochastic" and not 0.0 < args.zeta <= 1.0:
+        ap.error(f"--avg stochastic needs 0 < --zeta <= 1, got "
+                 f"{args.zeta} (other schedules ignore --zeta)")
+    if args.avg == "adaptive_threshold" and args.disp_threshold <= 0.0:
+        ap.error("--avg adaptive_threshold needs --disp-threshold > 0 "
+                 "(the Eq. 4 dispersion level that triggers averaging)")
+    if args.avg == "adaptive_budget":
+        horizon = args.budget_horizon or args.steps
+        if args.comm_budget < 1:
+            ap.error("--avg adaptive_budget needs --comm-budget >= 1")
+        if args.comm_budget > horizon:
+            ap.error(f"--comm-budget ({args.comm_budget}) cannot exceed "
+                     f"the budget horizon ({horizon} steps): at most one "
+                     "averaging event per step")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.reduced:
@@ -108,7 +145,11 @@ def main(argv=None):
         kind=args.avg, phase_len=args.phase_len, zeta=args.zeta,
         inner_phase_len=args.phase_len,
         outer_phase_len=args.outer_phase_len or args.phase_len * 8,
-        inner_groups=args.inner_groups)
+        inner_groups=args.inner_groups,
+        disp_threshold=args.disp_threshold,
+        disp_ema_beta=args.disp_ema_beta,
+        comm_budget=args.comm_budget,
+        budget_horizon=args.budget_horizon or args.steps)
     outer = (OuterOptimizer(lr=1.0, momentum=args.outer_momentum)
              if args.outer_momentum > 0 else None)
     mesh = None

@@ -4,6 +4,8 @@ operator invariants live in test_averaging_properties.py, which skips
 itself when the optional ``hypothesis`` dev dependency is missing — this
 module covers the same invariants without it.
 """
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -129,6 +131,150 @@ def test_schedule_validation():
     with pytest.raises(ValueError):
         AveragingSchedule("nonsense")
     AveragingSchedule("oneshot")  # unused fields are not validated
+    # adaptive kinds: threshold/budget/beta validated eagerly too
+    with pytest.raises(ValueError):
+        AveragingSchedule("adaptive_threshold")  # default threshold 0
+    with pytest.raises(ValueError):
+        AveragingSchedule("adaptive_threshold", disp_threshold=0.1,
+                          disp_ema_beta=1.0)
+    with pytest.raises(ValueError):
+        AveragingSchedule("adaptive_budget")  # default budget 0
+    with pytest.raises(ValueError):
+        AveragingSchedule("adaptive_budget", comm_budget=10,
+                          budget_horizon=5)  # > 1 event/step
+    AveragingSchedule("adaptive_threshold", disp_threshold=0.1)
+    AveragingSchedule("adaptive_budget", comm_budget=4, budget_horizon=64)
+
+
+def test_expected_phase_len_all_kinds():
+    """Pin the a-priori expected steps between communication events for
+    all 5 static + 2 adaptive kinds. ``hierarchical`` counts ANY event
+    (inner or outer) — the harmonic rate 1/K_i + 1/K_o - 1/lcm, NOT the
+    old inner-only answer."""
+    assert AveragingSchedule("oneshot").expected_phase_len() == float("inf")
+    assert AveragingSchedule("minibatch").expected_phase_len() == 1.0
+    assert AveragingSchedule("periodic", 8).expected_phase_len() == 8.0
+    assert AveragingSchedule("stochastic",
+                             zeta=0.25).expected_phase_len() == 4.0
+    # K_o a multiple of K_i: outer events coincide with inner -> K_i
+    h = AveragingSchedule("hierarchical", inner_phase_len=5,
+                          outer_phase_len=20, inner_groups=2)
+    assert h.expected_phase_len() == pytest.approx(5.0)
+    # coprime periods: events at multiples of 3 OR 5 -> 15 steps hold
+    # 5 + 3 - 1 = 7 events -> 15/7 expected interval
+    h2 = AveragingSchedule("hierarchical", inner_phase_len=3,
+                          outer_phase_len=5)
+    assert h2.expected_phase_len() == pytest.approx(15.0 / 7.0)
+    # sanity: the event count over one lcm window matches wants_average
+    events = sum(h2.wants_average(s) != "none" for s in range(1, 16))
+    assert events == 7 and 15 / events == pytest.approx(
+        h2.expected_phase_len())
+    # defaults (the old bug returned inner_phase_len=16 by luck only
+    # because 512 is a multiple of 16 — pin a non-dividing pair too)
+    h3 = AveragingSchedule("hierarchical", inner_phase_len=4,
+                          outer_phase_len=6)
+    assert h3.expected_phase_len() == pytest.approx(1.0 / (1 / 4 + 1 / 6
+                                                           - 1 / 12))
+    assert math.isnan(AveragingSchedule(
+        "adaptive_threshold", disp_threshold=0.1).expected_phase_len())
+    assert AveragingSchedule(
+        "adaptive_budget", comm_budget=4,
+        budget_horizon=64).expected_phase_len() == 16.0
+
+
+def test_decision_state_threshold_fires_and_resets():
+    """adaptive_threshold: the EMA crosses the trip level -> code 2;
+    the event resets the EMA and the bookkeeping fields advance."""
+    sch = AveragingSchedule("adaptive_threshold", disp_threshold=0.5,
+                            disp_ema_beta=0.5)
+    st = sch.init_sched_state()
+    # two quiet steps: EMA stays under threshold, no event
+    code, st = sch.decision_state(1, st, 0.2)
+    assert int(code) == 0 and int(st.since_avg) == 1
+    code, st = sch.decision_state(2, st, 0.2)
+    assert int(code) == 0 and float(st.disp_ema) == pytest.approx(0.15)
+    # a dispersion burst trips the EMA -> all-average, EMA reset
+    code, st = sch.decision_state(3, st, 2.0)
+    assert int(code) == 2
+    assert float(st.disp_ema) == 0.0
+    assert int(st.comm_spent) == 1 and int(st.since_avg) == 0
+    assert float(st.cum_disp) == pytest.approx(2.4)
+
+
+def test_decision_state_budget_caps_and_paces():
+    """adaptive_budget: never spends more than comm_budget events, and
+    spends them where the dispersion envelope is high."""
+    sch = AveragingSchedule("adaptive_budget", comm_budget=3,
+                            budget_horizon=30, disp_ema_beta=0.0)
+    st = sch.init_sched_state()
+    codes = []
+    # constant envelope: credit accrues at ~C/T per step -> <= C events
+    for step in range(1, 31):
+        code, st = sch.decision_state(step, st, 1.0)
+        codes.append(int(code))
+    assert sum(c == 2 for c in codes) <= 3
+    assert int(st.comm_spent) == sum(c == 2 for c in codes) > 0
+    # the cap binds even under a huge late burst
+    sch2 = AveragingSchedule("adaptive_budget", comm_budget=2,
+                             budget_horizon=20, disp_ema_beta=0.0)
+    st2 = sch2.init_sched_state()
+    spent = 0
+    for step in range(1, 21):
+        disp = 100.0 if step > 10 else 0.01
+        code, st2 = sch2.decision_state(step, st2, disp)
+        spent += int(code) == 2
+    assert spent == 2 == int(st2.comm_spent)
+
+
+def test_decision_state_static_kinds_match_decision_code():
+    """Static kinds flow through decision_state with identical codes
+    (pure bookkeeping on the state) — one uniform engine carry."""
+    key = jax.random.PRNGKey(0)
+    for sch in [AveragingSchedule("oneshot"),
+                AveragingSchedule("minibatch"),
+                AveragingSchedule("periodic", 4),
+                AveragingSchedule("stochastic", zeta=0.3),
+                AveragingSchedule("hierarchical", inner_phase_len=2,
+                                  outer_phase_len=6, inner_groups=2)]:
+        st = sch.init_sched_state()
+        events = 0
+        for step in range(1, 13):
+            code, st = sch.decision_state(step, st, 0.1, key)
+            want = int(sch.decision_code(step, key))
+            assert int(code) == want, (sch.kind, step)
+            events += want > 0
+        assert int(st.comm_spent) == events
+        assert float(st.cum_disp) == pytest.approx(1.2)
+
+
+def test_decision_state_is_pure_and_jittable():
+    """Same (step, state, disp) -> same decision, eagerly and under jit
+    (the engine evaluates the transition inside the phase scan)."""
+    sch = AveragingSchedule("adaptive_threshold", disp_threshold=0.3,
+                            disp_ema_beta=0.5)
+    disps = [0.1, 0.5, 0.9, 0.05, 0.8, 0.02]
+
+    def replay(fn):
+        st, out = sch.init_sched_state(), []
+        for step, d in enumerate(disps, 1):
+            code, st = fn(jnp.asarray(step, jnp.int32), st,
+                          jnp.asarray(d, jnp.float32))
+            out.append(int(code))
+        return out, st
+
+    eager, st_e = replay(sch.decision_state)
+    jitted, st_j = replay(jax.jit(sch.decision_state))
+    assert eager == jitted and any(eager)
+    for a, b in zip(st_e, st_j):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_adaptive_kinds_reject_stateless_decision_apis():
+    sch = AveragingSchedule("adaptive_threshold", disp_threshold=0.1)
+    with pytest.raises(ValueError, match="decision_state"):
+        sch.decision_code(5)
+    with pytest.raises(ValueError, match="decision_state"):
+        sch.wants_average(5, np.random.default_rng(0))
 
 
 def test_decision_code_matches_wants_average():

@@ -47,6 +47,14 @@ SCHEDULES = {
     "stochastic": AveragingSchedule("stochastic", zeta=0.2),
     "hierarchical": AveragingSchedule("hierarchical", inner_phase_len=5,
                                       outer_phase_len=20, inner_groups=2),
+    # stateful kinds: the engine's decisions consume the on-device
+    # per-step dispersion through SchedState; the host loop must replay
+    # the identical decision sequence from its own dispersion stream
+    "adaptive_threshold": AveragingSchedule("adaptive_threshold",
+                                            disp_threshold=0.05,
+                                            disp_ema_beta=0.5),
+    "adaptive_budget": AveragingSchedule("adaptive_budget", comm_budget=6,
+                                         budget_horizon=STEPS),
 }
 
 

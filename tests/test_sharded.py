@@ -5,11 +5,13 @@ The heavyweight validation runs in a subprocess with
 device count at import, so the parent process can't flip it):
 
   - gather collective: bit-identical params AND history vs the
-    single-device engine for the paper's Momentum recipe, across all 5
-    averaging schedules (+ the outer optimizer and the indexed
-    on-device data plane);
-  - psum collective: identical decision streams / averaging counts,
-    params and traces equal to f32 roundoff.
+    single-device engine for the paper's Momentum recipe, across all
+    5 static + 2 adaptive (dispersion-driven, stateful) averaging
+    schedules (+ the outer optimizer and the indexed on-device data
+    plane);
+  - psum collective: identical decision streams / averaging counts —
+    including the adaptive kinds, whose decisions consume the psum'd
+    per-step dispersion — params and traces equal to f32 roundoff.
 
 In-process tests cover the sharding spec helpers.
 """
@@ -57,6 +59,13 @@ scheds = {
     "stochastic": AveragingSchedule("stochastic", zeta=0.2),
     "hierarchical": AveragingSchedule("hierarchical", inner_phase_len=5,
                                       outer_phase_len=20, inner_groups=2),
+    # stateful kinds: decisions ride SchedState on the per-step
+    # dispersion, which the psum collective reduces with one extra psum
+    "adaptive_threshold": AveragingSchedule("adaptive_threshold",
+                                            disp_threshold=0.5,
+                                            disp_ema_beta=0.5),
+    "adaptive_budget": AveragingSchedule("adaptive_budget", comm_budget=6,
+                                         budget_horizon=STEPS),
 }
 for name, sch in scheds.items():
     f0, h0 = PhaseEngine(loss_fn, opt(), sch).run(params, batches(), **kw)
@@ -131,14 +140,17 @@ def test_plane_sharding_spec():
 def test_engine_state_sharding_tree():
     from repro.core import EngineState
     mesh = jax.make_mesh((1,), ("data",))
+    from repro.core import AveragingSchedule
     state = EngineState(
         worker_params={"w": np.zeros((4, 3))},
         opt_state={"v": np.zeros((4, 3))},
         outer_state=(),
         key=np.zeros(2, np.uint32), dec_key=np.zeros(2, np.uint32),
-        step=np.int32(0))
+        step=np.int32(0),
+        sched=AveragingSchedule("periodic", 8).init_sched_state())
     sh = engine_state_sharding(mesh, state)
     assert sh.worker_params["w"].spec == P(("data",))
     assert sh.opt_state["v"].spec == P(("data",))
     assert sh.key.spec == P()
     assert sh.step.spec == P()
+    assert all(s.spec == P() for s in sh.sched)
