@@ -43,7 +43,15 @@ adaptive_budget with half the periodic communication budget) against
 the periodic-8 baseline on
 identical draws: final consensus loss vs averaging-event count — the
 paper's question, answered by following the measured variance envelope
-instead of a fixed clock. Emits JSON via benchmarks/common.py
+instead of a fixed clock. A ``topology`` sweep (``repro.topology``)
+asks the same question along the mixing-matrix axis: each sparse
+topology (ring / torus / hypercube / gossip pairs) runs at the event
+period matching periodic-8 full averaging's per-worker communication
+budget, recording final loss + dispersion envelope vs spectral gap vs
+comm volume — and the ``full``-topology run is checked bit-identical
+to the plain mean path (``full_topology_bitexact``, gated like the
+sharded-gather check; the ``--tiny`` smoke keeps full+ring+gossip).
+Emits JSON via benchmarks/common.py
 (results/bench_engine.json). ``--tiny`` runs CI-smoke shapes (no host
 baseline; pass ``--save`` to still write JSON for the CI artifact).
 """
@@ -209,6 +217,104 @@ def bench_adaptive(arrays, idx, workers, steps) -> dict:
          f"budget_loss={loss_b:.5f}@{h_b['averages']}ev;"
          f"reaches_periodic={row['adaptive_reaches_periodic']}")
     return row
+
+
+def bench_topology(arrays, idx, workers, steps, tiny: bool = False) -> dict:
+    """Mixing-topology sweep at matched communication budgets — the
+    paper's question along the new ``repro.topology`` axis: at equal
+    communication, is FREQUENT SPARSE mixing better than INFREQUENT
+    FULL averaging?
+
+    Baseline: periodic-8 full averaging, i.e. (M-1)/8 row-exchanges
+    per worker per step (one full-mean event costs M-1 messages per
+    worker, a ring event 2, a gossip pairing 1). Every sparse topology
+    runs at the event period that matches the baseline's per-step
+    budget as closely as its degree allows, on identical sample draws.
+    Rows record final consensus loss, the dispersion envelope (mean
+    over the last quarter of steps — the Eq. 4 diagnostic the spectral
+    gap governs), the spectral gap, and the realized comm volume.
+
+    Also verifies the subsystem's bit-identity anchor: an engine with
+    ``Topology.full`` must reproduce the plain mean path EXACTLY
+    (params + full history) — recorded as ``full_topology_bitexact``
+    and gated in CI like the sharded-gather check."""
+    from repro.topology import Topology
+    Xn, yn = np.asarray(arrays["x"]), np.asarray(arrays["y"])
+
+    def full_loss(f):
+        r = Xn @ np.asarray(f["w"]) - yn
+        return 0.5 * float(np.mean(r * r))
+
+    def run(sch, topo):
+        eng = PhaseEngine(ls_mean_loss, Momentum(lr=0.01, mu=0.9), sch,
+                          topology=topo)
+        f, h = eng.run({"w": jnp.zeros(Xn.shape[1])},
+                       DeviceDataset(arrays, workers, indices=idx),
+                       num_workers=workers, seed=5, record_every=1)
+        return f, full_loss(f), h
+
+    base_period = 8
+    base_sch = AveragingSchedule("periodic", base_period)
+    f_plain, loss_plain, h_plain = run(base_sch, None)
+    f_full, loss_full, h_full = run(base_sch, Topology.full(workers))
+    bitexact = bool(
+        (np.asarray(f_plain["w"]) == np.asarray(f_full["w"])).all()
+        and h_plain == h_full)
+
+    budget = (workers - 1) / base_period  # msgs/worker/step, baseline
+    rows = []
+    kinds = ["full", "ring", "gossip_pairs"]
+    if not tiny:
+        kinds += ["torus", "hypercube", "disconnected"]
+
+    def row_of(topo, period, loss, hist):
+        tail = [v for t, v in hist["disp_trace"] if t > steps * 3 // 4]
+        return {
+            "workload": "topology", "topology": topo.kind,
+            "workers": workers, "steps": steps,
+            "spectral_gap": topo.spectral_gap,
+            "comm_degree": topo.comm_degree, "period": period,
+            "events": hist["averages"],
+            "comm_per_worker": hist["averages"] * topo.comm_degree,
+            "final_loss": loss,
+            "disp_tail_mean": float(np.mean(tail)) if tail else 0.0,
+        }
+
+    for kind in kinds:
+        try:
+            topo = Topology.build(kind, workers)
+        except ValueError as e:  # e.g. prime M for torus in a sweep
+            rows.append({"workload": "topology", "topology": kind,
+                         "workers": workers, "skipped": str(e)})
+            continue
+        if kind == "full":
+            period, (loss, h) = base_period, (loss_full, h_full)
+        else:
+            period = (max(1, round(topo.comm_degree / budget))
+                      if topo.comm_degree > 0 else base_period)
+            _, loss, h = run(AveragingSchedule("periodic", period), topo)
+        rows.append(row_of(topo, period, loss, h))
+
+    by_kind = {r["topology"]: r for r in rows if "skipped" not in r}
+    ring, full = by_kind.get("ring"), by_kind["full"]
+    headline = ""
+    if ring:
+        headline = (f"ring@K{ring['period']}_loss={ring['final_loss']:.5f}"
+                    f"({ring['comm_per_worker']:.0f}msg);"
+                    f"full@K{full['period']}_loss={full['final_loss']:.5f}"
+                    f"({full['comm_per_worker']:.0f}msg)")
+    emit("engine_topology_sweep", 0.0 if bitexact else 1.0,
+         f"full_topology_bitexact={bitexact};{headline}")
+    if not bitexact:
+        # same CI contract as the sharded-gather check: a regression in
+        # the full-topology bit-identity must fail the PR, not just
+        # flip a field in the JSON artifact
+        raise SystemExit(
+            "Topology.full engine run is NOT bit-identical to the mean "
+            "path")
+    return {"full_topology_bitexact": bitexact,
+            "baseline_period": base_period,
+            "budget_msgs_per_worker_step": budget, "rows": rows}
 
 
 def check_sharded_bitexact(loss_fn, params, arrays, idx, workers,
@@ -385,6 +491,12 @@ def run(tiny: bool = False, workers_override: int | None = None,
     adaptive_row = bench_adaptive({"x": Xj, "y": yj}, aidx, m_adapt, steps)
     results.append(adaptive_row)
 
+    rng = np.random.default_rng(3)
+    tidx = rng.integers(0, samples, size=(steps, m_adapt, 8))
+    topology_sweep = bench_topology({"x": Xj, "y": yj}, tidx, m_adapt,
+                                    steps, tiny=tiny)
+    results.extend(topology_sweep["rows"])
+
     sharder = bench_sharder(max(worker_counts), steps)
     emit("sharder_replacement", sharder["sharder_block_us"],
          f"loop_us={sharder['sharder_loop_us']:.0f};"
@@ -429,6 +541,7 @@ def run(tiny: bool = False, workers_override: int | None = None,
             "devices": len(jax.devices()),
             "sharded_gather_bitexact": sharded_bitexact,
             "adaptive": adaptive_row,
+            "topology": topology_sweep,
             "rows": results, "sharder": sharder})
     return results
 

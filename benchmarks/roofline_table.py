@@ -114,13 +114,22 @@ def opt_step_roofline(m: int, p: int, *, kind: str = "momentum",
     the always-on measurement adds no memory traffic). The un-fused
     path pays an extra read+write sweep of the plane for the optimizer
     update before the avg_disp pass (3 sweeps on averaging steps;
-    tree-path optimizers additionally traverse every leaf)."""
+    tree-path optimizers additionally traverse every leaf).
+
+    mode "mix" is the gossip-topology event (repro.topology): the
+    (M, M) @ (M, P) mixing contraction adds 2M FLOPs per plane element
+    and one M·M·4 B read of W — negligible traffic against the plane
+    sweep (M is 4–64), so the mix stays memory-bound on the SAME
+    single pass: the topology axis is free in bytes, paid only in
+    (cheap) MXU flops."""
     s = {"sgd": 0, "momentum": 1, "adamw": 2}[kind]
     upd_f = {"sgd": 2, "momentum": 4, "adamw": 12}[kind]
+    mix = mode == "mix"
     elems = m * p
-    read_b = 4 * elems * (2 + s)
+    read_b = 4 * (elems * (2 + s) + (m * m if mix else 0))
     write_b = 4 * elems * (1 + s)
-    flops = upd_f * elems + 4 * elems + 2 * p
+    flops = (upd_f * elems + 4 * elems + 2 * p
+             + (2 * m * elems if mix else 0))
     bytes_total = read_b + write_b
     return {
         "kernel": f"opt_step[{kind},{mode}]",
@@ -129,7 +138,7 @@ def opt_step_roofline(m: int, p: int, *, kind: str = "momentum",
         "intensity_flop_per_byte": flops / bytes_total,
         "compute_s": flops / hw.peak_flops,
         "memory_s": bytes_total / hw.hbm_bw,
-        "bound": "memory",  # intensity < 1.5 F/B << machine balance
+        "bound": "memory",  # intensity << machine balance even at M=64
         "unfused_passes": 3 if mode != "none" else 2,
         "fused_passes": 1,
     }
@@ -145,7 +154,8 @@ OPT_STEP_SEP = "|" + "---|" * 9
 
 
 def render_opt_step(cases=(("sgd", "none"), ("momentum", "none"),
-                           ("momentum", "mean"), ("adamw", "mean")),
+                           ("momentum", "mean"), ("momentum", "mix"),
+                           ("adamw", "mean")),
                     m: int = 16, p: int = 1 << 20) -> str:
     out = [OPT_STEP_HDR, OPT_STEP_SEP]
     for kind, mode in cases:

@@ -55,6 +55,17 @@ def load_checkpoint(path: str, like_tree):
 # diversity, optimizer moments, PRNG streams or the step counter)
 # --------------------------------------------------------------------------
 
+#: EngineState checkpoint layout versions:
+#:   0 — pre-SchedState EngineState (PR 3 and earlier): no ``sched``
+#:       leaves in the flattened state
+#:   1 — EngineState with the SchedState carry (PR 4); version field
+#:       not yet written, so v0-vs-v1 was sniffed by leaf count
+#:   2 — same leaf layout as v1, with the version recorded explicitly
+#:       in the checkpoint metadata (this build writes v2)
+ENGINE_STATE_VERSION = 2
+_VERSION_KEY = "engine_state_version"
+
+
 def save_engine_state(path: str, state, *, extra: dict | None = None):
     """Checkpoint a full ``repro.core.EngineState`` — worker params,
     optimizer state, outer-optimizer state, both PRNG keys, the step
@@ -63,9 +74,28 @@ def save_engine_state(path: str, state, *, extra: dict | None = None):
     never interrupted (static averaging decisions are pure functions of
     (dec_key, step); the adaptive schedules' decisions are pure
     functions of the checkpointed ``SchedState``, which carries the
-    dispersion EMA, pacing credit and budget spent forward)."""
+    dispersion EMA, pacing credit and budget spent forward). The
+    checkpoint metadata records ``engine_state_version`` so loaders
+    dispatch on the declared layout instead of sniffing leaf counts."""
     state = jax.device_get(state)
+    extra = dict(extra or {})
+    # the version describes the LAYOUT: a state without SchedState
+    # leaves (sched=()) is exactly the v0 layout, whoever writes it
+    extra[_VERSION_KEY] = (0 if getattr(state, "sched", ()) == ()
+                           else ENGINE_STATE_VERSION)
     save_checkpoint(path, state, step=int(state.step), extra=extra)
+
+
+def _load_v0(path: str, like_state):
+    """A v0 state has no ``sched`` leaves: load into the bare layout
+    and take the SchedState fresh from ``like_state`` (all-zero
+    bookkeeping — exactly where a run of a pre-SchedState build
+    stood)."""
+    if getattr(like_state, "sched", ()) == ():
+        return load_checkpoint(path, like_state)
+    bare = like_state._replace(sched=())
+    state, step = load_checkpoint(path, bare)
+    return state._replace(sched=like_state.sched), step
 
 
 def load_engine_state(path: str, like_state):
@@ -73,16 +103,31 @@ def load_engine_state(path: str, like_state):
     the structure of ``like_state`` (e.g. ``engine.init(params, M)``).
     Returns (state, step).
 
-    Checkpoints written before ``EngineState`` carried the schedule
-    state load too: the missing ``SchedState`` leaves are taken fresh
-    from ``like_state`` (all-zero bookkeeping — exactly where a run of
-    a pre-SchedState build stood)."""
+    The checkpoint's declared ``engine_state_version`` picks the
+    layout: v1/v2 carry the SchedState leaves, v0 predates them (they
+    are taken fresh from ``like_state``). Checkpoints from builds that
+    did not yet write the version field load too — the v0-vs-v1
+    distinction falls back to the historical leaf-count sniff."""
+    with open(path + ".json") as f:
+        meta = json.load(f)
+    version = (meta.get("extra") or {}).get(_VERSION_KEY)
+    if version is not None:
+        if (isinstance(version, bool) or not isinstance(version, int)
+                or version < 0):
+            raise ValueError(
+                f"checkpoint {path!r} declares an invalid engine-state "
+                f"version {version!r} (expected an int in "
+                f"[0, {ENGINE_STATE_VERSION}])")
+        if version > ENGINE_STATE_VERSION:
+            raise ValueError(
+                f"checkpoint {path!r} declares engine-state version "
+                f"{version}, newer than this build's "
+                f"{ENGINE_STATE_VERSION} — load it with the build that "
+                "wrote it")
+        if version == 0:
+            return _load_v0(path, like_state)
+        return load_checkpoint(path, like_state)
     try:
-        state, step = load_checkpoint(path, like_state)
+        return load_checkpoint(path, like_state)
     except AssertionError:
-        if getattr(like_state, "sched", ()) == ():
-            raise
-        bare = like_state._replace(sched=())
-        state, step = load_checkpoint(path, bare)
-        state = state._replace(sched=like_state.sched)
-    return state, step
+        return _load_v0(path, like_state)

@@ -17,3 +17,4 @@ from repro.core.theory import (  # noqa: F401
     simulate_quadratic,
 )
 from repro.core.variance_model import measure_beta2, measure_sigma2, rho  # noqa: F401
+from repro.topology import Topology  # noqa: F401

@@ -57,6 +57,12 @@ to read 0.0 between averaging events), in all four paths: flat-native,
 flat, tree, and the host loop — and in both sharded collectives (psum
 mode pays one extra psum of the per-shard squared sums per step).
 
+A :class:`repro.topology.Topology` generalizes the "all"-scope event
+from the full mean to one doubly-stochastic mixing-matrix application
+``plane <- W @ plane`` (ring / torus / hypercube / random gossip pairs /
+disconnected), fused into the same passes; ``full`` and ``groups``
+topologies lower to the existing mean / block-mean code bit-exactly.
+
 :meth:`PhaseEngine.run` is the production driver (one compiled dispatch
 per phase); :meth:`PhaseEngine.run_host` keeps the legacy per-step
 host-driven loop — same numerics, same decision stream — as the baseline
@@ -78,11 +84,13 @@ from repro.core.averaging import (AveragingSchedule, OuterOptimizer,
                                   worker_dispersion)
 from repro.core.flat import FlatOptSpec, FlatSpec
 from repro.data.pipeline import DeviceDataset, Prefetcher
-from repro.kernels.avg_disp import avg_disp, avg_disp_outer
+from repro.kernels.avg_disp import avg_disp, avg_disp_outer, mix_disp
 from repro.kernels.opt_step import opt_step
 from repro.kernels.ref import (avg_disp_outer_ref, avg_disp_ref,
-                               opt_step_ref, plane_average_ref,
-                               plane_update_ref, round_to_codes)
+                               mix_disp_ref, opt_step_ref,
+                               plane_average_ref, plane_update_ref,
+                               round_to_codes)
+from repro.topology import MIX_KINDS, Topology, mix_tree
 
 
 # --------------------------------------------------------------------------
@@ -204,7 +212,21 @@ class PhaseEngine:
     "psum"`` (production: O(P) bytes/device) or ``"gather"``
     (full-gather validation mode: bit-identical to the unsharded engine
     for SGD/Momentum; see ``_phase_sharded``). Sharded runs require the
-    flat-native path."""
+    flat-native path.
+
+    ``topology`` (a :class:`repro.topology.Topology`) generalizes the
+    "all"-scope averaging event from the full worker mean to one
+    application of the topology's doubly-stochastic mixing matrix,
+    ``plane <- W @ plane`` — each worker keeps its own mixed row.
+    ``full`` and ``groups`` lower to the existing fused mean /
+    group-mean paths (bit-identical to running without a topology /
+    to the ``inner_groups`` block mean); the sparse kinds (ring,
+    torus, hypercube, gossip_pairs, disconnected) run the fused mix
+    pass in every engine path, ``gossip_pairs`` sampling a fresh
+    random matching per event as a pure function of (dec_key, step)
+    — reproducible and checkpoint/resume-safe with no extra state.
+    The outer optimizer steps on the consensus mean, which partial
+    mixing never forms, so it requires ``full`` (or no) topology."""
     loss_fn: Callable
     optimizer: Any
     schedule: AveragingSchedule
@@ -216,6 +238,7 @@ class PhaseEngine:
     mesh: Any = None
     shard_axes: tuple = ()
     collective: str = "psum"
+    topology: Topology | None = None
 
     @cached_property
     def worker_step(self):
@@ -234,6 +257,51 @@ class PhaseEngine:
                 f"into inner_groups={g} contiguous groups, but "
                 f"num_workers={num_workers} is not divisible by it — "
                 "pick inner_groups dividing the worker count")
+        t = self.topology
+        if t is not None:
+            if t.num_workers != num_workers:
+                raise ValueError(
+                    f"topology '{t.kind}' was built for "
+                    f"{t.num_workers} workers but the engine runs "
+                    f"{num_workers} — build the Topology with the run's "
+                    "worker count")
+            if self.outer is not None and t.kind != "full":
+                raise ValueError(
+                    f"the outer optimizer steps on the consensus mean, "
+                    f"which topology '{t.kind}' never forms (partial "
+                    "mixing keeps per-worker rows) — use topology "
+                    "'full', or drop the outer optimizer")
+
+    def _mix_topology(self) -> Topology | None:
+        """The topology whose events need the generic ``W @ plane``
+        mix, or None when events lower to the existing fused mean /
+        group-mean paths (no topology, ``full``, or ``groups`` — the
+        block-diagonal W is exactly the ``inner_groups`` block mean)."""
+        t = self.topology
+        if t is None or t.kind not in MIX_KINDS:
+            return None
+        return t
+
+    def _all_groups(self) -> int:
+        """Group count of an "all"-scope mean event: 1 (global mean)
+        unless the ``groups`` topology narrows it to its block mean."""
+        t = self.topology
+        if t is not None and t.kind == "groups":
+            return t.groups
+        return 1
+
+    def _event_W(self, step, dec_key):
+        """This event's mixing matrix (f32 (M, M)), or None when events
+        take the mean path. Deterministic topologies embed W as a trace
+        constant; ``gossip_pairs`` samples the per-event matching from
+        ``fold_in`` on (dec_key, step) — the same pure-function recipe
+        as the stochastic schedule, so every engine path, phase
+        blocking, shard and checkpoint/resume replays identical
+        matchings."""
+        t = self._mix_topology()
+        if t is None:
+            return None
+        return t.mixing_matrix(step, dec_key)
 
     def init(self, params, num_workers: int, seed: int = 0) -> EngineState:
         self._check_workers(num_workers)
@@ -256,10 +324,12 @@ class PhaseEngine:
             return False
         return jax.default_backend() != "cpu"
 
-    def _flat_average(self, plane, outer_c, scope: str):
+    def _flat_average(self, plane, outer_c, scope: str, W=None):
         """ONE fused pass over the (M, P) plane: mean (global or
         per-group), Eq. 4 dispersion, broadcast, and — for the all-scope
-        with an outer optimizer — the outer momentum step."""
+        with an outer optimizer — the outer momentum step. With a
+        mixing topology the all-scope event is the fused
+        ``W @ plane`` gossip mix instead (no broadcast)."""
         pallas = self._use_pallas()
         if scope == "inner":
             groups = max(self.schedule.inner_groups, 1)
@@ -268,6 +338,10 @@ class PhaseEngine:
             else:
                 plane, disp = avg_disp_ref(plane, groups=groups)
             return plane, outer_c, disp
+        if W is not None:
+            mix = mix_disp if pallas else mix_disp_ref
+            plane, disp = mix(plane, W)
+            return plane, outer_c, disp
         if self.outer is not None and outer_c != ():
             prev, vel = outer_c
             fused = avg_disp_outer if pallas else avg_disp_outer_ref
@@ -275,10 +349,11 @@ class PhaseEngine:
                 plane, prev, vel, lr=self.outer.lr,
                 momentum=self.outer.momentum, nesterov=self.outer.nesterov)
             return plane, (prev, vel), disp
+        groups = self._all_groups()
         if pallas:
-            plane, disp = avg_disp(plane)
+            plane, disp = avg_disp(plane, groups=groups)
         else:
-            plane, disp = avg_disp_ref(plane)
+            plane, disp = avg_disp_ref(plane, groups=groups)
         return plane, outer_c, disp
 
     # ---- flat-native fused step (+ averaging) ---------------------------
@@ -291,10 +366,11 @@ class PhaseEngine:
         return FlatOptSpec.of(spec, opt_state)
 
     def _fused_step_average(self, spec, plane, gplane, planes, outer_c,
-                            scalars, scope: str):
+                            scalars, scope: str, W=None):
         """ONE fused pass: local optimizer update on the plane (+ state
-        planes) and, per ``scope``, the averaging event — mean (global or
-        per-group), Eq. 4 dispersion, broadcast. The all-scope with an
+        planes) and, per ``scope``, the averaging event — mean (global
+        or per-group), Eq. 4 dispersion, broadcast, or (with a mixing
+        topology) the ``W @ plane`` gossip mix. The all-scope with an
         outer optimizer chains the fused update into the fused
         avg+outer-momentum kernel (two passes total on those rare
         steps)."""
@@ -305,6 +381,10 @@ class PhaseEngine:
         if scope == "none":
             plane, planes, disp = fused(plane, gplane, planes, scalars,
                                         mode="none", **kw)
+            return plane, planes, outer_c, disp
+        if W is not None:
+            plane, planes, disp = fused(plane, gplane, planes, scalars,
+                                        mode="mix", W=W, **kw)
             return plane, planes, outer_c, disp
         if self.outer is not None and outer_c != ():
             plane, planes, _ = fused(plane, gplane, planes, scalars,
@@ -320,21 +400,26 @@ class PhaseEngine:
                 plane, prev, vel, lr=self.outer.lr,
                 momentum=self.outer.momentum, nesterov=self.outer.nesterov)
             return plane, planes, (prev, vel), disp
+        groups = self._all_groups()
         plane, planes, disp = fused(plane, gplane, planes, scalars,
-                                    mode="mean", **kw)
+                                    mode="group" if groups > 1 else "mean",
+                                    groups=groups, **kw)
         return plane, planes, outer_c, disp
 
-    def _plane_avg_event(self, spec, plane, outer_c, scope: str):
+    def _plane_avg_event(self, spec, plane, outer_c, scope: str, W=None):
         """Averaging event alone (no optimizer update) on the plane —
         used by the switch branches of rare-averaging schedules, where
         the update is hoisted before the switch so XLA can fuse it with
         the gradient computation. Mixed-dtype trees round the broadcast
-        mean (and the outer-optimizer's gradient target and update)
-        through the leaf dtypes (``rounding_codes``), matching the tree
-        operators' ``.astype``."""
+        mean / mixed rows (and the outer-optimizer's gradient target
+        and update) through the leaf dtypes (``rounding_codes``),
+        matching the tree operators' ``.astype``."""
         codes = spec.rounding_codes()
         if codes is None:
-            return self._flat_average(plane, outer_c, scope)
+            return self._flat_average(plane, outer_c, scope, W=W)
+        if scope == "all" and W is not None:
+            plane, disp = mix_disp_ref(plane, W, codes=codes)
+            return plane, outer_c, disp
         if scope == "all" and self.outer is not None and outer_c != ():
             prev, vel = outer_c
             plane, prev, vel, disp = avg_disp_outer_ref(
@@ -343,7 +428,7 @@ class PhaseEngine:
                 nesterov=self.outer.nesterov, codes=codes)
             return plane, (prev, vel), disp
         groups = (max(self.schedule.inner_groups, 1)
-                  if scope == "inner" else 1)
+                  if scope == "inner" else self._all_groups())
         plane, disp = plane_average_ref(plane, groups=groups, codes=codes)
         return plane, outer_c, disp
 
@@ -361,7 +446,8 @@ class PhaseEngine:
             # the all-average is unconditional — fuse it into the update
             # pass; the (static) decision still advances the sched state
             plane, planes, outer_c, disp = self._fused_step_average(
-                spec, plane, gplane, planes, outer_c, scalars, "all")
+                spec, plane, gplane, planes, outer_c, scalars, "all",
+                W=self._event_W(step, dec_key))
             code, sst = sched.decision_state(step, sst, disp, dec_key)
             return plane, planes, outer_c, sst, disp, code
         plane, planes, outer_c, disp = self._fused_step_average(
@@ -378,7 +464,8 @@ class PhaseEngine:
                                          "inner")[:2]
 
         def all_branch(args):
-            return self._plane_avg_event(spec, args[0], args[1], "all")[:2]
+            return self._plane_avg_event(spec, args[0], args[1], "all",
+                                         W=self._event_W(step, dec_key))[:2]
 
         plane, outer_c = jax.lax.switch(
             code, [none_branch, inner_branch, all_branch],
@@ -394,11 +481,17 @@ class PhaseEngine:
             outer_state = (avg, vel)
         return replicate(avg, num_workers), outer_state
 
-    def _tree_average(self, wp, outer_c, scope: str, num_workers: int):
+    def _tree_average(self, wp, outer_c, scope: str, num_workers: int,
+                      W=None):
         disp = worker_dispersion(wp).astype(jnp.float32)
         if scope == "inner":
             return (average_inner(wp, max(self.schedule.inner_groups, 1)),
                     outer_c, disp)
+        if W is not None:
+            return mix_tree(wp, W), outer_c, disp
+        g = self._all_groups()
+        if g > 1:
+            return average_inner(wp, g), outer_c, disp
         wp, outer_c = self._apply_all_average(wp, outer_c, num_workers)
         return wp, outer_c, disp
 
@@ -476,7 +569,9 @@ class PhaseEngine:
                 if sched.kind == "oneshot":
                     pass
                 elif sched.kind == "minibatch":
-                    wp_c, outer_c, _ = average(wp_c, outer_c, "all")
+                    wp_c, outer_c, _ = average(
+                        wp_c, outer_c, "all",
+                        W=self._event_W(step, state.dec_key))
                 else:
                     def none_branch(args):
                         return args
@@ -485,7 +580,9 @@ class PhaseEngine:
                         return average(*args, "inner")[:2]
 
                     def all_branch(args):
-                        return average(*args, "all")[:2]
+                        return average(*args, "all",
+                                       W=self._event_W(step,
+                                                       state.dec_key))[:2]
 
                     wp_c, outer_c = jax.lax.switch(
                         code, [none_branch, inner_branch, all_branch],
@@ -532,21 +629,32 @@ class PhaseEngine:
         return idx
 
     def _psum_avg_event(self, spec, plane, outer_c, scope: str, glob,
-                        ml: int):
+                        ml: int, W=None):
         """Cross-shard averaging event (no optimizer update) on this
         shard's (M_l, P) rows. ``glob`` is the (already psum'd) global
         worker mean — computed once per step OUTSIDE the switch, where
         the always-on dispersion needs it anyway, so the all-scope
         broadcast (and the outer step) is shard-local here. Group
         (inner) averages all_gather the rows instead (group boundaries
-        need not align with shard boundaries)."""
+        need not align with shard boundaries), and so does a mixing
+        topology's ``W @ plane`` event: ONE all_gather of the (M_l, P)
+        row shards per event, then this shard's W rows contract the
+        full plane — O(M·P) bytes, only on event steps."""
         codes = spec.rounding_codes()
         ax = self._worker_axes()
-        if scope == "inner":
+        if scope == "all" and W is not None:
             full = jax.lax.all_gather(plane, ax, axis=0, tiled=True)
-            full, _ = plane_average_ref(
-                full, groups=max(self.schedule.inner_groups, 1),
-                codes=codes)
+            rows = jax.lax.dynamic_slice_in_dim(
+                W, self._shard_index() * ml, ml, 0)
+            out = jnp.dot(rows, full, preferred_element_type=jnp.float32)
+            if codes is not None:
+                out = round_to_codes(out, codes)
+            return out, outer_c
+        if scope == "inner" or (scope == "all" and self._all_groups() > 1):
+            groups = (max(self.schedule.inner_groups, 1)
+                      if scope == "inner" else self._all_groups())
+            full = jax.lax.all_gather(plane, ax, axis=0, tiled=True)
+            full, _ = plane_average_ref(full, groups=groups, codes=codes)
             out = jax.lax.dynamic_slice_in_dim(
                 full, self._shard_index() * ml, ml, 0)
             return out, outer_c
@@ -587,7 +695,8 @@ class PhaseEngine:
             return plane, planes, outer_c, sst, disp, code
         if sched.kind == "minibatch":
             plane, outer_c = self._psum_avg_event(
-                spec, plane, outer_c, "all", glob, ml)
+                spec, plane, outer_c, "all", glob, ml,
+                W=self._event_W(step, dec_key))
             return plane, planes, outer_c, sst, disp, code
 
         def none_branch(args):
@@ -599,7 +708,8 @@ class PhaseEngine:
 
         def all_branch(args):
             return self._psum_avg_event(spec, args[0], args[1], "all",
-                                        glob, ml)
+                                        glob, ml,
+                                        W=self._event_W(step, dec_key))
 
         plane, outer_c = jax.lax.switch(
             code, [none_branch, inner_branch, all_branch],
@@ -939,11 +1049,16 @@ class PhaseEngine:
         return wp, opt_state, jnp.mean(losses), disp, code, sst
 
     @partial(jax.jit, static_argnums=(0, 3))
-    def _host_average(self, wp, outer_state, scope: str):
+    def _host_average(self, wp, outer_state, scope: str, W=None):
         num_workers = jax.tree.leaves(wp)[0].shape[0]
         if scope == "inner":
             return (average_inner(wp, max(self.schedule.inner_groups, 1)),
                     outer_state)
+        if W is not None:
+            return mix_tree(wp, W), outer_state
+        g = self._all_groups()
+        if g > 1:
+            return average_inner(wp, g), outer_state
         wp, outer_state = self._apply_all_average(wp, outer_state,
                                                   num_workers)
         return wp, outer_state
@@ -975,8 +1090,10 @@ class PhaseEngine:
                 sst, state.dec_key)
             code = int(code)
             if code:
+                W = (self._event_W(jnp.asarray(step, jnp.int32),
+                                   state.dec_key) if code == 2 else None)
                 wp, outer_state = self._host_average(
-                    wp, outer_state, "inner" if code == 1 else "all")
+                    wp, outer_state, "inner" if code == 1 else "all", W)
                 hist["dispersion"].append((step, float(disp)))
                 hist["averages"] += 1
             if record_every and step % record_every == 0:

@@ -91,6 +91,50 @@ def coarse_dispersion_bound(alpha, sigma2, L, c, k):
 
 
 # --------------------------------------------------------------------------
+# Gossip-topology hooks (repro.topology): what the mixing spectrum says
+# about the Eq. 4 dispersion
+# --------------------------------------------------------------------------
+
+def mixing_contraction(spectral_gap: float) -> float:
+    """Per-event dispersion contraction of one mixing-matrix event.
+
+    Splitting worker states into consensus + deviation, a symmetric
+    doubly-stochastic W maps the deviation through its spectrum on the
+    consensus-orthogonal subspace, so ONE event multiplies the Eq. 4
+    dispersion by at most λ₂² = (1 - spectral_gap)²
+    (:attr:`repro.topology.Topology.spectral_gap` = 1 - SLEM): 0 for
+    the full mean (dispersion collapses, the paper's operator), 1 for
+    a disconnected graph (events change nothing)."""
+    lam2 = 1.0 - spectral_gap
+    return lam2 * lam2
+
+
+def mixed_dispersion_fixed_point(alpha, sigma2, L, c, k,
+                                 spectral_gap: float) -> float:
+    """Eq. (4) generalized to a gossip topology: the steady-state
+    PRE-event dispersion when a mixing event with the given spectral
+    gap fires every ``k`` steps.
+
+    Between events the coarse model grows dispersion per Eq. 4's
+    recursion (k steps from D add g(k) = coarse_dispersion_bound(k)
+    and decay the remainder by rate^k); each event contracts it by
+    ρ = (1 - gap)² (:func:`mixing_contraction`). The pre-event fixed
+    point is
+
+        D* = g(k) / (1 - ρ · rate^k)
+
+    Limits anchor the axis: gap=1 (full averaging) recovers Eq. 4's
+    schedule-independent bound g(k) exactly — the coarse model's
+    Example 2 point that it *cannot* see any benefit from averaging —
+    and gap=0 (disconnected) recovers the k→∞ envelope ασ²/(2L-αc²),
+    as if no event ever fired."""
+    rho = mixing_contraction(spectral_gap)
+    rate = 1.0 - 2.0 * alpha * L + (alpha * c) ** 2
+    g = coarse_dispersion_bound(alpha, sigma2, L, c, k)
+    return g / (1.0 - rho * rate ** k)
+
+
+# --------------------------------------------------------------------------
 # Example 1 (homogeneous quadratics): averaging-frequency invariance
 # --------------------------------------------------------------------------
 

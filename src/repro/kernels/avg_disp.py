@@ -6,6 +6,9 @@ dispersion E||w_i - w̄||², the mean broadcast back into every worker row,
 and — with the DiLoCo-style outer optimizer — a momentum step on the
 mean. The tree path pays 3–4 separate traversals of the params pytree
 for that; here it is ONE tiled pass over the contiguous plane.
+:func:`mix_disp` generalizes the event to a gossip topology
+(``repro.topology``): ``W @ plane`` for a doubly-stochastic (M, M)
+mixing matrix, each worker keeping its own mixed row.
 
 Grid (P // block_p,): each program reads a full-height (M, block_p)
 column block (M is the worker count, 4–64 — far below a VMEM tile, so
@@ -43,6 +46,17 @@ def _avg_disp_kernel(x_ref, o_ref, d_ref, *, groups):
         o_ref[...] = out.reshape(m, bp)
     else:
         o_ref[...] = jnp.broadcast_to(glob[None], (m, bp))
+
+
+def _mix_disp_kernel(x_ref, w_ref, o_ref, d_ref):
+    x = x_ref[...]                                   # (M, block_p) f32
+    m = x.shape[0]
+    glob = jnp.mean(x, axis=0)
+    d_ref[0, 0] = jnp.sum(jnp.square(x - glob[None])) / m
+    # the (M, M) @ (M, block_p) gossip mix rides the same column sweep:
+    # M is tiny, so W lives whole in VMEM and the contraction hits the
+    # MXU without extra plane traffic
+    o_ref[...] = jnp.dot(w_ref[...], x, preferred_element_type=jnp.float32)
 
 
 def _avg_disp_outer_kernel(x_ref, p_ref, v_ref, o_ref, a_ref, w_ref, d_ref,
@@ -98,6 +112,41 @@ def avg_disp(plane, *, groups: int = 1, block_p: int = DEFAULT_BLOCK_P,
         ],
         interpret=interpret,
     )(x)
+    return out[:, :p], jnp.sum(dpart)
+
+
+@functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
+def mix_disp(plane, W, *, block_p: int = DEFAULT_BLOCK_P,
+             interpret: bool | None = None):
+    """Fused gossip mix + dispersion: plane (M, P) f32, W (M, M)
+    doubly-stochastic f32 -> (W @ plane, Eq. 4 dispersion of the input
+    plane). Each worker keeps its own mixed row — no broadcast. The
+    generalization of :func:`avg_disp` to a mixing-matrix topology
+    (``repro.topology``); matches ``repro.kernels.ref.mix_disp_ref``."""
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, p = plane.shape
+    assert W.shape == (m, m), (W.shape, m)
+    block_p = min(block_p, max(p, 1))
+    p_pad = -(-max(p, 1) // block_p) * block_p
+    x = _pad_cols(plane.astype(jnp.float32), p_pad)
+    nb = p_pad // block_p
+    out, dpart = pl.pallas_call(
+        _mix_disp_kernel,
+        grid=(nb,),
+        in_specs=[pl.BlockSpec((m, block_p), lambda i: (0, i)),
+                  pl.BlockSpec((m, m), lambda i: (0, 0))],
+        out_specs=[
+            pl.BlockSpec((m, block_p), lambda i: (0, i)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0),
+                         memory_space=pltpu.SMEM),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, p_pad), jnp.float32),
+            jax.ShapeDtypeStruct((nb, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, W.astype(jnp.float32))
     return out[:, :p], jnp.sum(dpart)
 
 

@@ -34,7 +34,7 @@ from jax.experimental.pallas import tpu as pltpu
 
 DEFAULT_BLOCK_P = 1024
 _KINDS = ("sgd", "momentum", "adamw")
-_MODES = ("none", "mean", "group")
+_MODES = ("none", "mean", "group", "mix")
 
 
 def _round_codes(x, codes):
@@ -52,6 +52,8 @@ def _opt_step_kernel(*refs, kind, mode, groups, nstate, has_codes,
     i += nstate
     codes_ref = refs[i] if has_codes else None
     i += int(has_codes)
+    w_ref = refs[i] if mode == "mix" else None
+    i += int(mode == "mix")
     scal_ref = refs[i]
     i += 1
     o_ref = refs[i]
@@ -87,6 +89,15 @@ def _opt_step_kernel(*refs, kind, mode, groups, nstate, has_codes,
     if mode == "none":
         o_ref[...] = upd
         return
+    if mode == "mix":
+        # gossip topology: (M, M) @ (M, block_p) on the MXU — each
+        # worker keeps its own mixed row, no broadcast (the dispersion
+        # above stays the pre-mix diagnostic)
+        out = jnp.dot(w_ref[...], upd, preferred_element_type=jnp.float32)
+        if has_codes:
+            out = _round_codes(out, codes_ref[...])
+        o_ref[...] = out
+        return
     if mode == "group" and groups > 1:
         gm = jnp.mean(upd.reshape(groups, m // groups, bp), axis=1)
         out = jnp.broadcast_to(gm[:, None], (groups, m // groups, bp))
@@ -110,22 +121,26 @@ def _pad_cols(x, p_pad):
     static_argnames=("kind", "mode", "groups", "mu", "nesterov", "b1", "b2",
                      "eps", "weight_decay", "block_p", "interpret"))
 def opt_step(plane, grads, planes, scalars, *, kind, mode="none",
-             groups: int = 1, mu=0.9, nesterov=False, b1=0.9, b2=0.95,
-             eps=1e-8, weight_decay=0.0, codes=None,
+             groups: int = 1, W=None, mu=0.9, nesterov=False, b1=0.9,
+             b2=0.95, eps=1e-8, weight_decay=0.0, codes=None,
              block_p: int = DEFAULT_BLOCK_P, interpret: bool | None = None):
     """Fused optimizer step + optional averaging on the (M, P) plane.
 
     plane/grads: (M, P) f32; planes: tuple of S f32 state planes
     (``FlatOptSpec`` layout); scalars: (4,) f32 [lr, c1, c2, _];
     codes: optional (P,) f32 rounding codes. mode: "none" | "mean" |
-    "group". Returns (plane, state planes, Eq. 4 dispersion scalar).
+    "group" | "mix" — "mix" applies the doubly-stochastic (M, M)
+    mixing matrix ``W`` (``repro.topology``) after the update: each
+    worker keeps its own mixed row, no broadcast. Returns
+    (plane, state planes, Eq. 4 dispersion scalar).
     The dispersion of the post-update plane is emitted in every mode —
-    "none" measures without averaging, so adaptive schedules and the
-    per-step diagnostic trace see the true value on every step.
-    Matches ``repro.kernels.ref.opt_step_ref``.
+    "none" measures without averaging and "mix" pre-mix, so adaptive
+    schedules and the per-step diagnostic trace see the true value on
+    every step. Matches ``repro.kernels.ref.opt_step_ref``.
     """
     assert kind in _KINDS, kind
     assert mode in _MODES, mode
+    assert (W is not None) == (mode == "mix"), (mode, W is None)
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     m, p = plane.shape
@@ -144,6 +159,10 @@ def opt_step(plane, grads, planes, scalars, *, kind, mode="none",
     if has_codes:
         ins.append(_pad_cols(jnp.asarray(codes, jnp.float32)[None], p_pad))
         in_specs.append(pl.BlockSpec((1, block_p), lambda i: (0, i)))
+    if mode == "mix":
+        assert W.shape == (m, m), (W.shape, m)
+        ins.append(W.astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((m, m), lambda i: (0, 0)))
     ins.append(jnp.asarray(scalars, jnp.float32).reshape(1, 4))
     in_specs.append(pl.BlockSpec((1, 4), lambda i: (0, 0),
                                  memory_space=pltpu.SMEM))

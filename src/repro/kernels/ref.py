@@ -55,6 +55,28 @@ def avg_disp_ref(plane, *, groups: int = 1):
     return out, disp
 
 
+def mix_disp_ref(plane, W, *, codes=None):
+    """Gossip mixing event on the flat (M, P) plane: ``W @ plane`` for a
+    doubly-stochastic (M, M) mixing matrix — each worker keeps its own
+    mixed row, no broadcast — plus the Eq. 4 dispersion of the INPUT
+    plane (pre-mix, matching ``avg_disp_ref``'s pre-average diagnostic).
+    ``Topology.full``'s W reproduces the mean only up to matmul rounding,
+    which is why the engine lowers that kind to the mean path instead.
+
+    ``codes`` (``FlatSpec.rounding_codes``) rounds the mixed rows
+    through the leaf dtypes, matching the tree operator
+    ``repro.topology.mix_tree``'s ``.astype``. Returns
+    (mixed plane, dispersion)."""
+    m = plane.shape[0]
+    glob = jnp.mean(plane, axis=0)
+    disp = jnp.sum(jnp.square(plane - glob[None])) / m
+    out = jnp.dot(W.astype(jnp.float32), plane,
+                  preferred_element_type=jnp.float32)
+    if codes is not None:
+        out = round_to_codes(out, codes[None])
+    return out, disp
+
+
 def avg_disp_outer_ref(plane, prev_avg, vel, *, lr: float, momentum: float,
                        nesterov: bool = True, codes=None):
     """avg_disp with the outer-optimizer momentum step folded in: the
@@ -147,19 +169,22 @@ def plane_average_ref(plane, *, groups: int = 1, codes=None):
 
 
 def opt_step_ref(plane, grads, planes, scalars, *, kind, mode="none",
-                 groups: int = 1, mu=0.9, nesterov=False, b1=0.9, b2=0.95,
-                 eps=1e-8, weight_decay=0.0, codes=None):
+                 groups: int = 1, W=None, mu=0.9, nesterov=False, b1=0.9,
+                 b2=0.95, eps=1e-8, weight_decay=0.0, codes=None):
     """Fused local optimizer step + optional averaging event in one pass
     over the flat (M, P) plane — the jnp twin of
     ``repro.kernels.opt_step``.
 
     mode: "none" (pure local step), "mean" (step + worker mean + Eq. 4
-    dispersion + broadcast), or "group" (per-group means; dispersion
-    still against the global mean). Returns
+    dispersion + broadcast), "group" (per-group means; dispersion still
+    against the global mean), or "mix" (step + ``W @ plane`` gossip mix
+    for the doubly-stochastic (M, M) ``W`` — no broadcast, each worker
+    keeps its own mixed row). Returns
     (plane, new state planes, dispersion). The Eq. 4 dispersion of the
     post-update plane is emitted in EVERY mode — "none" measures
-    without averaging, so adaptive schedules and the per-step
-    diagnostic trace see the true value on non-averaging steps too."""
+    without averaging and "mix" measures pre-mix, so adaptive schedules
+    and the per-step diagnostic trace see the true value on every
+    step."""
     upd, planes = plane_update_ref(
         plane, grads, planes, scalars, kind=kind, mu=mu, nesterov=nesterov,
         b1=b1, b2=b2, eps=eps, weight_decay=weight_decay, codes=codes)
@@ -168,6 +193,9 @@ def opt_step_ref(plane, grads, planes, scalars, *, kind, mode="none",
         glob = jnp.mean(upd, axis=0)
         disp = jnp.sum(jnp.square(upd - glob[None])) / m
         return upd, planes, disp
+    if mode == "mix":
+        out, disp = mix_disp_ref(upd, W, codes=codes)
+        return out, planes, disp
     out, disp = plane_average_ref(
         upd, groups=groups if mode == "group" else 1, codes=codes)
     return out, planes, disp

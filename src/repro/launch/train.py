@@ -22,6 +22,8 @@ from repro.checkpoint import (load_engine_state, save_checkpoint,
                               save_engine_state)
 from repro.configs import ARCHS, get_config
 from repro.core import AveragingSchedule, OuterOptimizer, PhaseEngine
+from repro.topology import KINDS as TOPOLOGY_KINDS
+from repro.topology import Topology
 from repro.data import token_stream, worker_batches
 from repro.launch.mesh import make_worker_mesh
 from repro.models import init_params, lm_loss
@@ -55,6 +57,17 @@ def main(argv=None):
     ap.add_argument("--budget-horizon", type=int, default=0,
                     help="adaptive_budget: steps the budget spans "
                          "(default 0 -> --steps)")
+    ap.add_argument("--topology", default=None,
+                    choices=list(TOPOLOGY_KINDS),
+                    help="mixing topology for the averaging events "
+                         "(repro.topology): every event becomes one "
+                         "doubly-stochastic W @ plane mix over this "
+                         "communication graph; 'full' is bit-identical "
+                         "to the default mean, 'groups' to the "
+                         "inner-groups block mean")
+    ap.add_argument("--topology-groups", type=int, default=2,
+                    help="--topology groups: number of block-diagonal "
+                         "worker groups (must divide --workers)")
     ap.add_argument("--inner-groups", type=int, default=2,
                     help="hierarchical averaging: number of inner worker "
                          "groups (must divide --workers)")
@@ -127,6 +140,21 @@ def main(argv=None):
             ap.error(f"--comm-budget ({args.comm_budget}) cannot exceed "
                      f"the budget horizon ({horizon} steps): at most one "
                      "averaging event per step")
+    topology = None
+    if args.topology:
+        # invalid topology/worker-count combinations (ring needs M >= 3,
+        # torus a composite M, gossip_pairs an even M, ...) surface here
+        # at parse time with the builders' actionable messages instead
+        # of deep inside a trace
+        try:
+            topology = Topology.build(args.topology, args.workers,
+                                      groups=args.topology_groups)
+        except ValueError as e:
+            ap.error(f"--topology {args.topology}: {e}")
+        if args.outer_momentum > 0 and args.topology != "full":
+            ap.error(f"--outer-momentum steps on the consensus mean, "
+                     f"which --topology {args.topology} never forms — "
+                     "use --topology full or drop the outer optimizer")
 
     cfg = get_config(args.arch, reduced=args.reduced)
     if args.reduced:
@@ -163,7 +191,12 @@ def main(argv=None):
                          scan_unroll=args.scan_unroll or True,
                          flat=not args.tree_engine,
                          fused_opt=not args.no_fused_opt,
-                         mesh=mesh, collective=args.collective)
+                         mesh=mesh, collective=args.collective,
+                         topology=topology)
+    if topology is not None:
+        print(f"[train] topology={topology.kind} "
+              f"(spectral gap {topology.spectral_gap:.3f}, "
+              f"{topology.comm_degree:.1f} msgs/worker/event)")
 
     # per-worker independent data streams (paper §3.2: distinct shuffles)
     def batch_iter():

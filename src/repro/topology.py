@@ -1,0 +1,304 @@
+"""Gossip topologies: mixing-matrix averaging as a scenario axis.
+
+The paper asks *when* averaging helps; its operator is always the full
+worker mean w_i <- (1/M) Σ_j w_j. This module generalizes every
+averaging event to ONE application of a doubly-stochastic mixing matrix
+
+    w_i  <-  Σ_j W_ij w_j            (each worker keeps its own mixed row)
+
+over a communication graph — ring, 2-D torus, hypercube/exponential
+graph, random gossip pairs — which interpolates continuously between
+"no averaging" (W = I) and "full averaging" (W = 11ᵀ/M) at a fraction
+of the communication cost. Local/K-step averaging analyses (Zhou & Cong
+1708.01012; Yu et al. 1807.06629) are the degenerate full-graph case.
+
+How fast partial mixing kills the paper's Eq. 4 worker dispersion is
+governed by the matrix spectrum: writing a worker state as consensus +
+deviation, one mix contracts the deviation by at most λ₂(W) — the
+second-largest eigenvalue *modulus* (SLEM) — so each event multiplies
+the dispersion by ≤ λ₂². :attr:`Topology.spectral_gap` exposes
+``1 - λ₂`` for the theory hooks in ``repro.core.theory``
+(:func:`~repro.core.theory.mixing_contraction`,
+:func:`~repro.core.theory.mixed_dispersion_fixed_point`).
+
+Builders (all symmetric and doubly stochastic; deterministic graphs use
+Metropolis–Hastings edge weights, uniform ``1/(deg+1)`` on regular
+graphs):
+
+  - :meth:`Topology.full`         W = 11ᵀ/M (gap 1). The engine lowers
+    this to the existing fused-mean path, so it is *bit-identical* to
+    running without a topology.
+  - :meth:`Topology.ring`         degree-2 cycle, M >= 3.
+  - :meth:`Topology.torus`        2-D periodic grid a×b (a the largest
+    divisor ≤ √M), composite M.
+  - :meth:`Topology.hypercube`    exponential graph: neighbors at
+    i XOR 2^k, M a power of two; degree log₂M, gap independent of M.
+  - :meth:`Topology.groups`       block-diagonal W: full mean within g
+    contiguous groups — exactly the engine's existing ``inner_groups``
+    block mean, now expressed as a mixing matrix (gap 0: the graph is
+    disconnected). Lowers to the fused group-mean path bit-identically.
+  - :meth:`Topology.gossip_pairs` per-EVENT random perfect matching:
+    each worker averages with one partner (W = ½(I + P), P an
+    involution permutation). The matrix is sampled per event as a pure
+    function of (decision key, step) — see :func:`gossip_matrix` — so
+    runs replay bit-identically across engine paths, phase blockings
+    and checkpoint/resume. The declared gap is that of the *expected*
+    matrix E[W] = ½I + ½(J−I)/(M−1).
+  - :meth:`Topology.disconnected` W = I: events fire (schedule state
+    and event counts advance) but mix nothing — the no-communication
+    endpoint of the axis.
+
+``repro.core.engine.PhaseEngine(topology=...)`` wires a topology
+through every runtime path; ``repro.kernels.opt_step`` /
+``repro.kernels.avg_disp`` fuse the (M,M)@(M,P) mix with the local
+update and the Eq. 4 dispersion in one pass.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import cached_property
+
+import numpy as np
+
+KINDS = ("full", "ring", "torus", "hypercube", "groups", "gossip_pairs",
+         "disconnected")
+
+#: kinds whose events need the generic W @ plane mix; ``full`` and
+#: ``groups`` lower to the engine's existing (bit-identical) fused
+#: mean / group-mean paths instead
+MIX_KINDS = ("ring", "torus", "hypercube", "gossip_pairs", "disconnected")
+
+_GOSSIP_SALT = 0x676F73  # "gos": decorrelates the per-event matching
+#                        # stream from the stochastic schedule's
+#                        # fold_in(key, step) Bernoulli stream
+
+
+def gossip_matrix(key, step, num_workers: int):
+    """The per-event gossip mixing matrix: a uniformly random perfect
+    matching of the M workers, each pair averaging — W = ½(I + P) with
+    P the matching's (involution) permutation matrix.
+
+    A pure function of ``(key, step)`` via a salted double ``fold_in``,
+    exactly like the stochastic schedule's Bernoulli draws: the same
+    checkpointed decision key replays the same matchings on resume, on
+    every engine path, and on every shard of a sharded run. Traceable
+    (``step`` may be a traced int32 scalar).
+    """
+    import jax
+    import jax.numpy as jnp
+    assert num_workers % 2 == 0, num_workers
+    k = jax.random.fold_in(jax.random.fold_in(key, _GOSSIP_SALT), step)
+    perm = jax.random.permutation(k, num_workers)
+    a, b = perm[0::2], perm[1::2]
+    partner = (jnp.zeros(num_workers, jnp.int32).at[a].set(b)
+               .at[b].set(a))
+    eye = jnp.eye(num_workers, dtype=jnp.float32)
+    return 0.5 * (eye + eye[partner])
+
+
+def mix_tree(worker_tree, W):
+    """Apply the mixing matrix along the worker axis of every leaf —
+    the tree-path twin of ``W @ plane``. Computed in float32 and cast
+    back to the leaf dtype, like ``repro.core.averaging.average_all``.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    def mx(x):
+        xf = x.astype(jnp.float32).reshape(x.shape[0], -1)
+        out = jnp.dot(W, xf, preferred_element_type=jnp.float32)
+        return out.reshape(x.shape).astype(x.dtype)
+
+    return jax.tree.map(mx, worker_tree)
+
+
+def _metropolis(adj: np.ndarray) -> np.ndarray:
+    """Metropolis–Hastings weights for a symmetric adjacency (no self
+    loops): W_ij = 1/(1 + max(deg_i, deg_j)) on edges, diagonal fills
+    each row to 1. Symmetric and doubly stochastic for ANY graph; on a
+    d-regular graph it is the uniform 1/(d+1) weighting."""
+    deg = adj.sum(1)
+    W = np.where(adj, 1.0 / (1.0 + np.maximum(deg[:, None], deg[None, :])),
+                 0.0)
+    np.fill_diagonal(W, 1.0 - W.sum(1))
+    return W
+
+
+@dataclass(frozen=True, eq=False)  # eq=False: hash by identity for jit
+class Topology:
+    """A communication graph and its doubly-stochastic mixing matrix.
+
+    ``matrix`` is the static (M, M) float64 W for deterministic kinds
+    and None for ``gossip_pairs`` (whose W is sampled per event —
+    :meth:`mixing_matrix`). Build through the classmethods, which
+    validate the worker count eagerly with actionable messages (the
+    same errors ``train.py --topology`` surfaces at parse time)."""
+    kind: str
+    num_workers: int
+    matrix: np.ndarray | None = field(repr=False)
+    groups: int = 1
+
+    # ---- builders --------------------------------------------------------
+    @classmethod
+    def full(cls, num_workers: int) -> "Topology":
+        if num_workers < 1:
+            raise ValueError(f"full topology needs >= 1 worker, "
+                             f"got {num_workers}")
+        W = np.full((num_workers, num_workers), 1.0 / num_workers)
+        return cls("full", num_workers, W)
+
+    @classmethod
+    def ring(cls, num_workers: int) -> "Topology":
+        if num_workers < 3:
+            raise ValueError(
+                f"ring topology needs >= 3 workers (got {num_workers}): "
+                "with 2 the two neighbors coincide — use 'full' (the "
+                "pair mean) instead")
+        m = num_workers
+        i = np.arange(m)
+        adj = np.zeros((m, m), bool)
+        adj[i, (i + 1) % m] = adj[i, (i - 1) % m] = True
+        return cls("ring", m, _metropolis(adj))
+
+    @staticmethod
+    def torus_sides(num_workers: int) -> tuple[int, int]:
+        """The a×b factorization a torus uses: a is the largest divisor
+        of M with 2 <= a <= √M. Raises for prime / too-small M."""
+        m = num_workers
+        for a in range(math.isqrt(m), 1, -1):
+            if m % a == 0:
+                return a, m // a
+        raise ValueError(
+            f"torus topology needs a composite worker count that "
+            f"factors into a 2-D grid (got {m}): use 'ring' for a "
+            "1-D cycle instead")
+
+    @classmethod
+    def torus(cls, num_workers: int) -> "Topology":
+        a, b = cls.torus_sides(num_workers)
+        m = num_workers
+        adj = np.zeros((m, m), bool)
+        for n in range(m):
+            i, j = divmod(n, b)
+            for ni, nj in (((i + 1) % a, j), ((i - 1) % a, j),
+                           (i, (j + 1) % b), (i, (j - 1) % b)):
+                nb = ni * b + nj
+                if nb != n:
+                    adj[n, nb] = True
+        return cls("torus", m, _metropolis(adj))
+
+    @classmethod
+    def hypercube(cls, num_workers: int) -> "Topology":
+        m = num_workers
+        if m < 2 or m & (m - 1):
+            raise ValueError(
+                f"hypercube (exponential-graph) topology needs a "
+                f"power-of-two worker count >= 2, got {m}")
+        adj = np.zeros((m, m), bool)
+        for n in range(m):
+            for k in range(m.bit_length() - 1):
+                adj[n, n ^ (1 << k)] = True
+        return cls("hypercube", m, _metropolis(adj))
+
+    @classmethod
+    def blocks(cls, num_workers: int, groups: int) -> "Topology":
+        """Block-diagonal W: full mean within ``groups`` contiguous
+        worker groups — the existing ``inner_groups`` block mean as a
+        mixing matrix. Disconnected for groups > 1, so the spectral
+        gap is 0 (no global consensus)."""
+        m = num_workers
+        if groups < 1 or m % groups:
+            raise ValueError(
+                f"groups topology needs a group count >= 1 dividing the "
+                f"worker count, got groups={groups} for M={m}")
+        per = m // groups
+        W = np.zeros((m, m))
+        for g in range(groups):
+            W[g * per:(g + 1) * per, g * per:(g + 1) * per] = 1.0 / per
+        return cls("groups", m, W, groups=groups)
+
+    @classmethod
+    def gossip_pairs(cls, num_workers: int) -> "Topology":
+        m = num_workers
+        if m < 2 or m % 2:
+            raise ValueError(
+                f"gossip_pairs topology pairs the workers into a "
+                f"perfect matching and needs an even count >= 2, "
+                f"got {m}")
+        return cls("gossip_pairs", m, None)
+
+    @classmethod
+    def disconnected(cls, num_workers: int) -> "Topology":
+        if num_workers < 1:
+            raise ValueError(f"disconnected topology needs >= 1 worker, "
+                             f"got {num_workers}")
+        return cls("disconnected", num_workers, np.eye(num_workers))
+
+    @classmethod
+    def build(cls, kind: str, num_workers: int, *,
+              groups: int | None = None) -> "Topology":
+        """CLI dispatcher: one builder per kind, same eager validation.
+        ``groups`` defaults to 2 only when omitted — an explicit invalid
+        count (e.g. 0) still hits the builder's validation."""
+        if kind not in KINDS:
+            raise ValueError(f"unknown topology kind {kind!r}; "
+                             f"pick one of {KINDS}")
+        if kind == "groups":
+            return cls.blocks(num_workers, 2 if groups is None else groups)
+        return getattr(cls, kind)(num_workers)
+
+    # ---- spectrum / communication ----------------------------------------
+    def expected_matrix(self) -> np.ndarray:
+        """E[W] in float64: the matrix itself for deterministic kinds;
+        for gossip pairs, each worker's partner is uniform over the
+        others — E[W] = ½I + ½(J−I)/(M−1)."""
+        if self.matrix is not None:
+            return np.asarray(self.matrix, np.float64)
+        m = self.num_workers
+        return (0.5 * np.eye(m)
+                + 0.5 * (np.ones((m, m)) - np.eye(m)) / (m - 1))
+
+    @cached_property
+    def slem(self) -> float:
+        """Second-largest eigenvalue modulus of E[W] — the per-event
+        contraction factor of the consensus deviation (dispersion
+        contracts by ≤ slem² per mix)."""
+        ev = np.linalg.eigvalsh(self.expected_matrix())  # ascending
+        if len(ev) < 2:
+            return 0.0
+        # clamp eigensolver roundoff: a doubly-stochastic W has its
+        # whole spectrum in [-1, 1]
+        return float(min(1.0, max(abs(ev[0]), ev[-2], 0.0)))
+
+    @cached_property
+    def spectral_gap(self) -> float:
+        """1 - λ₂(W), λ₂ the SLEM of the expected mixing matrix: 1 for
+        ``full`` (one mix reaches consensus), 0 for ``disconnected``
+        and ``groups`` (the graph has no global consensus direction)."""
+        return 1.0 - self.slem
+
+    @cached_property
+    def comm_degree(self) -> float:
+        """Mean per-event messages per worker: the off-diagonal nonzero
+        count of a row of one event's W (for gossip pairs: exactly the
+        1 partner). The unit of the benchmark's matched-communication
+        sweeps — one full-mean event costs M−1 where a ring event
+        costs 2."""
+        if self.kind == "gossip_pairs":
+            return 1.0
+        W = self.expected_matrix()
+        off = (np.abs(W) > 1e-12) & ~np.eye(self.num_workers, dtype=bool)
+        return float(off.sum(1).mean())
+
+    # ---- per-event matrix ------------------------------------------------
+    def mixing_matrix(self, step=0, key=None):
+        """This event's W as an (M, M) float32 jnp array. Deterministic
+        kinds ignore ``(step, key)``; ``gossip_pairs`` samples the
+        matching from them (:func:`gossip_matrix`)."""
+        import jax.numpy as jnp
+        if self.kind == "gossip_pairs":
+            assert key is not None, \
+                "gossip_pairs needs the decision key to sample a matching"
+            return gossip_matrix(key, step, self.num_workers)
+        return jnp.asarray(self.matrix, jnp.float32)

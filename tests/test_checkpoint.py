@@ -116,3 +116,87 @@ def test_consensus_checkpoint_roundtrip(tmp_path):
     assert step == 5
     for a, b in zip(jax.tree.leaves(back), jax.tree.leaves(tree)):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# --------------------------------------------------------------------------
+# EngineState checkpoint layout versions: one round-trip per version
+# --------------------------------------------------------------------------
+
+class TestEngineStateVersions:
+    """``save_engine_state`` declares an explicit
+    ``engine_state_version`` in the checkpoint metadata and
+    ``load_engine_state`` dispatches on it — v0 (pre-SchedState) and
+    v1 (SchedState, version field not yet written) checkpoints keep
+    loading, and a version from the future is refused instead of
+    mis-restored."""
+
+    def _state(self, seed=1):
+        batches = _problem()
+        engine = PhaseEngine(_loss, Momentum(lr=0.05, mu=0.9),
+                             AveragingSchedule("periodic", 8))
+        _, _, st = engine.run({"w": jnp.zeros(DIM)}, batches(0, 16),
+                              num_workers=WORKERS, seed=seed,
+                              return_state=True)
+        like = engine.init({"w": jnp.zeros(DIM)}, WORKERS, seed)
+        return st, like
+
+    def _assert_restored(self, st, loaded):
+        for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(loaded)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+    def test_v2_roundtrip_declares_version(self, tmp_path):
+        import json
+        from repro.checkpoint.io import ENGINE_STATE_VERSION
+        st, like = self._state()
+        path = os.path.join(tmp_path, "v2")
+        save_engine_state(path, st, extra={"note": "kept"})
+        meta = json.load(open(path + ".json"))
+        assert meta["extra"]["engine_state_version"] == \
+            ENGINE_STATE_VERSION == 2
+        assert meta["extra"]["note"] == "kept"  # caller extras survive
+        loaded, step = load_engine_state(path, like)
+        assert step == 16
+        self._assert_restored(st, loaded)
+
+    def test_v1_roundtrip_versionless_schedstate(self, tmp_path):
+        # a PR 4 build: SchedState leaves present, no version field
+        st, like = self._state()
+        path = os.path.join(tmp_path, "v1")
+        save_checkpoint(path, jax.device_get(st), step=int(st.step))
+        loaded, step = load_engine_state(path, like)
+        assert step == 16
+        self._assert_restored(st, loaded)
+
+    def test_v0_roundtrip_pre_schedstate(self, tmp_path):
+        # a PR 3 build: no SchedState leaves, no version field — the
+        # sched bookkeeping is taken fresh (all zero) from like_state
+        st, like = self._state()
+        bare = jax.device_get(st._replace(sched=()))
+        for path, extra in ((os.path.join(tmp_path, "v0"), None),
+                            (os.path.join(tmp_path, "v0x"),
+                             {"engine_state_version": 0})):
+            save_checkpoint(path, bare, step=int(st.step), extra=extra)
+            loaded, step = load_engine_state(path, like)
+            assert step == 16
+            self._assert_restored(st._replace(sched=like.sched), loaded)
+            assert int(loaded.sched.comm_spent) == 0
+
+    def test_future_version_refused(self, tmp_path):
+        st, like = self._state()
+        path = os.path.join(tmp_path, "vN")
+        save_checkpoint(path, jax.device_get(st), step=int(st.step),
+                        extra={"engine_state_version": 99})
+        with pytest.raises(ValueError, match="version 99"):
+            load_engine_state(path, like)
+
+    def test_malformed_version_refused_cleanly(self, tmp_path):
+        # hand-edited metadata: a non-int or negative version gets the
+        # clean invalid-version error, not a TypeError or a misleading
+        # "newer than this build"
+        st, like = self._state()
+        for bad in ("2", -1, False, True):
+            path = os.path.join(tmp_path, f"bad-{bad}")
+            save_checkpoint(path, jax.device_get(st), step=int(st.step),
+                            extra={"engine_state_version": bad})
+            with pytest.raises(ValueError, match="invalid engine-state"):
+                load_engine_state(path, like)

@@ -7,8 +7,9 @@ device count at import, so the parent process can't flip it):
   - gather collective: bit-identical params AND history vs the
     single-device engine for the paper's Momentum recipe, across all
     5 static + 2 adaptive (dispersion-driven, stateful) averaging
-    schedules (+ the outer optimizer and the indexed on-device data
-    plane);
+    schedules (+ the outer optimizer, the indexed on-device data
+    plane, and the sparse mixing topologies — ring / torus / random
+    gossip pairs — whose W-mix events all_gather the row shards);
   - psum collective: identical decision streams / averaging counts —
     including the adaptive kinds, whose decisions consume the psum'd
     per-step dispersion — params and traces equal to f32 roundoff.
@@ -106,6 +107,28 @@ f1, h1 = PhaseEngine(loss_fn, opt(), sch, mesh=mesh,
 np.testing.assert_array_equal(np.asarray(f0["w"]), np.asarray(f1["w"]))
 assert h0 == h1
 print("ok indexed")
+
+# gossip-topology mixing events (repro.topology): gather bit-identical,
+# psum same decisions / f32-roundoff params — incl. the per-event
+# random gossip matching, replayed identically on every shard from the
+# replicated (dec_key, step)
+from repro.topology import Topology
+for kind in ("ring", "torus", "gossip_pairs"):
+    topo = Topology.build(kind, WORKERS)
+    f0, h0 = PhaseEngine(loss_fn, opt(), sch, topology=topo).run(
+        params, batches(), **kw)
+    f1, h1 = PhaseEngine(loss_fn, opt(), sch, topology=topo, mesh=mesh,
+                         collective="gather").run(params, batches(), **kw)
+    np.testing.assert_array_equal(np.asarray(f0["w"]), np.asarray(f1["w"]))
+    assert h0 == h1, kind
+    f2, h2 = PhaseEngine(loss_fn, opt(), sch, topology=topo, mesh=mesh,
+                         collective="psum").run(params, batches(), **kw)
+    assert h0["averages"] == h2["averages"], kind
+    assert [t for t, _ in h0["dispersion"]] == \
+        [t for t, _ in h2["dispersion"]], kind
+    np.testing.assert_allclose(np.asarray(f0["w"]), np.asarray(f2["w"]),
+                               rtol=1e-5, atol=1e-7)
+    print("ok topology", kind)
 print("ALL-OK")
 """
 

@@ -1,0 +1,499 @@
+"""Gossip topology subsystem: mixing-matrix averaging.
+
+System-level guarantees pinned here:
+
+  1. Every builder yields a symmetric, doubly-stochastic W whose
+     declared spectral gap matches the matrix spectrum (deterministic
+     sweep; tests/test_topology_properties.py re-checks under
+     hypothesis).
+  2. ``Topology.full`` reproduces the existing mean path BIT-exactly —
+     params and full history — for all 7 schedules and all four engine
+     paths (flat-native, flat, tree, host loop), and ``groups`` is the
+     ``inner_groups`` block mean as a block-diagonal W.
+  3. The mix kernels agree with their jnp twins and the tree operator,
+     and one mix event contracts the dispersion by at most λ₂².
+  4. All engine paths replay identical decision streams and agree on
+     the final params for sparse topologies (incl. the per-event
+     random gossip matching, a pure function of (dec_key, step)).
+  5. Checkpoint/resume with a gossip topology is bit-identical to the
+     uninterrupted run — the matching stream needs no extra state.
+  6. Invalid topology/worker combinations fail eagerly (builders,
+     engine, and train.py at parse time).
+"""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import load_engine_state, save_engine_state
+from repro.core import (AveragingSchedule, OuterOptimizer, PhaseEngine,
+                        Topology)
+from repro.core.averaging import average_inner
+from repro.core.theory import (coarse_dispersion_bound, mixing_contraction,
+                               mixed_dispersion_fixed_point)
+from repro.data.pipeline import DeviceDataset
+from repro.kernels.avg_disp import mix_disp
+from repro.kernels.opt_step import opt_step
+from repro.kernels.ref import mix_disp_ref, opt_step_ref
+from repro.optim import SGD, Momentum
+from repro.topology import gossip_matrix, mix_tree
+
+WORKERS, STEPS, DIM, SAMPLES = 8, 33, 12, 256
+
+
+def _convex_problem(seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((SAMPLES, DIM))
+    y = X @ rng.standard_normal(DIM) + 0.1 * rng.standard_normal(SAMPLES)
+    return X, y
+
+
+def _loss_fn(params, batch, rng):
+    r = batch["x"] @ params["w"] - batch["y"]
+    return 0.5 * jnp.mean(r * r), {}
+
+
+def _params():
+    return {"w": jnp.zeros(DIM)}
+
+
+def _batches(seed=1, steps=STEPS, workers=WORKERS):
+    X, y = _convex_problem()
+    rng = np.random.default_rng(seed)
+    idx = rng.integers(0, SAMPLES, (steps, workers, 8))
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    return [{"x": Xj[idx[t]], "y": yj[idx[t]]} for t in range(steps)]
+
+
+def _slem(W):
+    ev = np.linalg.eigvalsh(np.asarray(W, np.float64))
+    return max(abs(ev[0]), ev[-2])
+
+
+SCHEDULES = {
+    "oneshot": AveragingSchedule("oneshot"),
+    "minibatch": AveragingSchedule("minibatch"),
+    "periodic": AveragingSchedule("periodic", 4),
+    "stochastic": AveragingSchedule("stochastic", zeta=0.2),
+    "hierarchical": AveragingSchedule("hierarchical", inner_phase_len=3,
+                                      outer_phase_len=12, inner_groups=2),
+    "adaptive_threshold": AveragingSchedule("adaptive_threshold",
+                                            disp_threshold=0.05,
+                                            disp_ema_beta=0.5),
+    "adaptive_budget": AveragingSchedule("adaptive_budget", comm_budget=6,
+                                         budget_horizon=STEPS),
+}
+
+BUILDER_CASES = [("full", 4), ("full", 7), ("ring", 3), ("ring", 8),
+                 ("ring", 13), ("torus", 4), ("torus", 6), ("torus", 16),
+                 ("hypercube", 2), ("hypercube", 8), ("hypercube", 16),
+                 ("groups", 8), ("groups", 12), ("disconnected", 4),
+                 ("gossip_pairs", 2), ("gossip_pairs", 8),
+                 ("gossip_pairs", 16)]
+
+
+# --------------------------------------------------------------------------
+# builders: doubly-stochastic W + declared spectral gap
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,m", BUILDER_CASES)
+def test_builders_doubly_stochastic_symmetric_with_declared_gap(kind, m):
+    t = Topology.build(kind, m, groups=2)
+    W = t.expected_matrix()
+    assert W.shape == (m, m)
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    np.testing.assert_allclose(W.sum(axis=1), np.ones(m), atol=1e-12)
+    np.testing.assert_allclose(W.sum(axis=0), np.ones(m), atol=1e-12)
+    assert (W >= -1e-12).all()
+    # the declared gap is 1 - SLEM of (the expectation of) W
+    np.testing.assert_allclose(t.spectral_gap, 1.0 - _slem(W), atol=1e-9)
+    assert 0.0 <= t.spectral_gap <= 1.0 + 1e-9
+
+
+def test_known_spectral_gaps():
+    assert Topology.full(8).spectral_gap == pytest.approx(1.0)
+    assert Topology.disconnected(8).spectral_gap == pytest.approx(0.0)
+    # groups > 1 is a disconnected graph: no global consensus direction
+    assert Topology.blocks(8, 2).spectral_gap == pytest.approx(0.0)
+    assert Topology.blocks(8, 1).spectral_gap == pytest.approx(1.0)
+    # ring with uniform 1/3 weights: lambda_2 = (1 + 2 cos(2pi/M)) / 3
+    m = 8
+    lam2 = (1 + 2 * np.cos(2 * np.pi / m)) / 3
+    assert Topology.ring(m).spectral_gap == pytest.approx(1 - lam2)
+    # gossip E[W] spectrum: 1 and (1/2)(1 - 1/(M-1))
+    assert Topology.gossip_pairs(m).spectral_gap == pytest.approx(
+        0.5 + 0.5 / (m - 1))
+    # hypercube with uniform 1/(d+1) weights: lambda_2 = 1 - 2/(d+1),
+    # so the gap decays only logarithmically in M (d = log2 M) — the
+    # exponential graph's scaling advantage over ring/torus
+    for m in (8, 64):
+        d = m.bit_length() - 1
+        assert Topology.hypercube(m).spectral_gap == pytest.approx(
+            2.0 / (d + 1))
+
+
+@pytest.mark.parametrize("kind,m,match", [
+    ("ring", 2, "ring"), ("torus", 7, "composite"), ("torus", 2, "composite"),
+    ("hypercube", 6, "power-of-two"), ("gossip_pairs", 5, "even"),
+    ("groups", 8, "dividing"), ("unknown", 4, "unknown topology")])
+def test_builder_validation_is_eager_and_actionable(kind, m, match):
+    with pytest.raises(ValueError, match=match):
+        Topology.build(kind, m, groups=3)
+
+
+def test_build_rejects_explicit_zero_groups():
+    # groups defaults to 2 only when OMITTED; an explicit 0 must hit
+    # the builder's validation, not silently become the default
+    with pytest.raises(ValueError, match="group count >= 1"):
+        Topology.build("groups", 8, groups=0)
+    assert Topology.build("groups", 8).groups == 2
+
+
+def test_comm_degree():
+    assert Topology.full(8).comm_degree == 7.0
+    assert Topology.ring(8).comm_degree == 2.0
+    assert Topology.torus(16).comm_degree == 4.0
+    assert Topology.hypercube(16).comm_degree == 4.0
+    assert Topology.gossip_pairs(8).comm_degree == 1.0
+    assert Topology.disconnected(8).comm_degree == 0.0
+    assert Topology.blocks(8, 2).comm_degree == 3.0
+
+
+# --------------------------------------------------------------------------
+# gossip matchings: pure function of (key, step)
+# --------------------------------------------------------------------------
+
+def test_gossip_matrix_is_valid_and_deterministic():
+    key = jax.random.PRNGKey(3)
+    W = np.asarray(gossip_matrix(key, 5, WORKERS))
+    np.testing.assert_allclose(W, W.T, atol=0)
+    np.testing.assert_allclose(W.sum(1), np.ones(WORKERS), atol=1e-6)
+    # a pair average is a projection: W^2 == W, diag exactly 1/2
+    np.testing.assert_allclose(W @ W, W, atol=1e-6)
+    np.testing.assert_array_equal(np.diag(W), np.full(WORKERS, 0.5))
+    # replay: same (key, step) -> same matching, bitwise
+    np.testing.assert_array_equal(
+        W, np.asarray(gossip_matrix(key, 5, WORKERS)))
+    # and the stream varies over steps
+    others = [np.asarray(gossip_matrix(key, s, WORKERS))
+              for s in range(1, 9)]
+    assert any(not (o == W).all() for o in others)
+
+
+# --------------------------------------------------------------------------
+# kernels: pallas == ref == tree operator; dispersion contraction
+# --------------------------------------------------------------------------
+
+def test_mix_disp_kernel_matches_ref_and_tree():
+    rng = np.random.default_rng(0)
+    plane = jnp.asarray(rng.standard_normal((WORKERS, 37)), jnp.float32)
+    W = Topology.ring(WORKERS).mixing_matrix()
+    o_k, d_k = mix_disp(plane, W)
+    o_r, d_r = mix_disp_ref(plane, W)
+    np.testing.assert_array_equal(np.asarray(o_k), np.asarray(o_r))
+    np.testing.assert_array_equal(np.asarray(d_k), np.asarray(d_r))
+    tree = mix_tree({"w": plane}, W)["w"]
+    np.testing.assert_allclose(np.asarray(o_r), np.asarray(tree),
+                               rtol=1e-6, atol=1e-7)
+    # doubly stochastic: the column means (consensus) are preserved
+    np.testing.assert_allclose(np.asarray(o_r).mean(0),
+                               np.asarray(plane).mean(0),
+                               rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("codes", [None, "mixed"], ids=["f32", "codes"])
+def test_opt_step_mix_mode_kernel_matches_ref(codes):
+    rng = np.random.default_rng(1)
+    if codes is not None:
+        codes = np.zeros(37, np.float32)
+        codes[10:20] = 1.0
+    plane = jnp.asarray(rng.standard_normal((WORKERS, 37)), jnp.float32)
+    grads = jnp.asarray(rng.standard_normal((WORKERS, 37)), jnp.float32)
+    vel = jnp.asarray(rng.standard_normal((WORKERS, 37)), jnp.float32)
+    scal = jnp.asarray([0.1, 1.0, 1.0, 0.0], jnp.float32)
+    W = Topology.hypercube(WORKERS).mixing_matrix()
+    kw = dict(kind="momentum", mode="mix", W=W, codes=codes)
+    p_k, s_k, d_k = opt_step(plane, grads, (vel,), scal, **kw)
+    p_r, s_r, d_r = opt_step_ref(plane, grads, (vel,), scal, **kw)
+    # the in-kernel update fuses into the MXU contraction, so interpret
+    # mode agrees with the separately-compiled ref to f32 roundoff (the
+    # engine picks ONE implementation per backend, so path equivalence
+    # never mixes the two)
+    np.testing.assert_allclose(np.asarray(p_k), np.asarray(p_r),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(s_k[0]), np.asarray(s_r[0]),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(float(d_k), float(d_r), rtol=1e-5)
+    # and the ref mix composes exactly as update-then-mix (the rare-
+    # schedule path: hoisted update + switched mix event)
+    from repro.kernels.ref import plane_update_ref
+    upd, _ = plane_update_ref(plane, grads, (vel,), scal, kind="momentum",
+                              codes=codes)
+    p_c, d_c = mix_disp_ref(upd, W, codes=codes)
+    np.testing.assert_array_equal(np.asarray(p_r), np.asarray(p_c))
+    np.testing.assert_array_equal(np.asarray(d_r), np.asarray(d_c))
+
+
+@pytest.mark.parametrize("kind", ["ring", "torus", "hypercube"])
+def test_mix_event_contracts_dispersion_by_slem_squared(kind):
+    """One mix multiplies the Eq. 4 dispersion by at most λ₂² — the
+    spectral-gap theory hook the engine's diagnostic rides on."""
+    t = Topology.build(kind, 16)
+    rng = np.random.default_rng(2)
+    plane = jnp.asarray(rng.standard_normal((16, 64)), jnp.float32)
+
+    def disp(x):
+        x = np.asarray(x, np.float64)
+        g = x.mean(0)
+        return float(np.sum((x - g) ** 2) / x.shape[0])
+
+    out, _ = mix_disp_ref(plane, t.mixing_matrix())
+    lam2 = 1.0 - t.spectral_gap
+    assert disp(out) <= lam2 ** 2 * disp(plane) * (1 + 1e-5)
+    assert disp(out) > 0  # partial mixing does NOT collapse dispersion
+
+
+def test_theory_fixed_point_limits():
+    kw = dict(alpha=0.05, sigma2=1.0, L=1.0, c=1.0, k=8)
+    g = coarse_dispersion_bound(**kw)
+    # gap=1 (full averaging): exactly Eq. 4's schedule-independent bound
+    assert mixed_dispersion_fixed_point(**kw, spectral_gap=1.0) == \
+        pytest.approx(g)
+    # gap=0 (disconnected): the k -> infinity envelope
+    env = kw["alpha"] * kw["sigma2"] / (2 * kw["L"]
+                                        - kw["alpha"] * kw["c"] ** 2)
+    assert mixed_dispersion_fixed_point(**kw, spectral_gap=0.0) == \
+        pytest.approx(env)
+    # monotone: more gap, less steady-state dispersion
+    gaps = [0.0, 0.2, 0.5, 0.8, 1.0]
+    vals = [mixed_dispersion_fixed_point(**kw, spectral_gap=s)
+            for s in gaps]
+    assert all(a > b for a, b in zip(vals, vals[1:]))
+    assert mixing_contraction(1.0) == 0.0 and mixing_contraction(0.0) == 1.0
+
+
+# --------------------------------------------------------------------------
+# engine: full topology == mean path, bitwise, everywhere
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", list(SCHEDULES))
+@pytest.mark.parametrize("path", ["native", "flat", "tree", "host"])
+def test_full_topology_bitexact_all_schedules_all_paths(name, path):
+    """The subsystem's anchor: Topology.full lowers to the existing
+    fused-mean path, so params AND the full history are bit-identical
+    to running without a topology — per schedule, per engine path."""
+    batches = _batches()
+    kw = dict(num_workers=WORKERS, seed=3, record_every=1)
+    opts = {"native": {}, "flat": {"fused_opt": False},
+            "tree": {"flat": False}}
+
+    def go(topo):
+        eng = PhaseEngine(_loss_fn, Momentum(lr=0.05, mu=0.9),
+                          SCHEDULES[name], topology=topo,
+                          **opts.get(path, {}))
+        if path == "host":
+            return eng.run_host(_params(), batches, **kw)
+        return eng.run(_params(), batches, **kw)
+
+    f0, h0 = go(None)
+    f1, h1 = go(Topology.full(WORKERS))
+    np.testing.assert_array_equal(np.asarray(f0["w"]), np.asarray(f1["w"]))
+    assert h0 == h1
+
+
+def test_groups_topology_unifies_inner_block_mean():
+    """Topology.blocks(M, g) IS the ``inner_groups`` block mean as a
+    block-diagonal W: each all-scope event equals ``average_inner`` on
+    the worker tree (the engine lowers it to the same fused group-mean
+    kernel), and applying the explicit block-diagonal matrix lands on
+    the same rows (matmul roundoff)."""
+    t = Topology.blocks(WORKERS, 2)
+    batches = _batches()
+    kw = dict(num_workers=WORKERS, seed=3, record_every=1)
+    eng = PhaseEngine(_loss_fn, SGD(lr=0.05),
+                      AveragingSchedule("periodic", STEPS), topology=t)
+    # run up to the single event, then take the event step from the
+    # same checkpointed state twice: once with the groups topology
+    # (periodic fires at STEPS) and once with no event at all
+    _, _, st = eng.run(_params(), batches[:STEPS - 1], return_state=True,
+                       **kw)
+    # run_phase donates its state buffers — copy per replay
+    snap = lambda s: jax.tree.map(jnp.array, s)
+    f, h, st2 = eng.run(None, batches[STEPS - 1:], state=snap(st),
+                        return_state=True, **kw)
+    assert h["averages"] == 1
+    # post-event: rows equal WITHIN each contiguous group, groups differ
+    wp = np.asarray(st2.worker_params["w"])
+    half = WORKERS // 2
+    for g in range(2):
+        grp = wp[g * half:(g + 1) * half]
+        np.testing.assert_array_equal(grp, np.broadcast_to(grp[:1],
+                                                           grp.shape))
+    assert not (wp[0] == wp[half]).all()
+    # and it matches average_inner of the post-update pre-event workers
+    # (an oneshot run of the same step from the same state never
+    # averages, exposing them)
+    eng_one = PhaseEngine(_loss_fn, SGD(lr=0.05),
+                          AveragingSchedule("oneshot"))
+    _, _, st_no = eng_one.run(None, batches[STEPS - 1:], state=snap(st),
+                              return_state=True, **kw)
+    want = average_inner(st_no.worker_params, 2)["w"]
+    np.testing.assert_array_equal(wp, np.asarray(want))
+    # operator-level unification: W @ x == average_inner (roundoff)
+    rng = np.random.default_rng(4)
+    raw = {"w": jnp.asarray(rng.standard_normal((WORKERS, DIM)),
+                            jnp.float32)}
+    blocked = average_inner(raw, 2)["w"]
+    mixed = mix_tree(raw, t.mixing_matrix())["w"]
+    np.testing.assert_allclose(np.asarray(blocked), np.asarray(mixed),
+                               rtol=1e-6, atol=1e-7)
+
+
+# --------------------------------------------------------------------------
+# engine: sparse topologies agree across all four paths
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["ring", "gossip_pairs", "disconnected"])
+@pytest.mark.parametrize("sched", ["periodic", "minibatch",
+                                   "adaptive_threshold"])
+def test_mix_paths_agree(kind, sched):
+    """flat-native / PR 2 flat / tree / host / indexed replay identical
+    event streams and land on the same mixed params for sparse
+    topologies (the plane paths bitwise, tree/host to f32 roundoff)."""
+    topo = Topology.build(kind, WORKERS)
+    batches = _batches()
+    X, y = _convex_problem()
+    rng = np.random.default_rng(1)
+    idx = rng.integers(0, SAMPLES, (STEPS, WORKERS, 8))
+    kw = dict(num_workers=WORKERS, seed=3, record_every=1)
+    mk = lambda **e: PhaseEngine(_loss_fn, SGD(lr=0.05), SCHEDULES[sched],
+                                 topology=topo, **e)
+    f_nat, h_nat = mk().run(_params(), batches, **kw)
+    f_idx, h_idx = mk().run(
+        _params(), DeviceDataset({"x": X, "y": y}, WORKERS, indices=idx),
+        **kw)
+    f_pr2, h_pr2 = mk(fused_opt=False).run(_params(), batches, **kw)
+    f_tree, h_tree = mk(flat=False).run(_params(), batches, **kw)
+    f_host, h_host = mk().run_host(_params(), batches, **kw)
+
+    np.testing.assert_array_equal(np.asarray(f_nat["w"]),
+                                  np.asarray(f_idx["w"]))
+    assert h_nat == h_idx
+    for f, h in ((f_pr2, h_pr2), (f_tree, h_tree), (f_host, h_host)):
+        assert h_nat["averages"] == h["averages"] > 0
+        assert [t for t, _ in h_nat["dispersion"]] == \
+            [t for t, _ in h["dispersion"]]
+        np.testing.assert_allclose(np.asarray(f_nat["w"]),
+                                   np.asarray(f["w"]),
+                                   rtol=1e-6, atol=1e-7)
+    if kind == "disconnected":
+        # the no-communication endpoint: events fire but mix nothing —
+        # identical to oneshot worker trajectories
+        f_one, _ = PhaseEngine(_loss_fn, SGD(lr=0.05),
+                               AveragingSchedule("oneshot")).run(
+            _params(), batches, **kw)
+        np.testing.assert_array_equal(np.asarray(f_nat["w"]),
+                                      np.asarray(f_one["w"]))
+
+
+def test_gossip_decisions_invariant_to_phase_blocking():
+    """The matching stream is a pure function of (dec_key, step), so
+    phase blocking stays a pure perf knob under gossip mixing too."""
+    topo = Topology.gossip_pairs(WORKERS)
+    batches = _batches()
+    eng = PhaseEngine(_loss_fn, SGD(lr=0.05),
+                      AveragingSchedule("periodic", 4), topology=topo)
+    kw = dict(num_workers=WORKERS, seed=0, record_every=1)
+    ref, h_ref = eng.run(_params(), batches, phase_len=8, **kw)
+    for block in (1, 7, 32):
+        got, h_got = eng.run(_params(), batches, phase_len=block, **kw)
+        np.testing.assert_array_equal(np.asarray(ref["w"]),
+                                      np.asarray(got["w"]))
+        assert h_ref == h_got
+
+
+def test_gossip_checkpoint_resume_bit_identical(tmp_path):
+    """Resume replays the remaining gossip matchings exactly: they are
+    derived from the checkpointed (dec_key, step), no extra state."""
+    topo = Topology.gossip_pairs(WORKERS)
+    batches = _batches(seed=7)
+    mk = lambda: PhaseEngine(_loss_fn, Momentum(lr=0.05, mu=0.9),
+                             AveragingSchedule("periodic", 4),
+                             topology=topo)
+    kw = dict(num_workers=WORKERS, record_every=8)
+    f_full, h_full = mk().run(_params(), batches, seed=7, **kw)
+    cut = 18  # mid-phase AND between events
+    _, h1, st = mk().run(_params(), batches[:cut], seed=7,
+                         return_state=True, **kw)
+    path = os.path.join(tmp_path, "ck")
+    save_engine_state(path, st)
+    loaded, at = load_engine_state(path, mk().init(_params(), WORKERS, 7))
+    assert at == cut
+    f_res, h2 = mk().run(None, batches[cut:], state=loaded, **kw)
+    np.testing.assert_array_equal(np.asarray(f_full["w"]),
+                                  np.asarray(f_res["w"]))
+    assert h_full["dispersion"] == h1["dispersion"] + h2["dispersion"]
+    assert h_full["averages"] == h1["averages"] + h2["averages"] > 0
+
+
+# --------------------------------------------------------------------------
+# eager validation: engine + train.py
+# --------------------------------------------------------------------------
+
+def test_engine_rejects_mismatched_topology_eagerly():
+    eng = PhaseEngine(_loss_fn, SGD(lr=0.05),
+                      AveragingSchedule("periodic", 4),
+                      topology=Topology.ring(6))
+    with pytest.raises(ValueError, match="built for 6 workers"):
+        eng.init(_params(), WORKERS)
+    with pytest.raises(ValueError, match="built for 6 workers"):
+        eng.run(_params(), _batches(), num_workers=WORKERS)
+    with pytest.raises(ValueError, match="built for 6 workers"):
+        eng.run_host(_params(), _batches(), num_workers=WORKERS)
+
+
+def test_engine_rejects_outer_optimizer_with_partial_mixing():
+    eng = PhaseEngine(_loss_fn, SGD(lr=0.05),
+                      AveragingSchedule("periodic", 4),
+                      outer=OuterOptimizer(lr=0.9, momentum=0.5),
+                      topology=Topology.ring(WORKERS))
+    with pytest.raises(ValueError, match="consensus mean"):
+        eng.init(_params(), WORKERS)
+    # full topology keeps the consensus mean: outer is fine
+    PhaseEngine(_loss_fn, SGD(lr=0.05), AveragingSchedule("periodic", 4),
+                outer=OuterOptimizer(lr=0.9, momentum=0.5),
+                topology=Topology.full(WORKERS)).init(_params(), WORKERS)
+
+
+class TestTrainCliTopologyValidation:
+    """train.py rejects invalid topology/worker-count combinations at
+    parse time (argparse error, exit code 2) with the builders'
+    actionable messages — mirroring the schedule-arg convention."""
+
+    def _error(self, argv):
+        from repro.launch.train import main
+        with pytest.raises(SystemExit) as e:
+            main(argv)
+        assert e.value.code == 2
+
+    def test_ring_needs_three_workers(self):
+        self._error(["--topology", "ring", "--workers", "2"])
+
+    def test_torus_needs_composite_workers(self):
+        self._error(["--topology", "torus", "--workers", "7"])
+
+    def test_hypercube_needs_power_of_two(self):
+        self._error(["--topology", "hypercube", "--workers", "6"])
+
+    def test_gossip_needs_even_workers(self):
+        self._error(["--topology", "gossip_pairs", "--workers", "5"])
+
+    def test_groups_must_divide_workers(self):
+        self._error(["--topology", "groups", "--workers", "8",
+                     "--topology-groups", "3"])
+
+    def test_outer_optimizer_needs_full_topology(self):
+        self._error(["--topology", "ring", "--workers", "4",
+                     "--outer-momentum", "0.5"])

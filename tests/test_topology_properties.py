@@ -1,0 +1,79 @@
+"""Property-based (hypothesis) tests for the topology builders.
+
+``hypothesis`` is an optional dev dependency (requirements-dev.txt);
+when it is absent this module skips itself and the deterministic sweeps
+in tests/test_topology.py cover the same invariants.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+import jax
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.topology import Topology, gossip_matrix
+
+
+def _valid_m(kind, m):
+    try:
+        Topology.build(kind, m, groups=2)
+        return True
+    except ValueError:
+        return False
+
+
+kinds = st.sampled_from(["full", "ring", "torus", "hypercube", "groups",
+                         "gossip_pairs", "disconnected"])
+
+
+@settings(max_examples=40, deadline=None)
+@given(kind=kinds, m=st.integers(2, 40))
+def test_every_builder_is_symmetric_doubly_stochastic(kind, m):
+    if not _valid_m(kind, m):
+        return  # the builder rejects this (kind, M) combination eagerly
+    t = Topology.build(kind, m, groups=2)
+    W = t.expected_matrix()
+    np.testing.assert_allclose(W, W.T, atol=1e-12)
+    np.testing.assert_allclose(W.sum(1), np.ones(m), atol=1e-12)
+    assert (W >= -1e-12).all()
+    # declared gap == 1 - SLEM of the matrix
+    ev = np.linalg.eigvalsh(W)
+    slem = min(1.0, max(abs(ev[0]), ev[-2], 0.0))
+    np.testing.assert_allclose(t.spectral_gap, 1.0 - slem, atol=1e-9)
+    assert 0.0 <= t.spectral_gap <= 1.0
+
+
+@settings(max_examples=25, deadline=None)
+@given(kind=st.sampled_from(["ring", "torus", "hypercube"]),
+       m=st.integers(3, 32), seed=st.integers(0, 1000))
+def test_mix_contracts_deviation_by_slem(kind, m, seed):
+    """||W x_perp|| <= slem * ||x_perp||: one event contracts the Eq. 4
+    dispersion by at most slem² (the theory hook the gap feeds)."""
+    if not _valid_m(kind, m):
+        return
+    t = Topology.build(kind, m)
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((m, 5))
+    xp = x - x.mean(0)  # consensus-orthogonal component
+    out = t.expected_matrix() @ xp
+    assert np.linalg.norm(out) <= (1.0 - t.spectral_gap) \
+        * np.linalg.norm(xp) * (1 + 1e-9)
+
+
+@settings(max_examples=20, deadline=None)
+@given(m=st.integers(1, 16).map(lambda k: 2 * k),
+       step=st.integers(1, 10_000), seed=st.integers(0, 1000))
+def test_gossip_matrix_is_a_deterministic_pair_matching(m, step, seed):
+    key = jax.random.PRNGKey(seed)
+    W = np.asarray(gossip_matrix(key, step, m), np.float64)
+    # symmetric doubly-stochastic projection: a perfect matching of
+    # pair means — diagonal exactly 1/2, one off-diagonal 1/2 per row
+    np.testing.assert_array_equal(W, W.T)
+    np.testing.assert_allclose(W.sum(1), np.ones(m), atol=1e-6)
+    np.testing.assert_array_equal(np.diag(W), np.full(m, 0.5))
+    assert ((np.abs(W) > 0).sum(1) == 2).all()
+    np.testing.assert_allclose(W @ W, W, atol=1e-6)
+    # pure function of (key, step): bitwise replay
+    np.testing.assert_array_equal(W, np.asarray(gossip_matrix(key, step,
+                                                              m)))
