@@ -51,6 +51,18 @@ budget, recording final loss + dispersion envelope vs spectral gap vs
 comm volume — and the ``full``-topology run is checked bit-identical
 to the plain mean path (``full_topology_bitexact``, gated like the
 sharded-gather check; the ``--tiny`` smoke keeps full+ring+gossip).
+A ``compressed`` row (``repro.core.compress``) runs the wire-precision
+axis at matched BYTE budgets: int8 + error feedback at the event period
+whose realized bytes-on-the-wire fit within 25% of full-f32 periodic-8's
+(per ``repro.topology.comm_bytes``), recording final losses and bytes —
+plus a ``bf16`` arm at the same period as the baseline (half the
+bytes for free). The ``f32`` wire format must lower to the
+uncompressed path BIT-exactly (params + full history) — recorded as
+``compressed_matches_f32`` and gated like ``full_topology_bitexact``.
+Topology-sweep rows carry a ``bytes_per_worker`` column pricing their
+realized events at every wire format, so matched-budget comparisons
+read in bytes, not messages.
+
 Emits JSON via benchmarks/common.py
 (results/bench_engine.json). ``--tiny`` runs CI-smoke shapes (no host
 baseline; pass ``--save`` to still write JSON for the CI artifact).
@@ -238,7 +250,7 @@ def bench_topology(arrays, idx, workers, steps, tiny: bool = False) -> dict:
     ``Topology.full`` must reproduce the plain mean path EXACTLY
     (params + full history) — recorded as ``full_topology_bitexact``
     and gated in CI like the sharded-gather check."""
-    from repro.topology import Topology
+    from repro.topology import Topology, comm_bytes
     Xn, yn = np.asarray(arrays["x"]), np.asarray(arrays["y"])
 
     def full_loss(f):
@@ -267,6 +279,8 @@ def bench_topology(arrays, idx, workers, steps, tiny: bool = False) -> dict:
     if not tiny:
         kinds += ["torus", "hypercube", "disconnected"]
 
+    dim = Xn.shape[1]
+
     def row_of(topo, period, loss, hist):
         tail = [v for t, v in hist["disp_trace"] if t > steps * 3 // 4]
         return {
@@ -276,6 +290,12 @@ def bench_topology(arrays, idx, workers, steps, tiny: bool = False) -> dict:
             "comm_degree": topo.comm_degree, "period": period,
             "events": hist["averages"],
             "comm_per_worker": hist["averages"] * topo.comm_degree,
+            # the realized events priced at each wire format
+            # (repro.topology.comm_bytes): matched-budget comparisons
+            # in bytes, the currency the adaptive_bytes schedule spends
+            "bytes_per_worker": {
+                w: comm_bytes(topo, hist["averages"], dim, w)
+                for w in ("f32", "bf16", "int8")},
             "final_loss": loss,
             "disp_tail_mean": float(np.mean(tail)) if tail else 0.0,
         }
@@ -315,6 +335,99 @@ def bench_topology(arrays, idx, workers, steps, tiny: bool = False) -> dict:
     return {"full_topology_bitexact": bitexact,
             "baseline_period": base_period,
             "budget_msgs_per_worker_step": budget, "rows": rows}
+
+
+def bench_compressed(arrays, idx, workers, steps) -> dict:
+    """Wire-precision sweep at matched BYTE budgets — the paper's
+    communication question in the currency production actually pays:
+    can int8 rows + error feedback reach full-f32 periodic-8's final
+    loss at <= 25% of the bytes-on-the-wire?
+
+    Baseline: uncompressed periodic-8 full averaging. The int8 arm
+    runs at the smallest event period whose realized wire bytes
+    (``repro.topology.comm_bytes`` — events x (M-1) messages, each one
+    encoded row of ``wire_row_bytes``) fit the 25% budget; int8 rows
+    cost ~26.6% of f32 rows at these widths, so a slightly longer
+    period buys the rest. A ``bf16`` arm rides the baseline period
+    (50% of the bytes with no shared randomness). All arms run on
+    identical sample draws.
+
+    Also verifies the axis's bit-identity anchor: an engine with
+    ``Compression("f32")`` must reproduce the uncompressed path
+    EXACTLY (params + full history) — recorded as
+    ``compressed_matches_f32`` and gated in CI like
+    ``full_topology_bitexact``."""
+    from repro.core import Compression
+    from repro.topology import Topology, comm_bytes
+    Xn, yn = np.asarray(arrays["x"]), np.asarray(arrays["y"])
+    dim = Xn.shape[1]
+    topo = Topology.full(workers)
+
+    def full_loss(f):
+        r = Xn @ np.asarray(f["w"]) - yn
+        return 0.5 * float(np.mean(r * r))
+
+    def run(period, comp):
+        eng = PhaseEngine(ls_mean_loss, Momentum(lr=0.01, mu=0.9),
+                          AveragingSchedule("periodic", period),
+                          compression=comp)
+        f, h = eng.run({"w": jnp.zeros(dim)},
+                       DeviceDataset(arrays, workers, indices=idx),
+                       num_workers=workers, seed=7, record_every=1)
+        return f, full_loss(f), h
+
+    base_period = 8
+    f_plain, loss_f32, h_plain = run(base_period, None)
+    f_id, loss_id, h_id = run(base_period, Compression("f32"))
+    matches = bool(
+        (np.asarray(f_plain["w"]) == np.asarray(f_id["w"])).all()
+        and h_plain == h_id)
+
+    bytes_f32 = comm_bytes(topo, h_plain["averages"], dim, "f32")
+    budget = bytes_f32 // 4  # the 25%-of-the-bytes acceptance budget
+
+    # smallest int8 period whose expected events fit the byte budget:
+    # more frequent averaging is strictly better, so spend it all
+    period_i8 = base_period
+    while comm_bytes(topo, steps // period_i8, dim, "int8") > budget:
+        period_i8 += 1
+    _, loss_i8, h_i8 = run(period_i8, Compression("int8"))
+    bytes_i8 = comm_bytes(topo, h_i8["averages"], dim, "int8")
+
+    _, loss_bf16, h_bf16 = run(base_period, Compression("bf16"))
+    bytes_bf16 = comm_bytes(topo, h_bf16["averages"], dim, "bf16")
+
+    row = {
+        "workload": "compressed", "workers": workers, "steps": steps,
+        "f32_period": base_period, "f32_events": h_plain["averages"],
+        "f32_bytes_per_worker": bytes_f32, "f32_final_loss": loss_f32,
+        "bf16_period": base_period, "bf16_events": h_bf16["averages"],
+        "bf16_bytes_per_worker": bytes_bf16,
+        "bf16_final_loss": loss_bf16,
+        "int8_period": period_i8, "int8_events": h_i8["averages"],
+        "int8_bytes_per_worker": bytes_i8, "int8_final_loss": loss_i8,
+        "int8_bytes_fraction": bytes_i8 / bytes_f32,
+        # the acceptance claim: full-f32 periodic-8's final loss (3%
+        # slack — the convex objective's step-to-step noise band) at
+        # <= 25% of the bytes on the wire
+        "int8_reaches_f32": bool(loss_i8 <= loss_f32 * 1.03
+                                 and bytes_i8 * 4 <= bytes_f32),
+        "compressed_matches_f32": matches,
+    }
+    emit("engine_compressed_vs_f32", 0.0 if matches else 1.0,
+         f"compressed_matches_f32={matches};"
+         f"f32_loss={loss_f32:.5f}@{bytes_f32}B;"
+         f"int8_loss={loss_i8:.5f}@{bytes_i8}B"
+         f"({row['int8_bytes_fraction']:.0%});"
+         f"int8_reaches_f32={row['int8_reaches_f32']}")
+    if not matches:
+        # same CI contract as full_topology_bitexact: a regression in
+        # the f32-wire bit-identity must fail the PR, not just flip a
+        # field in the JSON artifact
+        raise SystemExit(
+            "Compression('f32') engine run is NOT bit-identical to the "
+            "uncompressed path")
+    return row
 
 
 def check_sharded_bitexact(loss_fn, params, arrays, idx, workers,
@@ -497,6 +610,12 @@ def run(tiny: bool = False, workers_override: int | None = None,
                                     steps, tiny=tiny)
     results.extend(topology_sweep["rows"])
 
+    rng = np.random.default_rng(4)
+    xidx = rng.integers(0, samples, size=(steps, m_adapt, 8))
+    compressed_row = bench_compressed({"x": Xj, "y": yj}, xidx, m_adapt,
+                                      steps)
+    results.append(compressed_row)
+
     sharder = bench_sharder(max(worker_counts), steps)
     emit("sharder_replacement", sharder["sharder_block_us"],
          f"loop_us={sharder['sharder_loop_us']:.0f};"
@@ -542,6 +661,7 @@ def run(tiny: bool = False, workers_override: int | None = None,
             "sharded_gather_bitexact": sharded_bitexact,
             "adaptive": adaptive_row,
             "topology": topology_sweep,
+            "compressed": compressed_row,
             "rows": results, "sharder": sharder})
     return results
 

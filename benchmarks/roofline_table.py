@@ -100,7 +100,8 @@ def avg_disp_roofline(m: int, p: int, *, groups: int = 1,
 
 
 def opt_step_roofline(m: int, p: int, *, kind: str = "momentum",
-                      mode: str = "mean", hw: HW = HW()) -> dict:
+                      mode: str = "mean", wire: str = "f32",
+                      hw: HW = HW()) -> dict:
     """Bytes / FLOPs of ONE fused opt_step pass (repro.kernels.opt_step):
     local optimizer update on the (M, P) plane + S state planes, plus
     the worker mean + Eq. 4 dispersion in EVERY mode (the always-on
@@ -121,23 +122,43 @@ def opt_step_roofline(m: int, p: int, *, kind: str = "momentum",
     and one M·M·4 B read of W — negligible traffic against the plane
     sweep (M is 4–64), so the mix stays memory-bound on the SAME
     single pass: the topology axis is free in bytes, paid only in
-    (cheap) MXU flops."""
+    (cheap) MXU flops.
+
+    ``wire`` prices the event's BYTES ON THE WIRE (what a multi-host
+    deployment ships between chips — M encoded rows per event,
+    ``repro.core.compress.wire_row_bytes``) at that format. The
+    compressed event's encode/decode/error-feedback adds ~6 FLOPs +
+    one extra residual read+write sweep per element, but the wire
+    payload shrinks by WIRE_BITS/32 — int8 moves ~4x fewer bytes over
+    the links for an extra memory-bound plane sweep, which is exactly
+    the trade a collective-bound step wants."""
+    from repro.core.compress import wire_row_bytes
     s = {"sgd": 0, "momentum": 1, "adamw": 2}[kind]
     upd_f = {"sgd": 2, "momentum": 4, "adamw": 12}[kind]
     mix = mode == "mix"
+    comp = wire != "f32"
     elems = m * p
-    read_b = 4 * (elems * (2 + s) + (m * m if mix else 0))
-    write_b = 4 * elems * (1 + s)
+    # compressed events read + write the (M, P) error-feedback residual
+    # plane alongside the param plane
+    read_b = 4 * (elems * (2 + s + (1 if comp else 0))
+                  + (m * m if mix else 0))
+    write_b = 4 * elems * (1 + s + (1 if comp else 0))
+    # encode (scale + round) + decode + residual update: ~6 flops/elem
     flops = (upd_f * elems + 4 * elems + 2 * p
-             + (2 * m * elems if mix else 0))
+             + (2 * m * elems if mix else 0)
+             + (6 * elems if comp else 0))
     bytes_total = read_b + write_b
+    wire_b = m * wire_row_bytes(p, wire)
     return {
-        "kernel": f"opt_step[{kind},{mode}]",
-        "m": m, "p": p, "state_planes": s,
+        "kernel": f"opt_step[{kind},{mode}"
+                  + (f",{wire}]" if comp else "]"),
+        "m": m, "p": p, "state_planes": s, "wire": wire,
         "flops": flops, "bytes": bytes_total,
         "intensity_flop_per_byte": flops / bytes_total,
         "compute_s": flops / hw.peak_flops,
         "memory_s": bytes_total / hw.hbm_bw,
+        "wire_bytes_per_event": wire_b,
+        "wire_reduction_vs_f32": (m * wire_row_bytes(p, "f32")) / wire_b,
         "bound": "memory",  # intensity << machine balance even at M=64
         "unfused_passes": 3 if mode != "none" else 2,
         "fused_passes": 1,
@@ -149,21 +170,27 @@ AVG_DISP_HDR = ("| kernel | M | P | groups | FLOPs | bytes | F/B | "
 AVG_DISP_SEP = "|" + "---|" * 9
 
 OPT_STEP_HDR = ("| kernel | M | P | S | FLOPs | bytes | F/B | memory s | "
-                "passes (unfused -> fused) |")
-OPT_STEP_SEP = "|" + "---|" * 9
+                "wire B/event | wire vs f32 | passes (unfused -> fused) |")
+OPT_STEP_SEP = "|" + "---|" * 11
 
 
 def render_opt_step(cases=(("sgd", "none"), ("momentum", "none"),
                            ("momentum", "mean"), ("momentum", "mix"),
+                           ("momentum", "mean", "int8"),
+                           ("momentum", "mix", "int8"),
+                           ("momentum", "mix", "one_bit"),
                            ("adamw", "mean")),
                     m: int = 16, p: int = 1 << 20) -> str:
     out = [OPT_STEP_HDR, OPT_STEP_SEP]
-    for kind, mode in cases:
-        r = opt_step_roofline(m, p, kind=kind, mode=mode)
+    for case in cases:
+        kind, mode, wire = (*case, "f32")[:3]
+        r = opt_step_roofline(m, p, kind=kind, mode=mode, wire=wire)
         out.append(
             f"| {r['kernel']} | {m} | {p} | {r['state_planes']} | "
             f"{r['flops']:.2e} | {r['bytes']:.2e} | "
             f"{r['intensity_flop_per_byte']:.2f} | {r['memory_s']:.2e} | "
+            f"{r['wire_bytes_per_event']:.2e} | "
+            f"{r['wire_reduction_vs_f32']:.2f}x | "
             f"{r['unfused_passes']} -> {r['fused_passes']} |")
     return "\n".join(out)
 

@@ -61,8 +61,13 @@ def load_checkpoint(path: str, like_tree):
 #:   1 — EngineState with the SchedState carry (PR 4); version field
 #:       not yet written, so v0-vs-v1 was sniffed by leaf count
 #:   2 — same leaf layout as v1, with the version recorded explicitly
-#:       in the checkpoint metadata (this build writes v2)
-ENGINE_STATE_VERSION = 2
+#:       in the checkpoint metadata
+#:   3 — EngineState with the error-feedback residual plane
+#:       (``resid`` — compressed communication, PR 6). Written only
+#:       when the state actually carries residual leaves; uncompressed
+#:       runs keep writing the v2 (or v0) layout, so their checkpoints
+#:       stay loadable by older builds
+ENGINE_STATE_VERSION = 3
 _VERSION_KEY = "engine_state_version"
 
 
@@ -79,23 +84,47 @@ def save_engine_state(path: str, state, *, extra: dict | None = None):
     dispatch on the declared layout instead of sniffing leaf counts."""
     state = jax.device_get(state)
     extra = dict(extra or {})
-    # the version describes the LAYOUT: a state without SchedState
-    # leaves (sched=()) is exactly the v0 layout, whoever writes it
-    extra[_VERSION_KEY] = (0 if getattr(state, "sched", ()) == ()
-                           else ENGINE_STATE_VERSION)
+    # the version describes the LAYOUT the state actually has: no
+    # SchedState leaves (sched=()) is exactly the v0 layout, no
+    # residual leaves (resid=()) the v2 one, whoever writes it
+    if _absent(getattr(state, "sched", ())):
+        extra[_VERSION_KEY] = 0
+    elif _absent(getattr(state, "resid", ())):
+        extra[_VERSION_KEY] = 2
+    else:
+        extra[_VERSION_KEY] = ENGINE_STATE_VERSION
     save_checkpoint(path, state, step=int(state.step), extra=extra)
 
 
+def _absent(field) -> bool:
+    """True when an optional EngineState field is the empty-tuple
+    sentinel (``==`` would broadcast against array-valued fields)."""
+    return isinstance(field, tuple) and len(field) == 0
+
+
 def _load_v0(path: str, like_state):
-    """A v0 state has no ``sched`` leaves: load into the bare layout
-    and take the SchedState fresh from ``like_state`` (all-zero
-    bookkeeping — exactly where a run of a pre-SchedState build
-    stood)."""
-    if getattr(like_state, "sched", ()) == ():
+    """A v0 state has neither ``sched`` nor ``resid`` leaves: load into
+    the bare layout and take both fresh from ``like_state`` (all-zero
+    bookkeeping / all-zero residuals — exactly where a run of a
+    pre-SchedState build stood)."""
+    if _absent(getattr(like_state, "sched", ())) and \
+            _absent(getattr(like_state, "resid", ())):
         return load_checkpoint(path, like_state)
-    bare = like_state._replace(sched=())
+    bare = like_state._replace(sched=(), resid=())
     state, step = load_checkpoint(path, bare)
-    return state._replace(sched=like_state.sched), step
+    return state._replace(sched=like_state.sched,
+                          resid=like_state.resid), step
+
+
+def _load_pre_resid(path: str, like_state):
+    """v1/v2 states carry SchedState but no residual plane: residuals
+    start fresh (zero) from ``like_state`` — error feedback begins
+    accumulating at the first post-resume event."""
+    if _absent(getattr(like_state, "resid", ())):
+        return load_checkpoint(path, like_state)
+    bare = like_state._replace(resid=())
+    state, step = load_checkpoint(path, bare)
+    return state._replace(resid=like_state.resid), step
 
 
 def load_engine_state(path: str, like_state):
@@ -104,10 +133,12 @@ def load_engine_state(path: str, like_state):
     Returns (state, step).
 
     The checkpoint's declared ``engine_state_version`` picks the
-    layout: v1/v2 carry the SchedState leaves, v0 predates them (they
-    are taken fresh from ``like_state``). Checkpoints from builds that
-    did not yet write the version field load too — the v0-vs-v1
-    distinction falls back to the historical leaf-count sniff."""
+    layout: v3 carries the error-feedback residual plane, v1/v2 carry
+    the SchedState leaves but no residuals (they start fresh at zero),
+    v0 predates both (SchedState AND residuals come fresh from
+    ``like_state``). Checkpoints from builds that did not yet write
+    the version field load too — the v0-vs-v1 distinction falls back
+    to the historical leaf-count sniff."""
     with open(path + ".json") as f:
         meta = json.load(f)
     version = (meta.get("extra") or {}).get(_VERSION_KEY)
@@ -126,8 +157,16 @@ def load_engine_state(path: str, like_state):
                 "wrote it")
         if version == 0:
             return _load_v0(path, like_state)
+        if version < ENGINE_STATE_VERSION:
+            return _load_pre_resid(path, like_state)
+        if _absent(getattr(like_state, "resid", ())):
+            raise ValueError(
+                f"checkpoint {path!r} carries an error-feedback "
+                "residual plane (engine-state v3) but the target "
+                "engine has no active compression — init the engine "
+                "with the run's Compression before loading")
         return load_checkpoint(path, like_state)
     try:
-        return load_checkpoint(path, like_state)
+        return _load_pre_resid(path, like_state)
     except AssertionError:
         return _load_v0(path, like_state)

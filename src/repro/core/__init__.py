@@ -8,6 +8,11 @@ from repro.core.averaging import (  # noqa: F401
     average_inner,
     worker_dispersion,
 )
+from repro.core.compress import (  # noqa: F401
+    WIRE_FORMATS,
+    Compression,
+    wire_row_bytes,
+)
 from repro.core.engine import (EngineState, PhaseEngine,  # noqa: F401
                                make_plane_step, make_worker_step, tree_stack)
 from repro.core.flat import FlatOptSpec, FlatSpec  # noqa: F401

@@ -17,6 +17,14 @@ A *schedule* decides WHEN the M workers' models are averaged:
                    measured dispersion envelope — high-dispersion
                    stretches get communication ahead of uniform pacing,
                    quiet stretches save it
+  - adaptive_bytes : the same dispersion-paced accrual, but the budget
+                   and the credit are BYTES on the wire, not events:
+                   each event costs ``comm_bytes(topology, 1, P, wire)``
+                   (the engine passes it as ``event_cost``), so the one
+                   ``byte_budget`` knob prices timing x topology x
+                   precision in a common currency — a ring event with an
+                   int8 wire is ~100x cheaper than a full-mean f32 event
+                   and the schedule fires proportionally more often
 
 The two adaptive kinds are *stateful*: their decisions are pure
 functions of an explicit :class:`SchedState` (dispersion EMA, cumulative
@@ -54,7 +62,9 @@ class SchedState(NamedTuple):
     reset to 0 at every averaging event (so it measures dispersion built
     up *since* the last average). ``cum_disp`` is the un-reset running
     sum (the envelope's integral), ``credit`` the adaptive_budget pacing
-    credit, ``comm_spent`` the number of averaging events so far, and
+    credit (in events) or the adaptive_bytes credit (in bytes — same
+    slot, so the checkpointed leaf structure never changes),
+    ``comm_spent`` the number of averaging events so far, and
     ``since_avg`` the steps since the last event. The static schedule
     kinds update the same fields (pure bookkeeping), so every engine
     path carries one uniform state."""
@@ -78,11 +88,14 @@ class AveragingSchedule:
     disp_threshold: float = 0.0  # adaptive_threshold: EMA trip level
     disp_ema_beta: float = 0.9  # adaptive: dispersion EMA decay
     comm_budget: int = 0        # adaptive_budget: max averaging events
-    budget_horizon: int = 0     # adaptive_budget: steps the budget spans
+    budget_horizon: int = 0     # adaptive_*: steps the budget spans
+    byte_budget: int = 0        # adaptive_bytes: max bytes per worker
 
     _KINDS = ("oneshot", "minibatch", "periodic", "stochastic",
-              "hierarchical", "adaptive_threshold", "adaptive_budget")
-    _ADAPTIVE = ("adaptive_threshold", "adaptive_budget")
+              "hierarchical", "adaptive_threshold", "adaptive_budget",
+              "adaptive_bytes")
+    _ADAPTIVE = ("adaptive_threshold", "adaptive_budget",
+                 "adaptive_bytes")
 
     def __post_init__(self):
         # the engine lowers decisions to traced integer mod / bernoulli
@@ -120,6 +133,12 @@ class AveragingSchedule:
                     f"adaptive_budget cannot spend {self.comm_budget} "
                     f"events in {self.budget_horizon} steps (at most one "
                     "averaging event per step)")
+        if self.kind == "adaptive_bytes":
+            if self.byte_budget < 1 or self.budget_horizon < 1:
+                raise ValueError(
+                    "adaptive_bytes needs byte_budget >= 1 and "
+                    f"budget_horizon >= 1, got ({self.byte_budget}, "
+                    f"{self.budget_horizon})")
 
     @property
     def is_adaptive(self) -> bool:
@@ -151,6 +170,10 @@ class AveragingSchedule:
             return float("nan")
         if self.kind == "adaptive_budget":
             return self.budget_horizon / self.comm_budget
+        if self.kind == "adaptive_bytes":
+            # bytes-per-event depends on (topology, wire, P), which only
+            # the engine knows — no a-priori interval
+            return float("nan")
         raise ValueError(self.kind)
 
     def init_sched_state(self) -> SchedState:
@@ -160,7 +183,8 @@ class AveragingSchedule:
         i32 = lambda: jnp.zeros((), jnp.int32)
         return SchedState(f32(), f32(), f32(), i32(), i32())
 
-    def decision_state(self, step, sched_state: SchedState, disp, key=None):
+    def decision_state(self, step, sched_state: SchedState, disp, key=None,
+                       event_cost=None):
         """The stateful on-device decision: one pure transition
         ``(step, state, dispersion) -> (code, new state)`` shared by
         every engine path (flat-native scan, tree scan, sharded
@@ -181,9 +205,15 @@ class AveragingSchedule:
         ``comm_budget / budget_horizon`` scaled by the current EMA
         relative to the long-run mean dispersion (APA-style: spend the
         budget where the envelope is high), fires when a whole credit is
-        accumulated, and never exceeds ``comm_budget`` events. Static
-        kinds defer to :meth:`decision_code` and only update the
-        bookkeeping fields.
+        accumulated, and never exceeds ``comm_budget`` events.
+        ``adaptive_bytes`` is the same accrual with the credit
+        denominated in BYTES: it accrues ``byte_budget/budget_horizon``
+        bytes-per-step (EMA-scaled), fires when the credit covers one
+        event's ``event_cost`` (the engine passes
+        ``comm_bytes(topology, 1, P, wire)``), and never lets
+        ``(events+1) * event_cost`` exceed ``byte_budget``. Static kinds
+        defer to :meth:`decision_code` and only update the bookkeeping
+        fields.
 
         Determinism caveat: the transition is bitwise reproducible for
         a FIXED ``disp`` stream, but ``disp`` itself is a float32
@@ -213,6 +243,22 @@ class AveragingSchedule:
             fire = (credit >= 1.0) & (s.comm_spent < self.comm_budget)
             code = jnp.where(fire, 2, 0).astype(jnp.int32)
             credit = jnp.where(fire, credit - 1.0, credit)
+        elif self.kind == "adaptive_bytes":
+            if event_cost is None:
+                raise ValueError(
+                    "adaptive_bytes needs event_cost (bytes one event "
+                    "puts on the wire per worker) — the engine passes "
+                    "comm_bytes(topology, 1, P, wire)")
+            ec = jnp.asarray(event_cost, jnp.float32)
+            rate = jnp.asarray(self.byte_budget / self.budget_horizon,
+                               jnp.float32)
+            mean = cum / jnp.maximum(jnp.asarray(step, jnp.float32), 1.0)
+            w = jnp.where(mean > 0.0, ema / jnp.maximum(mean, 1e-30), 0.0)
+            credit = credit + rate * w
+            spent_after = (s.comm_spent + 1).astype(jnp.float32) * ec
+            fire = (credit >= ec) & (spent_after <= self.byte_budget)
+            code = jnp.where(fire, 2, 0).astype(jnp.int32)
+            credit = jnp.where(fire, credit - ec, credit)
         else:
             code = self.decision_code(step, key)
         avg = code > 0

@@ -82,15 +82,18 @@ from jax.sharding import PartitionSpec as P
 from repro.core.averaging import (AveragingSchedule, OuterOptimizer,
                                   SchedState, average_inner,
                                   worker_dispersion)
+from repro.core.compress import Compression, encode_decode, row_uniforms
 from repro.core.flat import FlatOptSpec, FlatSpec
 from repro.data.pipeline import DeviceDataset, Prefetcher
-from repro.kernels.avg_disp import avg_disp, avg_disp_outer, mix_disp
+from repro.kernels.avg_disp import (avg_disp, avg_disp_outer,
+                                    compressed_mix, mix_disp)
 from repro.kernels.opt_step import opt_step
 from repro.kernels.ref import (avg_disp_outer_ref, avg_disp_ref,
+                               compressed_avg_ref, compressed_mix_ref,
                                mix_disp_ref, opt_step_ref,
                                plane_average_ref, plane_update_ref,
                                round_to_codes)
-from repro.topology import MIX_KINDS, Topology, mix_tree
+from repro.topology import MIX_KINDS, Topology, comm_bytes, mix_tree
 
 
 # --------------------------------------------------------------------------
@@ -180,6 +183,8 @@ class EngineState(NamedTuple):
     dec_key: Any         # schedule-decision root key (constant)
     step: Any            # int32 scalar, steps completed
     sched: Any = ()      # SchedState (adaptive-schedule carry), or ()
+    resid: Any = ()      # (M, P) f32 error-feedback residual plane
+    #                    # (compressed communication), or ()
 
 
 @dataclass(frozen=True, eq=False)  # eq=False: hash by identity for jit
@@ -226,7 +231,17 @@ class PhaseEngine:
     random matching per event as a pure function of (dec_key, step)
     — reproducible and checkpoint/resume-safe with no extra state.
     The outer optimizer steps on the consensus mean, which partial
-    mixing never forms, so it requires ``full`` (or no) topology."""
+    mixing never forms, so it requires ``full`` (or no) topology.
+
+    ``compression`` (a :class:`repro.core.compress.Compression`) sets
+    the wire precision of every averaging/mixing event: the event
+    operator acts on the quantized image ``q`` of the post-update
+    plane, with an error-feedback residual carried as one more (M, P)
+    plane in ``EngineState.resid`` (checkpoint layout v3). ``f32`` is
+    the identity and lowers to the uncompressed paths bit-exactly; the
+    quantizing formats require params FlatSpec can embed (every engine
+    path encodes on the flat plane) and exclude the outer optimizer,
+    whose consensus step needs the exact mean."""
     loss_fn: Callable
     optimizer: Any
     schedule: AveragingSchedule
@@ -239,6 +254,7 @@ class PhaseEngine:
     shard_axes: tuple = ()
     collective: str = "psum"
     topology: Topology | None = None
+    compression: Compression | None = None
 
     @cached_property
     def worker_step(self):
@@ -271,6 +287,28 @@ class PhaseEngine:
                     f"which topology '{t.kind}' never forms (partial "
                     "mixing keeps per-worker rows) — use topology "
                     "'full', or drop the outer optimizer")
+        if self._comp() is not None and self.outer is not None:
+            raise ValueError(
+                "the outer optimizer steps on the exact consensus mean, "
+                f"which the '{self.compression.wire}' wire format never "
+                "ships — use the f32 wire, or drop the outer optimizer")
+
+    def _comp(self) -> Compression | None:
+        """The active (non-identity) compression, or None. The ``f32``
+        wire IS the existing uncompressed path — lowering it here keeps
+        that configuration bit-exact by construction."""
+        c = self.compression
+        if c is None or c.is_identity:
+            return None
+        return c
+
+    def _check_compressible(self, worker_params):
+        if self._comp() is not None and not FlatSpec.supports(worker_params):
+            raise ValueError(
+                "compressed communication encodes averaging events on "
+                "the flat (M, P) plane, but this params tree has leaves "
+                "FlatSpec cannot embed in float32 — use the f32 wire "
+                "for such trees")
 
     def _mix_topology(self) -> Topology | None:
         """The topology whose events need the generic ``W @ plane``
@@ -306,15 +344,30 @@ class PhaseEngine:
     def init(self, params, num_workers: int, seed: int = 0) -> EngineState:
         self._check_workers(num_workers)
         wp = replicate(params, num_workers)
+        self._check_compressible(wp)
         opt_state = jax.vmap(self.optimizer.init)(wp)
         outer_state = ()
         if self.outer is not None:
             avg = consensus(wp)
             outer_state = (avg, self.outer.init(avg))
+        resid = ()
+        if self._comp() is not None:
+            resid = jnp.zeros((num_workers, FlatSpec.of(wp).width),
+                              jnp.float32)
         key, dec_key = jax.random.split(jax.random.PRNGKey(seed))
         return EngineState(wp, opt_state, outer_state, key, dec_key,
                            jnp.zeros((), jnp.int32),
-                           self.schedule.init_sched_state())
+                           self.schedule.init_sched_state(), resid)
+
+    def _sched_event_cost(self, p: int, num_workers: int):
+        """The per-event bytes-per-worker cost the ``adaptive_bytes``
+        schedule spends its budget in: comm_degree messages of one
+        (P,) row at the wire precision. None for every other kind."""
+        if self.schedule.kind != "adaptive_bytes":
+            return None
+        topo = self.topology or Topology.full(num_workers)
+        wire = self.compression.wire if self.compression else "f32"
+        return float(comm_bytes(topo, 1, p, wire))
 
     # ---- fused flat averaging -------------------------------------------
     def _use_pallas(self) -> bool:
@@ -365,27 +418,78 @@ class PhaseEngine:
             return None
         return FlatOptSpec.of(spec, opt_state)
 
+    def _event_uniforms(self, spec, m, step, dec_key, row0=None):
+        """The int8 stochastic-rounding uniforms for this event's rows
+        (global rows ``row0..row0+m``; ``row0=0`` unsharded), or None
+        for the deterministic formats."""
+        comp = self._comp()
+        if comp is None or not comp.stochastic:
+            return None
+        rows = jnp.arange(m, dtype=jnp.int32)
+        if row0 is not None:
+            rows = row0 + rows
+        return row_uniforms(dec_key, step, rows, spec.width)
+
+    def _compressed_plane_event(self, spec, plane, resid, scope: str,
+                                step, dec_key, W=None):
+        """One compressed averaging/mixing event on the (M, P) plane:
+        error-feedback encode of the post-update plane, the event
+        operator (mean / group mean / ``W @``) on the decoded ``q``,
+        residual update — fused (``kernels.avg_disp.compressed_mix``)
+        on accelerators, the jnp twins on CPU. Returns
+        (plane, residual, dispersion)."""
+        comp = self._comp()
+        codes = spec.rounding_codes()
+        u = self._event_uniforms(spec, plane.shape[0], step, dec_key)
+        kw = dict(wire=comp.wire, u=u, codes=codes,
+                  error_feedback=comp.error_feedback)
+        groups = (max(self.schedule.inner_groups, 1) if scope == "inner"
+                  else self._all_groups())
+        if self._use_pallas():
+            return compressed_mix(
+                plane, resid, mode=("mix" if W is not None else
+                                    "group" if groups > 1 else "mean"),
+                groups=groups, W=W, **kw)
+        if W is not None:
+            return compressed_mix_ref(plane, resid, W, **kw)
+        return compressed_avg_ref(plane, resid, groups=groups, **kw)
+
     def _fused_step_average(self, spec, plane, gplane, planes, outer_c,
-                            scalars, scope: str, W=None):
+                            scalars, scope: str, W=None, resid=(),
+                            step=None, dec_key=None):
         """ONE fused pass: local optimizer update on the plane (+ state
         planes) and, per ``scope``, the averaging event — mean (global
         or per-group), Eq. 4 dispersion, broadcast, or (with a mixing
         topology) the ``W @ plane`` gossip mix. The all-scope with an
         outer optimizer chains the fused update into the fused
         avg+outer-momentum kernel (two passes total on those rare
-        steps)."""
+        steps). With active compression the event acts on the encoded
+        ``q`` of the post-update plane and the error-feedback
+        ``resid`` plane updates in the same pass. Returns
+        (plane, planes, outer_c, resid, disp)."""
         codes = spec.rounding_codes()
         kw = dict(kind=self.optimizer.plane_kind, codes=codes,
                   **self.optimizer.plane_hypers())
         fused = opt_step if self._use_pallas() else opt_step_ref
+        comp = self._comp()
+        if comp is not None and scope != "none":
+            u = self._event_uniforms(spec, plane.shape[0], step, dec_key)
+            groups = self._all_groups()
+            mode = ("mix" if W is not None
+                    else "group" if groups > 1 else "mean")
+            plane, planes, resid, disp = fused(
+                plane, gplane, planes, scalars, mode=mode, W=W,
+                groups=groups, wire=comp.wire, resid=resid, u=u,
+                error_feedback=comp.error_feedback, **kw)
+            return plane, planes, outer_c, resid, disp
         if scope == "none":
             plane, planes, disp = fused(plane, gplane, planes, scalars,
                                         mode="none", **kw)
-            return plane, planes, outer_c, disp
+            return plane, planes, outer_c, resid, disp
         if W is not None:
             plane, planes, disp = fused(plane, gplane, planes, scalars,
                                         mode="mix", W=W, **kw)
-            return plane, planes, outer_c, disp
+            return plane, planes, outer_c, resid, disp
         if self.outer is not None and outer_c != ():
             plane, planes, _ = fused(plane, gplane, planes, scalars,
                                      mode="none", **kw)
@@ -399,12 +503,12 @@ class PhaseEngine:
             plane, prev, vel, disp = of(
                 plane, prev, vel, lr=self.outer.lr,
                 momentum=self.outer.momentum, nesterov=self.outer.nesterov)
-            return plane, planes, (prev, vel), disp
+            return plane, planes, (prev, vel), resid, disp
         groups = self._all_groups()
         plane, planes, disp = fused(plane, gplane, planes, scalars,
                                     mode="group" if groups > 1 else "mean",
                                     groups=groups, **kw)
-        return plane, planes, outer_c, disp
+        return plane, planes, outer_c, resid, disp
 
     def _plane_avg_event(self, spec, plane, outer_c, scope: str, W=None):
         """Averaging event alone (no optimizer update) on the plane —
@@ -433,44 +537,61 @@ class PhaseEngine:
         return plane, outer_c, disp
 
     def _flat_native_step(self, spec, plane, gplane, planes, outer_c,
-                          scalars, step, sst, dec_key):
+                          scalars, step, sst, dec_key, resid=()):
         """One flat-native step: fused update(+average) for the
         every-step schedules, update-then-switched-average for the rare
         ones. The fused update always emits the Eq. 4 dispersion of the
         post-update plane, which feeds the stateful schedule decision
         (``AveragingSchedule.decision_state``) and the per-step trace.
-        Returns (plane, state planes, outer_c, sched state, dispersion,
-        decision code)."""
+        With active compression the error-feedback ``resid`` plane
+        threads through the event (untouched on non-event steps).
+        Returns (plane, state planes, outer_c, resid, sched state,
+        dispersion, decision code)."""
         sched = self.schedule
+        ec = self._sched_event_cost(spec.width, plane.shape[0])
         if sched.kind == "minibatch":
             # the all-average is unconditional — fuse it into the update
             # pass; the (static) decision still advances the sched state
-            plane, planes, outer_c, disp = self._fused_step_average(
+            plane, planes, outer_c, resid, disp = self._fused_step_average(
                 spec, plane, gplane, planes, outer_c, scalars, "all",
-                W=self._event_W(step, dec_key))
-            code, sst = sched.decision_state(step, sst, disp, dec_key)
-            return plane, planes, outer_c, sst, disp, code
-        plane, planes, outer_c, disp = self._fused_step_average(
-            spec, plane, gplane, planes, outer_c, scalars, "none")
-        code, sst = sched.decision_state(step, sst, disp, dec_key)
+                W=self._event_W(step, dec_key), resid=resid, step=step,
+                dec_key=dec_key)
+            code, sst = sched.decision_state(step, sst, disp, dec_key,
+                                             event_cost=ec)
+            return plane, planes, outer_c, resid, sst, disp, code
+        plane, planes, outer_c, resid, disp = self._fused_step_average(
+            spec, plane, gplane, planes, outer_c, scalars, "none",
+            resid=resid)
+        code, sst = sched.decision_state(step, sst, disp, dec_key,
+                                         event_cost=ec)
         if sched.kind == "oneshot":
-            return plane, planes, outer_c, sst, disp, code
+            return plane, planes, outer_c, resid, sst, disp, code
+        comp = self._comp()
 
         def none_branch(args):
-            return args[0], args[1]
+            return args[0], args[1], args[2]
 
         def inner_branch(args):
+            if comp is not None:
+                pl_, r_, _ = self._compressed_plane_event(
+                    spec, args[0], args[2], "inner", step, dec_key)
+                return pl_, args[1], r_
             return self._plane_avg_event(spec, args[0], args[1],
-                                         "inner")[:2]
+                                         "inner")[:2] + (args[2],)
 
         def all_branch(args):
+            W = self._event_W(step, dec_key)
+            if comp is not None:
+                pl_, r_, _ = self._compressed_plane_event(
+                    spec, args[0], args[2], "all", step, dec_key, W=W)
+                return pl_, args[1], r_
             return self._plane_avg_event(spec, args[0], args[1], "all",
-                                         W=self._event_W(step, dec_key))[:2]
+                                         W=W)[:2] + (args[2],)
 
-        plane, outer_c = jax.lax.switch(
+        plane, outer_c, resid = jax.lax.switch(
             code, [none_branch, inner_branch, all_branch],
-            (plane, outer_c))
-        return plane, planes, outer_c, sst, disp, code
+            (plane, outer_c, resid))
+        return plane, planes, outer_c, resid, sst, disp, code
 
     # ---- tree-path averaging (flat=False, and FlatSpec fallback) ---------
     def _apply_all_average(self, wp, outer_state, num_workers):
@@ -513,11 +634,20 @@ class PhaseEngine:
             embed)."""
         num_workers = jax.tree.leaves(state.worker_params)[0].shape[0]
         self._check_workers(num_workers)
+        self._check_compressible(state.worker_params)
         sched = self.schedule
+        comp = self._comp()
         use_flat = self.flat and FlatSpec.supports(state.worker_params)
-        spec = FlatSpec.of(state.worker_params) if use_flat else None
+        # compressed events encode on the plane even in the tree carry
+        # (pack/unpack around the event only — events are rare)
+        spec = (FlatSpec.of(state.worker_params)
+                if use_flat or comp is not None else None)
         opt_spec = self._opt_spec(spec, state.opt_state) if use_flat else None
         flat_native = opt_spec is not None
+        p_width = (spec.width if spec is not None else
+                   sum(x.size // num_workers
+                       for x in jax.tree.leaves(state.worker_params)))
+        ec = self._sched_event_cost(p_width, num_workers)
 
         if use_flat:
             carry_p = spec.pack(state.worker_params)
@@ -536,8 +666,16 @@ class PhaseEngine:
         grads_fn = (make_plane_step(self.loss_fn, spec) if flat_native
                     else None)
 
+        def comp_event(wp_c, resid, scope, step, W=None):
+            # encode -> event -> decode on the plane; tree carries pack
+            # around the (rare) event only
+            plane = wp_c if use_flat else spec.pack(wp_c)
+            plane, resid, _ = self._compressed_plane_event(
+                spec, plane, resid, scope, step, state.dec_key, W=W)
+            return (plane if use_flat else spec.unpack(plane)), resid
+
         def body(carry, xs_t):
-            wp_c, opt_c, outer_c, key, step, sst = carry
+            wp_c, opt_c, outer_c, key, step, sst, resid = carry
             step = step + 1
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, num_workers)
@@ -545,10 +683,10 @@ class PhaseEngine:
             if flat_native:
                 losses, _, gplane = grads_fn(wp_c, batch, rngs)
                 scal = self.optimizer.plane_scalars(step)
-                wp_c, opt_c, outer_c, sst, disp, code = \
+                wp_c, opt_c, outer_c, resid, sst, disp, code = \
                     self._flat_native_step(spec, wp_c, gplane, opt_c,
                                            outer_c, scal, step, sst,
-                                           state.dec_key)
+                                           state.dec_key, resid=resid)
             else:
                 wp = spec.unpack(wp_c) if use_flat else wp_c
                 wp, opt_c, losses, _ = self.worker_step(
@@ -565,35 +703,51 @@ class PhaseEngine:
                 else:
                     disp = worker_dispersion(wp_c)
                 code, sst = sched.decision_state(step, sst, disp,
-                                                 state.dec_key)
+                                                 state.dec_key,
+                                                 event_cost=ec)
                 if sched.kind == "oneshot":
                     pass
                 elif sched.kind == "minibatch":
-                    wp_c, outer_c, _ = average(
-                        wp_c, outer_c, "all",
-                        W=self._event_W(step, state.dec_key))
+                    W = self._event_W(step, state.dec_key)
+                    if comp is not None:
+                        wp_c, resid = comp_event(wp_c, resid, "all",
+                                                 step, W=W)
+                    else:
+                        wp_c, outer_c, _ = average(wp_c, outer_c, "all",
+                                                   W=W)
                 else:
                     def none_branch(args):
                         return args
 
                     def inner_branch(args):
-                        return average(*args, "inner")[:2]
+                        if comp is not None:
+                            pl_, r_ = comp_event(args[0], args[2],
+                                                 "inner", step)
+                            return pl_, args[1], r_
+                        return average(args[0], args[1],
+                                       "inner")[:2] + (args[2],)
 
                     def all_branch(args):
-                        return average(*args, "all",
-                                       W=self._event_W(step,
-                                                       state.dec_key))[:2]
+                        W = self._event_W(step, state.dec_key)
+                        if comp is not None:
+                            pl_, r_ = comp_event(args[0], args[2],
+                                                 "all", step, W=W)
+                            return pl_, args[1], r_
+                        return average(args[0], args[1], "all",
+                                       W=W)[:2] + (args[2],)
 
-                    wp_c, outer_c = jax.lax.switch(
+                    wp_c, outer_c, resid = jax.lax.switch(
                         code, [none_branch, inner_branch, all_branch],
-                        (wp_c, outer_c))
-            return ((wp_c, opt_c, outer_c, key, step, sst),
+                        (wp_c, outer_c, resid))
+            return ((wp_c, opt_c, outer_c, key, step, sst, resid),
                     (jnp.mean(losses), disp.astype(jnp.float32), code))
 
         sst0 = (state.sched if isinstance(state.sched, SchedState)
                 else sched.init_sched_state())
-        carry0 = (carry_p, carry_s, carry_o, state.key, state.step, sst0)
-        (wp_c, opt_c, outer_c, key, step, sst), (loss, disp, code) = \
+        carry0 = (carry_p, carry_s, carry_o, state.key, state.step, sst0,
+                  state.resid)
+        (wp_c, opt_c, outer_c, key, step, sst, resid), \
+            (loss, disp, code) = \
             jax.lax.scan(body, carry0, xs, unroll=self.scan_unroll)
 
         if use_flat:
@@ -606,7 +760,7 @@ class PhaseEngine:
         else:
             wp, opt_state, outer_state = wp_c, opt_c, outer_c
         new_state = EngineState(wp, opt_state, outer_state, key,
-                                state.dec_key, step, sst)
+                                state.dec_key, step, sst, resid)
         return new_state, {"loss": loss, "dispersion": disp,
                            "avg_code": code}
 
@@ -672,17 +826,59 @@ class PhaseEngine:
             return jnp.broadcast_to(upd[None], plane.shape), (upd, vel)
         return jnp.broadcast_to(glob[None], plane.shape), outer_c
 
+    def _psum_compressed_event(self, spec, plane, resid, scope: str, step,
+                               dec_key, ml: int, m_global: int, W=None):
+        """Compressed cross-shard averaging event on this shard's
+        (M_l, P) rows. Encoding is row-local (per-row scales, per-row
+        fold_in uniforms keyed by the GLOBAL row id ``i0 + arange``), so
+        each shard produces exactly the rows a single device would; the
+        error-feedback residual update ``v - q`` stays shard-local and
+        never crosses the wire. Mean events psum the per-shard sums of
+        the ENCODED rows — that psum is the bytes-on-the-wire win the
+        wire format buys. Mixing / group events all_gather q instead
+        (boundary-crossing contractions need the full encoded plane)."""
+        comp = self._comp()
+        codes = spec.rounding_codes()
+        ax = self._worker_axes()
+        rows = self._shard_index() * ml + jnp.arange(ml, dtype=jnp.int32)
+        u = (row_uniforms(dec_key, step, rows, spec.width)
+             if comp.stochastic else None)
+        q, resid = encode_decode(plane, resid, wire=comp.wire, u=u,
+                                 error_feedback=comp.error_feedback)
+        if scope == "all" and W is not None:
+            full = jax.lax.all_gather(q, ax, axis=0, tiled=True)
+            wrows = jax.lax.dynamic_slice_in_dim(
+                W, self._shard_index() * ml, ml, 0)
+            out = jnp.dot(wrows, full, preferred_element_type=jnp.float32)
+        elif scope == "inner" or (scope == "all"
+                                  and self._all_groups() > 1):
+            groups = (max(self.schedule.inner_groups, 1)
+                      if scope == "inner" else self._all_groups())
+            full = jax.lax.all_gather(q, ax, axis=0, tiled=True)
+            g = jnp.mean(
+                full.reshape(groups, m_global // groups, -1), axis=1)
+            full = jnp.repeat(g, m_global // groups, axis=0)
+            out = jax.lax.dynamic_slice_in_dim(
+                full, self._shard_index() * ml, ml, 0)
+        else:
+            glob = jax.lax.psum(jnp.sum(q, axis=0), ax) / m_global
+            out = jnp.broadcast_to(glob[None], plane.shape)
+        if codes is not None:
+            out = round_to_codes(out, codes)
+        return out, resid
+
     def _flat_native_step_psum(self, spec, plane, gplane, planes, outer_c,
                                scalars, step, sst, dec_key,
-                               m_global: int, ml: int):
+                               m_global: int, ml: int, resid=()):
         """psum-mode flat-native step: shard-local plane update (hoisted
         before the switch), then the always-on Eq. 4 dispersion — ONE
         psum of the per-shard column sums gives the global mean, one
         more psums the per-shard squared-distance sums — feeding the
         stateful schedule decision, then the cross-shard averaging
         event per the decision code. Returns (plane, state planes,
-        outer_c, sched state, dispersion, code)."""
+        outer_c, resid, sched state, dispersion, code)."""
         sched = self.schedule
+        comp = self._comp()
         ax = self._worker_axes()
         plane, planes = plane_update_ref(
             plane, gplane, planes, scalars, kind=self.optimizer.plane_kind,
@@ -690,31 +886,48 @@ class PhaseEngine:
         glob = jax.lax.psum(jnp.sum(plane, axis=0), ax) / m_global
         disp = jax.lax.psum(
             jnp.sum(jnp.square(plane - glob[None])), ax) / m_global
-        code, sst = sched.decision_state(step, sst, disp, dec_key)
+        ec = self._sched_event_cost(spec.width, m_global)
+        code, sst = sched.decision_state(step, sst, disp, dec_key,
+                                         event_cost=ec)
         if sched.kind == "oneshot":
-            return plane, planes, outer_c, sst, disp, code
+            return plane, planes, outer_c, resid, sst, disp, code
         if sched.kind == "minibatch":
-            plane, outer_c = self._psum_avg_event(
-                spec, plane, outer_c, "all", glob, ml,
-                W=self._event_W(step, dec_key))
-            return plane, planes, outer_c, sst, disp, code
+            W = self._event_W(step, dec_key)
+            if comp is not None:
+                plane, resid = self._psum_compressed_event(
+                    spec, plane, resid, "all", step, dec_key, ml,
+                    m_global, W=W)
+            else:
+                plane, outer_c = self._psum_avg_event(
+                    spec, plane, outer_c, "all", glob, ml, W=W)
+            return plane, planes, outer_c, resid, sst, disp, code
 
         def none_branch(args):
             return args
 
         def inner_branch(args):
+            if comp is not None:
+                pl_, r_ = self._psum_compressed_event(
+                    spec, args[0], args[2], "inner", step, dec_key, ml,
+                    m_global)
+                return pl_, args[1], r_
             return self._psum_avg_event(spec, args[0], args[1], "inner",
-                                        glob, ml)
+                                        glob, ml) + (args[2],)
 
         def all_branch(args):
+            W = self._event_W(step, dec_key)
+            if comp is not None:
+                pl_, r_ = self._psum_compressed_event(
+                    spec, args[0], args[2], "all", step, dec_key, ml,
+                    m_global, W=W)
+                return pl_, args[1], r_
             return self._psum_avg_event(spec, args[0], args[1], "all",
-                                        glob, ml,
-                                        W=self._event_W(step, dec_key))
+                                        glob, ml, W=W) + (args[2],)
 
-        plane, outer_c = jax.lax.switch(
+        plane, outer_c, resid = jax.lax.switch(
             code, [none_branch, inner_branch, all_branch],
-            (plane, outer_c))
-        return plane, planes, outer_c, sst, disp, code
+            (plane, outer_c, resid))
+        return plane, planes, outer_c, resid, sst, disp, code
 
     def _phase_sharded(self, state: EngineState, xs, fetch, m_global: int):
         """The phase body as run on ONE shard under shard_map.
@@ -747,6 +960,8 @@ class PhaseEngine:
         assert opt_spec is not None, \
             "sharded runs need a plane-protocol optimizer (SGD/Momentum/" \
             "AdamW) and fused_opt=True"
+        self._check_compressible(state.worker_params)
+        comp = self._comp()
         ml = jax.tree.leaves(state.worker_params)[0].shape[0]
         carry_p = spec.pack(state.worker_params)
         carry_s = opt_spec.pack(state.opt_state)
@@ -760,7 +975,7 @@ class PhaseEngine:
         exact = self.collective == "gather"
 
         def body(carry, xs_t):
-            wp_c, opt_c, outer_c, key, step, sst = carry
+            wp_c, opt_c, outer_c, key, step, sst, resid = carry
             step = step + 1
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, m_global)
@@ -774,31 +989,40 @@ class PhaseEngine:
                 batch = jax.tree.map(
                     lambda b: jax.lax.all_gather(b, ax, axis=0, tiled=True),
                     batch)
+                resid_full = (jax.lax.all_gather(resid, ax, axis=0,
+                                                 tiled=True)
+                              if comp is not None else resid)
                 losses, _, gplane = grads_fn(wp_full, batch, rngs)
-                wp_full, opt_full, outer_c, sst, disp, code = \
+                wp_full, opt_full, outer_c, resid_full, sst, disp, code = \
                     self._flat_native_step(spec, wp_full, gplane, opt_full,
                                            outer_c, scal, step, sst,
-                                           state.dec_key)
+                                           state.dec_key, resid=resid_full)
                 loss_t = jnp.mean(losses)
                 wp_c = jax.lax.dynamic_slice_in_dim(wp_full, i0, ml, 0)
                 opt_c = tuple(
                     jax.lax.dynamic_slice_in_dim(s, i0, ml, 0)
                     for s in opt_full)
+                if comp is not None:
+                    resid = jax.lax.dynamic_slice_in_dim(
+                        resid_full, i0, ml, 0)
             else:
                 rngs = jax.lax.dynamic_slice_in_dim(rngs, i0, ml, 0)
                 losses, _, gplane = grads_fn(wp_c, batch, rngs)
-                wp_c, opt_c, outer_c, sst, disp, code = \
+                wp_c, opt_c, outer_c, resid, sst, disp, code = \
                     self._flat_native_step_psum(spec, wp_c, gplane, opt_c,
                                                 outer_c, scal, step, sst,
-                                                state.dec_key, m_global, ml)
+                                                state.dec_key, m_global,
+                                                ml, resid=resid)
                 loss_t = jax.lax.psum(jnp.sum(losses), ax) / m_global
-            return ((wp_c, opt_c, outer_c, key, step, sst),
+            return ((wp_c, opt_c, outer_c, key, step, sst, resid),
                     (loss_t, disp.astype(jnp.float32), code))
 
         sst0 = (state.sched if isinstance(state.sched, SchedState)
                 else sched.init_sched_state())
-        carry0 = (carry_p, carry_s, carry_o, state.key, state.step, sst0)
-        (wp_c, opt_c, outer_c, key, step, sst), (loss, disp, code) = \
+        carry0 = (carry_p, carry_s, carry_o, state.key, state.step, sst0,
+                  state.resid)
+        (wp_c, opt_c, outer_c, key, step, sst, resid), \
+            (loss, disp, code) = \
             jax.lax.scan(body, carry0, xs, unroll=self.scan_unroll)
 
         wp = spec.unpack(wp_c)
@@ -808,7 +1032,7 @@ class PhaseEngine:
             outer_state = (spec.unpack1(outer_c[0]),
                            spec.unpack1(outer_c[1], dtypes=jnp.float32))
         new_state = EngineState(wp, opt_state, outer_state, key,
-                                state.dec_key, step, sst)
+                                state.dec_key, step, sst, resid)
         return new_state, {"loss": loss, "dispersion": disp,
                            "avg_code": code}
 
@@ -819,7 +1043,8 @@ class PhaseEngine:
             jax.tree.map(lambda _: ax, state.opt_state),
             jax.tree.map(lambda _: P(), state.outer_state),
             P(), P(), P(),
-            jax.tree.map(lambda _: P(), state.sched))
+            jax.tree.map(lambda _: P(), state.sched),
+            jax.tree.map(lambda _: ax, state.resid))
 
     def _trace_specs(self):
         return {"loss": P(), "dispersion": P(), "avg_code": P()}
@@ -1037,7 +1262,8 @@ class PhaseEngine:
 
     # ---- legacy host-driven loop (benchmark baseline / equivalence) ------
     @partial(jax.jit, static_argnums=0)
-    def _host_step(self, wp, opt_state, batch, step, rngs, sst, dec_key):
+    def _host_step(self, wp, opt_state, batch, step, rngs, sst, dec_key,
+                   ec=None):
         """One host-loop step: the vmapped local update, the always-on
         Eq. 4 dispersion (post update, pre average) and the stateful
         schedule decision in one dispatch; the host reads the decision
@@ -1045,8 +1271,21 @@ class PhaseEngine:
         wp, opt_state, losses, _ = self.worker_step(wp, opt_state, batch,
                                                     step, rngs)
         disp = worker_dispersion(wp).astype(jnp.float32)
-        code, sst = self.schedule.decision_state(step, sst, disp, dec_key)
+        code, sst = self.schedule.decision_state(step, sst, disp, dec_key,
+                                                 event_cost=ec)
         return wp, opt_state, jnp.mean(losses), disp, code, sst
+
+    @partial(jax.jit, static_argnums=(0, 5))
+    def _host_compressed_average(self, wp, resid, dec_key, step,
+                                 scope: str, W=None):
+        """Host-loop compressed averaging event: pack to the plane,
+        encode -> event -> decode with the error-feedback residual,
+        unpack. Same plane math as the fused in-scan event, so the host
+        loop stays the bitwise baseline for :meth:`run`."""
+        spec = FlatSpec.of(wp)
+        plane, resid, _ = self._compressed_plane_event(
+            spec, spec.pack(wp), resid, scope, step, dec_key, W=W)
+        return spec.unpack(plane), resid
 
     @partial(jax.jit, static_argnums=(0, 3))
     def _host_average(self, wp, outer_state, scope: str, W=None):
@@ -1077,7 +1316,10 @@ class PhaseEngine:
         state = self.init(params, num_workers, seed)
         wp, opt_state, outer_state = (state.worker_params, state.opt_state,
                                       state.outer_state)
-        key, sst = state.key, state.sched
+        key, sst, resid = state.key, state.sched, state.resid
+        p_width = sum(x.size // num_workers
+                      for x in jax.tree.leaves(wp))
+        ec = self._sched_event_cost(p_width, num_workers)
         hist = {"loss": [], "dispersion": [], "disp_trace": [],
                 "averages": 0, "eval": [], "worker_eval": []}
         step = 0
@@ -1087,13 +1329,19 @@ class PhaseEngine:
             rngs = jax.random.split(sub, num_workers)
             wp, opt_state, loss, disp, code, sst = self._host_step(
                 wp, opt_state, batch, jnp.asarray(step, jnp.int32), rngs,
-                sst, state.dec_key)
+                sst, state.dec_key, ec)
             code = int(code)
             if code:
                 W = (self._event_W(jnp.asarray(step, jnp.int32),
                                    state.dec_key) if code == 2 else None)
-                wp, outer_state = self._host_average(
-                    wp, outer_state, "inner" if code == 1 else "all", W)
+                scope = "inner" if code == 1 else "all"
+                if self._comp() is not None:
+                    wp, resid = self._host_compressed_average(
+                        wp, resid, state.dec_key,
+                        jnp.asarray(step, jnp.int32), scope, W)
+                else:
+                    wp, outer_state = self._host_average(
+                        wp, outer_state, scope, W)
                 hist["dispersion"].append((step, float(disp)))
                 hist["averages"] += 1
             if record_every and step % record_every == 0:

@@ -74,6 +74,76 @@ def _avg_disp_outer_kernel(x_ref, p_ref, v_ref, o_ref, a_ref, w_ref, d_ref,
     o_ref[...] = jnp.broadcast_to(upd[None], x.shape)
 
 
+def _round_codes(x, codes):
+    bf = x.astype(jnp.bfloat16).astype(jnp.float32)
+    f16 = x.astype(jnp.float16).astype(jnp.float32)
+    return jnp.where(codes == 1.0, bf, jnp.where(codes == 2.0, f16, x))
+
+
+def _compressed_mix_kernel(*refs, wire, mode, groups, has_u, has_codes,
+                           error_feedback, p):
+    i = 0
+    x_ref, e_ref = refs[0], refs[1]
+    i = 2
+    u_ref = refs[i] if has_u else None
+    i += int(has_u)
+    codes_ref = refs[i] if has_codes else None
+    i += int(has_codes)
+    w_ref = refs[i] if mode == "mix" else None
+    i += int(mode == "mix")
+    o_ref, r_ref, d_ref, sc_ref = refs[i], refs[i + 1], refs[i + 2], refs[i + 3]
+
+    ph, j = pl.program_id(0), pl.program_id(1)
+    x = x_ref[...]                                   # (M, block_p) f32
+    m, bp = x.shape
+    v = x + e_ref[...] if error_feedback else x
+    glob = jnp.mean(x, axis=0)
+    # pre-encode, pre-average Eq. 4 dispersion (identical both phases)
+    d_ref[0, 0] = jnp.sum(jnp.square(x - glob[None])) / m
+
+    if wire in ("int8", "one_bit"):
+        # phase 0: accumulate the per-row scale statistic across the
+        # column blocks into VMEM scratch, which persists over the
+        # sequentially-executed grid (amax for int8, abs-sum for one_bit)
+        part = (jnp.max(jnp.abs(v), axis=1, keepdims=True)
+                if wire == "int8"
+                else jnp.sum(jnp.abs(v), axis=1, keepdims=True))
+
+        @pl.when((ph == 0) & (j == 0))
+        def _init():
+            sc_ref[...] = part
+
+        @pl.when((ph == 0) & (j > 0))
+        def _acc():
+            sc_ref[...] = (jnp.maximum(sc_ref[...], part)
+                           if wire == "int8" else sc_ref[...] + part)
+
+    @pl.when(ph == 1)
+    def _emit():
+        if wire == "bf16":
+            q = v.astype(jnp.bfloat16).astype(jnp.float32)
+        elif wire == "int8":
+            amax = sc_ref[...]
+            s = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+            q = jnp.clip(jnp.floor(v / s + u_ref[...]), -127.0, 127.0) * s
+        else:  # one_bit
+            s = sc_ref[...] / p
+            q = jnp.where(v >= 0.0, s, -s)
+        if mode == "mix":
+            out = jnp.dot(w_ref[...], q,
+                          preferred_element_type=jnp.float32)
+        elif mode == "group" and groups > 1:
+            gm = jnp.mean(q.reshape(groups, m // groups, bp), axis=1)
+            out = jnp.broadcast_to(gm[:, None], (groups, m // groups, bp))
+            out = out.reshape(m, bp)
+        else:
+            out = jnp.broadcast_to(jnp.mean(q, axis=0)[None], (m, bp))
+        if has_codes:
+            out = _round_codes(out, codes_ref[...])
+        o_ref[...] = out
+        r_ref[...] = v - q if error_feedback else e_ref[...]
+
+
 def _pad_cols(x, p_pad):
     p = x.shape[-1]
     if p_pad == p:
@@ -191,3 +261,74 @@ def avg_disp_outer(plane, prev_avg, vel, *, lr: float, momentum: float,
         interpret=interpret,
     )(x, pa, ve)
     return out[:, :p], avg[0, :p], new_vel[0, :p], jnp.sum(dpart)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("wire", "mode", "groups", "error_feedback", "block_p",
+                     "interpret"))
+def compressed_mix(plane, resid, *, wire, mode="mean", groups: int = 1,
+                   W=None, u=None, codes=None, error_feedback: bool = True,
+                   block_p: int = DEFAULT_BLOCK_P,
+                   interpret: bool | None = None):
+    """Fused compressed averaging/mixing event on the (M, P) plane:
+    error-feedback encode (``v = plane + resid``, ``q = Q(v)``,
+    ``resid' = v - q`` — ``repro.core.compress`` formats ``bf16`` /
+    ``int8`` / ``one_bit``), the event operator on the decoded ``q``
+    (mode "mean" | "group" | "mix" with the doubly-stochastic (M, M)
+    ``W``), dtype-rounding ``codes``, and the pre-encode Eq. 4
+    dispersion, in one pass.
+
+    The scaled formats need a per-ROW statistic (amax / abs-mean) that
+    spans every column block, so the kernel runs a (2, nb) grid: phase 0
+    accumulates the row statistic into VMEM scratch (the grid executes
+    sequentially, so scratch persists), phase 1 quantizes, applies the
+    event and writes the plane + residual. ``u`` is the int8
+    ``row_uniforms`` plane. Returns (plane, new residual, dispersion);
+    matches ``repro.kernels.ref.compressed_avg_ref`` /
+    ``compressed_mix_ref``."""
+    assert wire in ("bf16", "int8", "one_bit"), wire
+    assert mode in ("mean", "group", "mix"), mode
+    assert (W is not None) == (mode == "mix"), (mode, W is None)
+    has_u = wire == "int8"
+    assert (u is not None) == has_u, (wire, u is None)
+    if interpret is None:
+        interpret = jax.default_backend() == "cpu"
+    m, p = plane.shape
+    assert groups >= 1 and m % groups == 0, (m, groups)
+    block_p = min(block_p, max(p, 1))
+    p_pad = -(-max(p, 1) // block_p) * block_p
+    nb = p_pad // block_p
+    has_codes = codes is not None
+
+    blk = pl.BlockSpec((m, block_p), lambda ph, i: (0, i))
+    ins = [_pad_cols(plane.astype(jnp.float32), p_pad),
+           _pad_cols(resid.astype(jnp.float32), p_pad)]
+    in_specs = [blk, blk]
+    if has_u:
+        ins.append(_pad_cols(u.astype(jnp.float32), p_pad))
+        in_specs.append(blk)
+    if has_codes:
+        ins.append(_pad_cols(jnp.asarray(codes, jnp.float32)[None], p_pad))
+        in_specs.append(pl.BlockSpec((1, block_p), lambda ph, i: (0, i)))
+    if mode == "mix":
+        assert W.shape == (m, m), (W.shape, m)
+        ins.append(W.astype(jnp.float32))
+        in_specs.append(pl.BlockSpec((m, m), lambda ph, i: (0, 0)))
+
+    out, r, dpart = pl.pallas_call(
+        functools.partial(_compressed_mix_kernel, wire=wire, mode=mode,
+                          groups=groups, has_u=has_u, has_codes=has_codes,
+                          error_feedback=error_feedback, p=p),
+        grid=(2, nb),
+        in_specs=in_specs,
+        out_specs=[blk, blk,
+                   pl.BlockSpec((1, 1), lambda ph, i: (i, 0),
+                                memory_space=pltpu.SMEM)],
+        out_shape=[jax.ShapeDtypeStruct((m, p_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((m, p_pad), jnp.float32),
+                   jax.ShapeDtypeStruct((nb, 1), jnp.float32)],
+        scratch_shapes=[pltpu.VMEM((m, 1), jnp.float32)],
+        interpret=interpret,
+    )(*ins)
+    return out[:, :p], r[:, :p], jnp.sum(dpart)

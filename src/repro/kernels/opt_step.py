@@ -44,7 +44,11 @@ def _round_codes(x, codes):
 
 
 def _opt_step_kernel(*refs, kind, mode, groups, nstate, has_codes,
-                     mu, nesterov, b1, b2, eps, weight_decay):
+                     mu, nesterov, b1, b2, eps, weight_decay,
+                     wire, error_feedback, p):
+    compressed = wire is not None
+    scaled = wire in ("int8", "one_bit")
+    has_u = wire == "int8"
     i = 0
     x_ref, g_ref = refs[0], refs[1]
     i = 2
@@ -54,11 +58,19 @@ def _opt_step_kernel(*refs, kind, mode, groups, nstate, has_codes,
     i += int(has_codes)
     w_ref = refs[i] if mode == "mix" else None
     i += int(mode == "mix")
+    u_ref = refs[i] if has_u else None
+    i += int(has_u)
+    e_ref = refs[i] if compressed else None
+    i += int(compressed)
     scal_ref = refs[i]
     i += 1
     o_ref = refs[i]
     s_out = refs[i + 1:i + 1 + nstate]
-    d_ref = refs[-1]
+    i += 1 + nstate
+    r_ref = refs[i] if compressed else None
+    i += int(compressed)
+    d_ref = refs[i]
+    sc_ref = refs[i + 1] if scaled else None
 
     x = x_ref[...]                                   # (M, block_p) f32
     g = g_ref[...]
@@ -86,6 +98,55 @@ def _opt_step_kernel(*refs, kind, mode, groups, nstate, has_codes,
     # and the per-step diagnostic trace consume it on non-averaging
     # steps too (zero-padded columns are mean-0, so they contribute 0)
     d_ref[0, 0] = jnp.sum(jnp.square(upd - glob[None])) / m
+    if compressed:
+        # (2, nb) grid: the update is recomputed in both phases (same
+        # inputs, same values); phase 0 accumulates the per-row scale
+        # statistic across column blocks into VMEM scratch, phase 1
+        # encodes, applies the event on the decoded q and writes the
+        # plane + error-feedback residual
+        ph, j = pl.program_id(0), pl.program_id(1)
+        ve = upd + e_ref[...] if error_feedback else upd
+        if scaled:
+            part = (jnp.max(jnp.abs(ve), axis=1, keepdims=True)
+                    if wire == "int8"
+                    else jnp.sum(jnp.abs(ve), axis=1, keepdims=True))
+
+            @pl.when((ph == 0) & (j == 0))
+            def _init():
+                sc_ref[...] = part
+
+            @pl.when((ph == 0) & (j > 0))
+            def _acc():
+                sc_ref[...] = (jnp.maximum(sc_ref[...], part)
+                               if wire == "int8" else sc_ref[...] + part)
+
+        @pl.when(ph == 1)
+        def _emit():
+            if wire == "bf16":
+                q = ve.astype(jnp.bfloat16).astype(jnp.float32)
+            elif wire == "int8":
+                amax = sc_ref[...]
+                s = jnp.where(amax > 0.0, amax / 127.0, 1.0)
+                q = jnp.clip(jnp.floor(ve / s + u_ref[...]),
+                             -127.0, 127.0) * s
+            else:  # one_bit
+                s = sc_ref[...] / p
+                q = jnp.where(ve >= 0.0, s, -s)
+            if mode == "mix":
+                out = jnp.dot(w_ref[...], q,
+                              preferred_element_type=jnp.float32)
+            elif mode == "group" and groups > 1:
+                gm = jnp.mean(q.reshape(groups, m // groups, bp), axis=1)
+                out = jnp.broadcast_to(gm[:, None],
+                                       (groups, m // groups, bp))
+                out = out.reshape(m, bp)
+            else:
+                out = jnp.broadcast_to(jnp.mean(q, axis=0)[None], (m, bp))
+            if has_codes:
+                out = _round_codes(out, codes_ref[...])
+            o_ref[...] = out
+            r_ref[...] = ve - q if error_feedback else e_ref[...]
+        return
     if mode == "none":
         o_ref[...] = upd
         return
@@ -119,10 +180,12 @@ def _pad_cols(x, p_pad):
 @functools.partial(
     jax.jit,
     static_argnames=("kind", "mode", "groups", "mu", "nesterov", "b1", "b2",
-                     "eps", "weight_decay", "block_p", "interpret"))
+                     "eps", "weight_decay", "wire", "error_feedback",
+                     "block_p", "interpret"))
 def opt_step(plane, grads, planes, scalars, *, kind, mode="none",
              groups: int = 1, W=None, mu=0.9, nesterov=False, b1=0.9,
              b2=0.95, eps=1e-8, weight_decay=0.0, codes=None,
+             wire=None, resid=None, u=None, error_feedback: bool = True,
              block_p: int = DEFAULT_BLOCK_P, interpret: bool | None = None):
     """Fused optimizer step + optional averaging on the (M, P) plane.
 
@@ -137,10 +200,26 @@ def opt_step(plane, grads, planes, scalars, *, kind, mode="none",
     "none" measures without averaging and "mix" pre-mix, so adaptive
     schedules and the per-step diagnostic trace see the true value on
     every step. Matches ``repro.kernels.ref.opt_step_ref``.
+
+    ``wire`` (``repro.core.compress`` format ``bf16`` / ``int8`` /
+    ``one_bit``; ``f32`` lowers to ``wire=None`` in the engine) fuses
+    the compressed event into the pass: the error-feedback encode acts
+    on the post-update plane (``resid`` the (M, P) residual, ``u`` the
+    int8 ``row_uniforms`` plane), the event operator on the decoded
+    ``q``. The scaled formats need a per-row statistic spanning all
+    column blocks, so the grid becomes (2, nb) — phase 0 accumulates
+    the row scales into VMEM scratch, phase 1 quantizes and applies the
+    event. Returns (plane, state planes, new residual, dispersion).
     """
     assert kind in _KINDS, kind
     assert mode in _MODES, mode
     assert (W is not None) == (mode == "mix"), (mode, W is None)
+    compressed = wire is not None
+    assert not compressed or (wire in ("bf16", "int8", "one_bit")
+                              and mode != "none"), (wire, mode)
+    has_u = wire == "int8"
+    assert (u is not None) == has_u, (wire, u is None)
+    assert (resid is not None) == compressed, (wire, resid is None)
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     m, p = plane.shape
@@ -151,39 +230,67 @@ def opt_step(plane, grads, planes, scalars, *, kind, mode="none",
     nb = p_pad // block_p
     has_codes = codes is not None
 
+    # the compressed path runs a (2, nb) grid — index maps drop the
+    # phase coordinate
+    if compressed:
+        blk = pl.BlockSpec((m, block_p), lambda ph, i: (0, i))
+        row = pl.BlockSpec((1, block_p), lambda ph, i: (0, i))
+        whole = lambda shape: pl.BlockSpec(shape, lambda ph, i: (0, 0))
+        dspec = pl.BlockSpec((1, 1), lambda ph, i: (i, 0),
+                             memory_space=pltpu.SMEM)
+        grid = (2, nb)
+    else:
+        blk = pl.BlockSpec((m, block_p), lambda i: (0, i))
+        row = pl.BlockSpec((1, block_p), lambda i: (0, i))
+        whole = lambda shape: pl.BlockSpec(shape, lambda i: (0, 0))
+        dspec = pl.BlockSpec((1, 1), lambda i: (i, 0),
+                             memory_space=pltpu.SMEM)
+        grid = (nb,)
+
     x = _pad_cols(plane.astype(jnp.float32), p_pad)
     g = _pad_cols(grads.astype(jnp.float32), p_pad)
     ins = [x, g] + [_pad_cols(s.astype(jnp.float32), p_pad) for s in planes]
-    blk = pl.BlockSpec((m, block_p), lambda i: (0, i))
     in_specs = [blk, blk] + [blk] * nstate
     if has_codes:
         ins.append(_pad_cols(jnp.asarray(codes, jnp.float32)[None], p_pad))
-        in_specs.append(pl.BlockSpec((1, block_p), lambda i: (0, i)))
+        in_specs.append(row)
     if mode == "mix":
         assert W.shape == (m, m), (W.shape, m)
         ins.append(W.astype(jnp.float32))
-        in_specs.append(pl.BlockSpec((m, m), lambda i: (0, 0)))
+        in_specs.append(whole((m, m)))
+    if has_u:
+        ins.append(_pad_cols(u.astype(jnp.float32), p_pad))
+        in_specs.append(blk)
+    if compressed:
+        ins.append(_pad_cols(resid.astype(jnp.float32), p_pad))
+        in_specs.append(blk)
     ins.append(jnp.asarray(scalars, jnp.float32).reshape(1, 4))
-    in_specs.append(pl.BlockSpec((1, 4), lambda i: (0, 0),
+    in_specs.append(pl.BlockSpec((1, 4), (lambda ph, i: (0, 0)) if compressed
+                                 else (lambda i: (0, 0)),
                                  memory_space=pltpu.SMEM))
 
+    nplanes_out = 1 + nstate + int(compressed)
     out_shape = ([jax.ShapeDtypeStruct((m, p_pad), jnp.float32)]
-                 * (1 + nstate)
+                 * nplanes_out
                  + [jax.ShapeDtypeStruct((nb, 1), jnp.float32)])
-    out_specs = ([blk] * (1 + nstate)
-                 + [pl.BlockSpec((1, 1), lambda i: (i, 0),
-                                 memory_space=pltpu.SMEM)])
+    out_specs = [blk] * nplanes_out + [dspec]
     outs = pl.pallas_call(
         functools.partial(_opt_step_kernel, kind=kind, mode=mode,
                           groups=groups, nstate=nstate, has_codes=has_codes,
                           mu=mu, nesterov=nesterov, b1=b1, b2=b2, eps=eps,
-                          weight_decay=weight_decay),
-        grid=(nb,),
+                          weight_decay=weight_decay, wire=wire,
+                          error_feedback=error_feedback, p=p),
+        grid=grid,
         in_specs=in_specs,
         out_specs=out_specs,
         out_shape=out_shape,
+        scratch_shapes=([pltpu.VMEM((m, 1), jnp.float32)]
+                        if wire in ("int8", "one_bit") else []),
         interpret=interpret,
     )(*ins)
     out, dpart = outs[0], outs[-1]
     new_planes = tuple(o[:, :p] for o in outs[1:1 + nstate])
+    if compressed:
+        return (out[:, :p], new_planes, outs[1 + nstate][:, :p],
+                jnp.sum(dpart))
     return out[:, :p], new_planes, jnp.sum(dpart)

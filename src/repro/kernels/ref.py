@@ -170,7 +170,9 @@ def plane_average_ref(plane, *, groups: int = 1, codes=None):
 
 def opt_step_ref(plane, grads, planes, scalars, *, kind, mode="none",
                  groups: int = 1, W=None, mu=0.9, nesterov=False, b1=0.9,
-                 b2=0.95, eps=1e-8, weight_decay=0.0, codes=None):
+                 b2=0.95, eps=1e-8, weight_decay=0.0, codes=None,
+                 wire=None, resid=None, u=None,
+                 error_feedback: bool = True):
     """Fused local optimizer step + optional averaging event in one pass
     over the flat (M, P) plane — the jnp twin of
     ``repro.kernels.opt_step``.
@@ -184,10 +186,26 @@ def opt_step_ref(plane, grads, planes, scalars, *, kind, mode="none",
     post-update plane is emitted in EVERY mode — "none" measures
     without averaging and "mix" measures pre-mix, so adaptive schedules
     and the per-step diagnostic trace see the true value on every
-    step."""
+    step.
+
+    ``wire`` (``repro.core.compress`` format, not "f32") switches the
+    averaging event to the compressed twin: the error-feedback encode
+    acts on the POST-update plane (``resid`` the (M, P) residual, ``u``
+    the int8 ``row_uniforms``), the event operator on the decoded
+    ``q``, and the return gains the residual:
+    (plane, new state planes, new residual, dispersion)."""
     upd, planes = plane_update_ref(
         plane, grads, planes, scalars, kind=kind, mu=mu, nesterov=nesterov,
         b1=b1, b2=b2, eps=eps, weight_decay=weight_decay, codes=codes)
+    if wire is not None and mode != "none":
+        kw = dict(wire=wire, u=u, codes=codes,
+                  error_feedback=error_feedback)
+        if mode == "mix":
+            out, resid, disp = compressed_mix_ref(upd, resid, W, **kw)
+        else:
+            out, resid, disp = compressed_avg_ref(
+                upd, resid, groups=groups if mode == "group" else 1, **kw)
+        return out, planes, resid, disp
     if mode == "none":
         m = upd.shape[0]
         glob = jnp.mean(upd, axis=0)
@@ -199,6 +217,56 @@ def opt_step_ref(plane, grads, planes, scalars, *, kind, mode="none",
     out, disp = plane_average_ref(
         upd, groups=groups if mode == "group" else 1, codes=codes)
     return out, planes, disp
+
+
+def compressed_avg_ref(plane, resid, *, wire, groups: int = 1, u=None,
+                       codes=None, error_feedback: bool = True):
+    """Compressed averaging event on the (M, P) plane: error-feedback
+    encode (``v = plane + resid``, ``q = Q(v)``, ``resid' = v - q``,
+    ``repro.core.compress``), then the worker mean (global, or per
+    contiguous group) of the DECODED ``q`` broadcast back — what every
+    worker reconstructs from the bytes actually shipped. The Eq. 4
+    dispersion stays measured on the input plane (pre-encode,
+    pre-average), like every other event twin. ``u`` is the
+    ``row_uniforms`` plane (int8 stochastic rounding); ``codes``
+    (``FlatSpec.rounding_codes``) rounds the broadcast mean through the
+    leaf dtypes like ``plane_average_ref``. Returns
+    (plane, new residual, dispersion)."""
+    from repro.core.compress import encode_decode
+    m, p = plane.shape
+    glob = jnp.mean(plane, axis=0)
+    disp = jnp.sum(jnp.square(plane - glob[None])) / m
+    q, resid = encode_decode(plane, resid, wire=wire, u=u,
+                             error_feedback=error_feedback)
+    if groups > 1:
+        gm = jnp.mean(q.reshape(groups, m // groups, p), axis=1)
+        out = jnp.broadcast_to(gm[:, None], (groups, m // groups, p))
+        out = out.reshape(m, p)
+    else:
+        out = jnp.broadcast_to(jnp.mean(q, axis=0)[None], (m, p))
+    if codes is not None:
+        out = round_to_codes(out, codes[None])
+    return out, resid, disp
+
+
+def compressed_mix_ref(plane, resid, W, *, wire, u=None, codes=None,
+                       error_feedback: bool = True):
+    """Compressed gossip mixing event: error-feedback encode, then
+    ``W @ q`` on the decoded plane — each worker keeps its own mixed
+    row, no broadcast. The Eq. 4 dispersion is of the input plane
+    (pre-encode, pre-mix), matching ``mix_disp_ref``. Returns
+    (mixed plane, new residual, dispersion)."""
+    from repro.core.compress import encode_decode
+    m = plane.shape[0]
+    glob = jnp.mean(plane, axis=0)
+    disp = jnp.sum(jnp.square(plane - glob[None])) / m
+    q, resid = encode_decode(plane, resid, wire=wire, u=u,
+                             error_feedback=error_feedback)
+    out = jnp.dot(W.astype(jnp.float32), q,
+                  preferred_element_type=jnp.float32)
+    if codes is not None:
+        out = round_to_codes(out, codes[None])
+    return out, resid, disp
 
 
 def rglru_scan_ref(a, b):

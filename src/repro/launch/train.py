@@ -21,7 +21,8 @@ import numpy as np
 from repro.checkpoint import (load_engine_state, save_checkpoint,
                               save_engine_state)
 from repro.configs import ARCHS, get_config
-from repro.core import AveragingSchedule, OuterOptimizer, PhaseEngine
+from repro.core import (AveragingSchedule, Compression, OuterOptimizer,
+                        PhaseEngine, WIRE_FORMATS)
 from repro.topology import KINDS as TOPOLOGY_KINDS
 from repro.topology import Topology
 from repro.data import token_stream, worker_batches
@@ -41,7 +42,8 @@ def main(argv=None):
     ap.add_argument("--avg", default="periodic",
                     choices=["oneshot", "minibatch", "periodic",
                              "stochastic", "hierarchical",
-                             "adaptive_threshold", "adaptive_budget"])
+                             "adaptive_threshold", "adaptive_budget",
+                             "adaptive_bytes"])
     ap.add_argument("--phase-len", type=int, default=10)
     ap.add_argument("--zeta", type=float, default=0.01)
     ap.add_argument("--disp-threshold", type=float, default=0.0,
@@ -55,8 +57,26 @@ def main(argv=None):
                     help="adaptive_budget: max averaging events over "
                          "the budget horizon (required >= 1)")
     ap.add_argument("--budget-horizon", type=int, default=0,
-                    help="adaptive_budget: steps the budget spans "
-                         "(default 0 -> --steps)")
+                    help="adaptive_budget / adaptive_bytes: steps the "
+                         "budget spans (default 0 -> --steps)")
+    ap.add_argument("--comm-dtype", default="f32",
+                    choices=list(WIRE_FORMATS),
+                    help="wire precision of averaging/mixing events "
+                         "(repro.core.compress): f32 ships the rows "
+                         "uncompressed (bit-identical to no "
+                         "compression); bf16/int8/one_bit quantize "
+                         "them, int8/one_bit with an error-feedback "
+                         "residual plane")
+    ap.add_argument("--byte-budget", type=int, default=0,
+                    help="adaptive_bytes: max bytes ONE worker puts on "
+                         "the wire over the budget horizon (required "
+                         ">= the cost of one event at the chosen "
+                         "topology x --comm-dtype)")
+    ap.add_argument("--error-feedback", default=True,
+                    action=argparse.BooleanOptionalAction,
+                    help="carry the error-feedback residual plane "
+                         "(required for int8/one_bit wire formats; "
+                         "--no-error-feedback is only valid for bf16)")
     ap.add_argument("--topology", default=None,
                     choices=list(TOPOLOGY_KINDS),
                     help="mixing topology for the averaging events "
@@ -140,6 +160,21 @@ def main(argv=None):
             ap.error(f"--comm-budget ({args.comm_budget}) cannot exceed "
                      f"the budget horizon ({horizon} steps): at most one "
                      "averaging event per step")
+    if args.avg == "adaptive_bytes" and args.byte_budget < 1:
+        ap.error("--avg adaptive_bytes needs --byte-budget >= 1 (bytes "
+                 "one worker may put on the wire over the horizon)")
+    try:
+        # int8/one_bit without the error-feedback residual diverge —
+        # Compression refuses the combination; surface its message at
+        # parse time instead of deep inside engine setup
+        compression = Compression(args.comm_dtype,
+                                  error_feedback=args.error_feedback)
+    except ValueError as e:
+        ap.error(f"--comm-dtype {args.comm_dtype}: {e}")
+    if args.outer_momentum > 0 and args.comm_dtype != "f32":
+        ap.error(f"--outer-momentum steps on the exact consensus mean, "
+                 f"which a {args.comm_dtype} wire never forms — use "
+                 "--comm-dtype f32 or drop the outer optimizer")
     topology = None
     if args.topology:
         # invalid topology/worker-count combinations (ring needs M >= 3,
@@ -162,6 +197,21 @@ def main(argv=None):
     print(f"[train] {cfg.name}: {cfg.num_params()/1e6:.1f}M params, "
           f"{args.workers} workers, avg={args.avg}")
 
+    if args.avg == "adaptive_bytes":
+        # one event's wire cost at this topology x precision: a budget
+        # below it silently never averages — refuse up front
+        from repro.topology import comm_bytes
+        event_cost = comm_bytes(topology or Topology.full(args.workers),
+                                1, int(cfg.num_params()), args.comm_dtype)
+        if args.byte_budget < event_cost:
+            ap.error(f"--byte-budget ({args.byte_budget}) is below the "
+                     f"cost of ONE averaging event at this configuration "
+                     f"({event_cost} B/worker: "
+                     f"{args.topology or 'full'} topology, "
+                     f"{args.comm_dtype} wire, "
+                     f"{int(cfg.num_params())} params) — the schedule "
+                     "would never fire")
+
     params = init_params(cfg, jax.random.PRNGKey(args.seed))
 
     def loss_fn(p, batch, rng):
@@ -177,6 +227,7 @@ def main(argv=None):
         disp_threshold=args.disp_threshold,
         disp_ema_beta=args.disp_ema_beta,
         comm_budget=args.comm_budget,
+        byte_budget=args.byte_budget,
         budget_horizon=args.budget_horizon or args.steps)
     outer = (OuterOptimizer(lr=1.0, momentum=args.outer_momentum)
              if args.outer_momentum > 0 else None)
@@ -192,11 +243,14 @@ def main(argv=None):
                          flat=not args.tree_engine,
                          fused_opt=not args.no_fused_opt,
                          mesh=mesh, collective=args.collective,
-                         topology=topology)
+                         topology=topology, compression=compression)
     if topology is not None:
         print(f"[train] topology={topology.kind} "
               f"(spectral gap {topology.spectral_gap:.3f}, "
               f"{topology.comm_degree:.1f} msgs/worker/event)")
+    if not compression.is_identity:
+        print(f"[train] wire={compression.wire} "
+              f"(error_feedback={compression.error_feedback})")
 
     # per-worker independent data streams (paper §3.2: distinct shuffles)
     def batch_iter():

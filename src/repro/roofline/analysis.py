@@ -52,8 +52,28 @@ def _shape_bytes(dtype: str, dims: str) -> int:
     return n * _DTYPE_BYTES.get(dtype, 4)
 
 
-def collective_bytes(hlo_text: str) -> dict:
-    """Sum result-shape bytes per collective kind from HLO text."""
+def wire_scale(wire: str = "f32") -> float:
+    """Asymptotic bytes-on-the-wire fraction of an f32 payload shipped
+    in ``wire`` format (``repro.core.compress.WIRE_BITS``; the per-row
+    f32 scale of the scaled formats vanishes at roofline widths):
+    1.0 / 0.5 / 0.25 / 0.03125 for f32 / bf16 / int8 / one_bit."""
+    from repro.core.compress import WIRE_BITS
+    if wire not in WIRE_BITS:
+        raise ValueError(f"unknown wire format {wire!r}; "
+                         f"pick one of {tuple(WIRE_BITS)}")
+    return WIRE_BITS[wire] / 32.0
+
+
+def collective_bytes(hlo_text: str, *, wire: str = "f32") -> dict:
+    """Sum result-shape bytes per collective kind from HLO text.
+
+    ``wire`` rescales the f32 collective payloads to the given wire
+    format (``repro.core.compress``): the compiled HLO moves f32
+    planes, but a compressed-communication deployment ships them
+    encoded, so the roofline's collective term shrinks by
+    :func:`wire_scale`. Non-f32 collectives (already-reduced
+    precisions, integer index exchanges) are left untouched."""
+    scale = wire_scale(wire)
     out = {k: 0 for k in _COLL_KINDS}
     counts = {k: 0 for k in _COLL_KINDS}
     for line in hlo_text.splitlines():
@@ -66,10 +86,13 @@ def collective_bytes(hlo_text: str) -> dict:
         if m.group(1) == "(":
             # tuple result: sum all component shapes up to the op name
             head = line.split(kind)[0]
-            total = sum(_shape_bytes(d, s)
+            total = sum(int(_shape_bytes(d, s) * (scale if d == "f32"
+                                                  else 1.0))
                         for d, s in _TUPLE_SHAPE_RE.findall(head))
         else:
             total = _shape_bytes(m.group(2), m.group(3))
+            if m.group(2) == "f32":
+                total = int(total * scale)
         out[kind] += total
         counts[kind] += 1
     out["total"] = sum(out[k] for k in _COLL_KINDS)
@@ -78,15 +101,19 @@ def collective_bytes(hlo_text: str) -> dict:
 
 
 def roofline_report(compiled, *, hw: HW = HW(), model_flops: float = 0.0,
-                    chips: int = 1, hlo_text: str | None = None) -> dict:
-    """Derive the three terms + bottleneck from a compiled executable."""
+                    chips: int = 1, hlo_text: str | None = None,
+                    wire: str = "f32") -> dict:
+    """Derive the three terms + bottleneck from a compiled executable.
+    ``wire`` prices the f32 collective payloads at that wire format
+    (compressed communication shrinks the collective term only — HBM
+    traffic is unchanged, the planes stay f32 in memory)."""
     ca = compiled.cost_analysis()
     if isinstance(ca, list):  # older jax returns [dict]
         ca = ca[0]
     flops = float(ca.get("flops", 0.0))
     bytes_ = float(ca.get("bytes accessed", 0.0))
     text = hlo_text if hlo_text is not None else compiled.as_text()
-    coll = collective_bytes(text)
+    coll = collective_bytes(text, wire=wire)
 
     compute_s = flops / hw.peak_flops
     memory_s = bytes_ / hw.hbm_bw
@@ -98,6 +125,7 @@ def roofline_report(compiled, *, hw: HW = HW(), model_flops: float = 0.0,
     rep = {
         "flops_per_device": flops,
         "bytes_per_device": bytes_,
+        "wire": wire,
         "collective_bytes_per_device": coll["total"],
         "collective_breakdown": {k: coll[k] for k in _COLL_KINDS},
         "collective_counts": coll["counts"],

@@ -302,3 +302,17 @@ class Topology:
                 "gossip_pairs needs the decision key to sample a matching"
             return gossip_matrix(key, step, self.num_workers)
         return jnp.asarray(self.matrix, jnp.float32)
+
+
+def comm_bytes(topology: "Topology", events: int, p: int,
+               wire: str = "f32") -> int:
+    """Bytes ONE worker puts on the wire for ``events`` averaging
+    events over ``topology``, shipping (1, P) rows in the ``wire``
+    format: events x comm_degree messages, each one encoded row of
+    :func:`repro.core.compress.wire_row_bytes`. The common currency of
+    the timing x topology x precision budget ladder — the
+    ``adaptive_bytes`` schedule spends exactly this per event, and the
+    benchmark's matched-budget sweeps equalize it across arms."""
+    from repro.core.compress import wire_row_bytes
+    return int(round(events * topology.comm_degree)) * wire_row_bytes(
+        p, wire)

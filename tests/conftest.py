@@ -8,6 +8,17 @@ from repro.configs import ARCHS, get_config
 jax.config.update("jax_enable_x64", False)
 
 
+@pytest.fixture(autouse=True, scope="module")
+def _release_compiled_executables():
+    """Drop jit caches after every test module. The suite compiles
+    hundreds of distinct engine programs in one process; on XLA:CPU the
+    accumulated live executables eventually crash the compiler itself
+    (segfault inside backend_compile, ~400 tests in) — modules don't
+    share compiled programs, so freeing between them costs nothing."""
+    yield
+    jax.clear_caches()
+
+
 def reduced_f32(arch: str, **kw):
     """Reduced config in float32 (CPU numerics) for smoke tests."""
     cfg = get_config(arch, reduced=True)

@@ -75,6 +75,41 @@ def test_resume_equals_uninterrupted(tmp_path, opt, outer):
     assert h_full["averages"] == h1["averages"] + h2["averages"]
 
 
+@pytest.mark.parametrize("wire", ["int8", "one_bit"])
+def test_resume_equals_uninterrupted_compressed(tmp_path, wire):
+    """Compressed runs resume bit-exactly too: the error-feedback
+    residual plane rides the checkpoint (layout v3), and the int8
+    stochastic-rounding draws are pure functions of (dec_key, step),
+    so the post-resume events replay identically."""
+    from repro.core import Compression
+    batches = _problem()
+    params = {"w": jnp.zeros(DIM)}
+    sch = AveragingSchedule("stochastic", zeta=0.2)
+    mk = lambda: PhaseEngine(_loss, Momentum(lr=0.05, mu=0.9), sch,
+                             compression=Compression(wire))
+
+    f_full, h_full = mk().run(params, batches(0, STEPS),
+                              num_workers=WORKERS, seed=7, record_every=8)
+
+    cut = 32
+    _, h1, st = mk().run(params, batches(0, cut), num_workers=WORKERS,
+                         seed=7, record_every=8, return_state=True)
+    path = os.path.join(tmp_path, "ck")
+    save_engine_state(path, st)
+
+    loaded, step = load_engine_state(path, mk().init(params, WORKERS, 7))
+    assert step == cut
+    np.testing.assert_array_equal(np.asarray(st.resid),
+                                  np.asarray(loaded.resid))
+
+    f_res, h2 = mk().run(None, batches(cut, STEPS), num_workers=WORKERS,
+                         record_every=8, state=loaded)
+    np.testing.assert_array_equal(np.asarray(f_full["w"]),
+                                  np.asarray(f_res["w"]))
+    assert h_full["loss"] == h1["loss"] + h2["loss"]
+    assert h_full["averages"] == h1["averages"] + h2["averages"]
+
+
 def test_resume_with_device_dataset(tmp_path):
     """steps= counts steps for THIS call when resuming; record
     boundaries stay on absolute steps."""
@@ -144,19 +179,85 @@ class TestEngineStateVersions:
         for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(loaded)):
             np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
+    def _state_compressed(self, seed=1):
+        from repro.core import Compression
+        batches = _problem()
+        engine = PhaseEngine(_loss, Momentum(lr=0.05, mu=0.9),
+                             AveragingSchedule("periodic", 8),
+                             compression=Compression("int8"))
+        _, _, st = engine.run({"w": jnp.zeros(DIM)}, batches(0, 16),
+                              num_workers=WORKERS, seed=seed,
+                              return_state=True)
+        like = engine.init({"w": jnp.zeros(DIM)}, WORKERS, seed)
+        return st, like
+
     def test_v2_roundtrip_declares_version(self, tmp_path):
+        # uncompressed states keep the resid-less v2 layout (and stay
+        # loadable by the builds that wrote it), even though this build
+        # can write v3
         import json
-        from repro.checkpoint.io import ENGINE_STATE_VERSION
         st, like = self._state()
         path = os.path.join(tmp_path, "v2")
         save_engine_state(path, st, extra={"note": "kept"})
         meta = json.load(open(path + ".json"))
-        assert meta["extra"]["engine_state_version"] == \
-            ENGINE_STATE_VERSION == 2
+        assert meta["extra"]["engine_state_version"] == 2
         assert meta["extra"]["note"] == "kept"  # caller extras survive
         loaded, step = load_engine_state(path, like)
         assert step == 16
         self._assert_restored(st, loaded)
+
+    def test_v3_roundtrip_residual_plane(self, tmp_path):
+        import json
+        from repro.checkpoint.io import ENGINE_STATE_VERSION
+        st, like = self._state_compressed()
+        assert np.asarray(st.resid).any(), \
+            "the int8 run should have accumulated a nonzero residual"
+        path = os.path.join(tmp_path, "v3")
+        save_engine_state(path, st)
+        meta = json.load(open(path + ".json"))
+        assert meta["extra"]["engine_state_version"] == \
+            ENGINE_STATE_VERSION == 3
+        loaded, step = load_engine_state(path, like)
+        assert step == 16
+        self._assert_restored(st, loaded)
+        np.testing.assert_array_equal(np.asarray(st.resid),
+                                      np.asarray(loaded.resid))
+
+    def test_pre_resid_versions_load_with_fresh_residuals(self, tmp_path):
+        # v0/v1/v2 checkpoints predate the residual plane: they load
+        # into a compressed engine with zero residuals (error feedback
+        # restarts at the first post-resume event)
+        st, _ = self._state()
+        _, like = self._state_compressed()
+        bare = jax.device_get(st)
+        cases = {
+            "v2": {"engine_state_version": 2},
+            "v1": None,  # versionless SchedState build
+        }
+        for name, extra in cases.items():
+            path = os.path.join(tmp_path, name)
+            save_checkpoint(path, bare, step=int(st.step), extra=extra)
+            loaded, step = load_engine_state(path, like)
+            assert step == 16
+            self._assert_restored(st._replace(resid=like.resid), loaded)
+            assert not np.asarray(loaded.resid).any()
+        path = os.path.join(tmp_path, "v0")
+        save_checkpoint(path, jax.device_get(st._replace(sched=())),
+                        step=int(st.step),
+                        extra={"engine_state_version": 0})
+        loaded, step = load_engine_state(path, like)
+        assert step == 16
+        self._assert_restored(
+            st._replace(sched=like.sched, resid=like.resid), loaded)
+        assert not np.asarray(loaded.resid).any()
+
+    def test_v3_into_uncompressed_engine_refused(self, tmp_path):
+        st, _ = self._state_compressed()
+        _, like = self._state()  # engine without compression
+        path = os.path.join(tmp_path, "v3")
+        save_engine_state(path, st)
+        with pytest.raises(ValueError, match="no active compression"):
+            load_engine_state(path, like)
 
     def test_v1_roundtrip_versionless_schedstate(self, tmp_path):
         # a PR 4 build: SchedState leaves present, no version field
@@ -181,12 +282,13 @@ class TestEngineStateVersions:
             self._assert_restored(st._replace(sched=like.sched), loaded)
             assert int(loaded.sched.comm_spent) == 0
 
-    def test_future_version_refused(self, tmp_path):
+    @pytest.mark.parametrize("future", [4, 99])
+    def test_future_version_refused(self, tmp_path, future):
         st, like = self._state()
-        path = os.path.join(tmp_path, "vN")
+        path = os.path.join(tmp_path, f"v{future}")
         save_checkpoint(path, jax.device_get(st), step=int(st.step),
-                        extra={"engine_state_version": 99})
-        with pytest.raises(ValueError, match="version 99"):
+                        extra={"engine_state_version": future})
+        with pytest.raises(ValueError, match=f"version {future}"):
             load_engine_state(path, like)
 
     def test_malformed_version_refused_cleanly(self, tmp_path):

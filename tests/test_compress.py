@@ -1,0 +1,414 @@
+"""Compressed communication planes: wire formats, error feedback, and
+the bytes-on-the-wire budget.
+
+Four layers of guarantees:
+  1. The wire formats (``repro.core.compress``) hold their contracts:
+     bf16 is the round-to-nearest-even cast, int8 stochastic rounding
+     stays within one per-row quantization step, one_bit is
+     sign x mean|v|, and the error-feedback identity v = q + resid'
+     holds exactly in f32. The stochastic-rounding uniforms are a pure
+     function of (dec_key, step, row) — row subsets reproduce the
+     full-plane rows, which is what makes sharded encoding bit-equal
+     to single-device encoding.
+  2. The Pallas ``compressed_mix`` / compressed ``opt_step`` kernels
+     (interpret mode on CPU) match the kernels/ref.py jnp twins across
+     wires, event modes, padding and rounding codes.
+  3. The engine: the ``f32`` wire IS the uncompressed path (bit-exact
+     across schedules and topologies), the quantizing wires replay
+     bit-identically across all four engine paths (flat-native / flat /
+     tree / host loop), and error feedback keeps the long-run consensus
+     close to the uncompressed trajectory.
+  4. The ``adaptive_bytes`` schedule never overspends its byte budget,
+     prices events via ``comm_bytes`` (topology x wire), and refuses to
+     run without an event cost.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import AveragingSchedule, Compression, OuterOptimizer, \
+    PhaseEngine, wire_row_bytes
+from repro.core.compress import WIRE_FORMATS, encode_decode, quantize, \
+    row_uniforms
+from repro.kernels.avg_disp import compressed_mix
+from repro.kernels.opt_step import opt_step
+from repro.kernels.ref import compressed_avg_ref, compressed_mix_ref, \
+    opt_step_ref
+from repro.optim import SGD, Momentum
+from repro.topology import Topology, comm_bytes
+
+KEY = jax.random.PRNGKey(0)
+WORKERS, STEPS, DIM, SAMPLES = 4, 33, 12, 256
+
+
+def _plane(m=8, p=50, seed=0, scale=1.0):
+    k = jax.random.fold_in(KEY, seed)
+    return scale * jax.random.normal(k, (m, p), jnp.float32)
+
+
+def _u(m, p, step=3):
+    return row_uniforms(KEY, step, jnp.arange(m, dtype=jnp.int32), p)
+
+
+# --------------------------------------------------------------------------
+# 1. wire-format contracts
+# --------------------------------------------------------------------------
+
+class TestWireFormats:
+    def test_f32_is_identity(self):
+        v = _plane()
+        np.testing.assert_array_equal(np.asarray(quantize(v, "f32")),
+                                      np.asarray(v))
+
+    def test_bf16_is_the_cast(self):
+        v = _plane()
+        want = v.astype(jnp.bfloat16).astype(jnp.float32)
+        np.testing.assert_array_equal(np.asarray(quantize(v, "bf16")),
+                                      np.asarray(want))
+
+    def test_int8_error_within_one_step(self):
+        v = _plane(scale=3.0)
+        q = quantize(v, "int8", u=_u(*v.shape))
+        s = np.abs(np.asarray(v)).max(1) / 127.0
+        assert (np.abs(np.asarray(q - v)) <= s[:, None] + 1e-7).all()
+
+    def test_int8_zero_row_stable(self):
+        v = jnp.zeros((3, 9), jnp.float32)
+        q = quantize(v, "int8", u=_u(3, 9))
+        np.testing.assert_array_equal(np.asarray(q), 0.0)
+
+    def test_int8_stochastic_rounding_unbiased_ish(self):
+        # many rows of the same value: the mean of the quantized image
+        # approaches the value (stochastic, not round-to-nearest)
+        v = jnp.full((512, 4), 0.37, jnp.float32)
+        v = v.at[:, 0].set(1.0)  # pins the row scale to 1/127
+        q = quantize(v, "int8", u=_u(512, 4, step=9))
+        got = float(np.asarray(q)[:, 1].mean())
+        assert abs(got - 0.37) < 2e-3
+
+    def test_one_bit_is_sign_times_row_mean(self):
+        v = _plane()
+        q = np.asarray(quantize(v, "one_bit"))
+        s = np.abs(np.asarray(v)).mean(1, keepdims=True)
+        np.testing.assert_allclose(q, np.sign(np.asarray(v)) * s,
+                                   rtol=1e-6, atol=1e-7)
+
+    @pytest.mark.parametrize("wire", ["bf16", "int8", "one_bit"])
+    def test_error_feedback_identity(self, wire):
+        # the residual is EXACTLY what the wire dropped: r' = (v+r) - q
+        v, r = _plane(), 0.1 * _plane(seed=5)
+        u = _u(*v.shape) if wire == "int8" else None
+        q, r2 = encode_decode(v, r, wire=wire, u=u)
+        np.testing.assert_array_equal(np.asarray(r2),
+                                      np.asarray((v + r) - q))
+        np.testing.assert_allclose(np.asarray(q + r2), np.asarray(v + r),
+                                   rtol=1e-6, atol=1e-6)
+
+    def test_no_error_feedback_passes_residual_through(self):
+        v, r = _plane(), 0.1 * _plane(seed=5)
+        q, r2 = encode_decode(v, r, wire="bf16", error_feedback=False)
+        assert r2 is r
+        np.testing.assert_array_equal(
+            np.asarray(q), np.asarray(quantize(v, "bf16")))
+
+    def test_row_uniform_subsets_match_full(self):
+        # the sharded encoder draws uniforms for ITS rows only — they
+        # must equal the corresponding rows of the full-plane draw
+        full = _u(8, 17, step=4)
+        part = row_uniforms(KEY, 4, jnp.arange(3, 7, dtype=jnp.int32), 17)
+        np.testing.assert_array_equal(np.asarray(full[3:7]),
+                                      np.asarray(part))
+
+    def test_row_uniforms_vary_by_step(self):
+        assert not np.array_equal(np.asarray(_u(4, 9, step=1)),
+                                  np.asarray(_u(4, 9, step=2)))
+
+    def test_wire_row_bytes(self):
+        assert wire_row_bytes(64, "f32") == 256
+        assert wire_row_bytes(64, "bf16") == 128
+        assert wire_row_bytes(64, "int8") == 64 + 4   # payload + scale
+        assert wire_row_bytes(64, "one_bit") == 8 + 4  # bitmap + scale
+        assert wire_row_bytes(50, "one_bit") == 7 + 4  # ceil(50/8)
+
+    def test_compression_validation(self):
+        assert Compression("f32").is_identity
+        assert not Compression("bf16").is_identity
+        with pytest.raises(ValueError, match="unknown wire"):
+            Compression("fp8")
+        for wire in ("int8", "one_bit"):
+            with pytest.raises(ValueError, match="error-feedback"):
+                Compression(wire, error_feedback=False)
+        # bf16 may run open-loop (its error is bounded by the cast)
+        assert not Compression("bf16", error_feedback=False).error_feedback
+
+    def test_comm_bytes_prices_topology_and_wire(self):
+        full, ring = Topology.full(8), Topology.ring(8)
+        assert comm_bytes(full, 1, 64, "f32") == 7 * 256
+        assert comm_bytes(ring, 1, 64, "f32") == 2 * 256
+        assert comm_bytes(ring, 5, 64, "int8") == 10 * 68
+        # gossip pairs: one partner per event
+        assert comm_bytes(Topology.gossip_pairs(8), 3, 64, "one_bit") == \
+            3 * wire_row_bytes(64, "one_bit")
+
+
+# --------------------------------------------------------------------------
+# 2. Pallas kernels (interpret mode) vs jnp refs
+# --------------------------------------------------------------------------
+
+class TestCompressedKernels:
+    @pytest.mark.parametrize("wire", ["bf16", "int8", "one_bit"])
+    @pytest.mark.parametrize("mode", ["mean", "group", "mix"])
+    def test_compressed_mix_matches_ref(self, wire, mode):
+        m, p = 8, 50  # p=50 exercises column-block padding (block_p=16)
+        plane, resid = _plane(m, p), 0.1 * _plane(m, p, seed=7)
+        u = _u(m, p) if wire == "int8" else None
+        W = Topology.ring(m).mixing_matrix() if mode == "mix" else None
+        groups = 2 if mode == "group" else 1
+        out, r2, d = compressed_mix(plane, resid, wire=wire, mode=mode,
+                                    groups=groups, W=W, u=u, block_p=16,
+                                    interpret=True)
+        if mode == "mix":
+            ro, rr, rd = compressed_mix_ref(plane, resid, W, wire=wire,
+                                            u=u)
+        else:
+            ro, rr, rd = compressed_avg_ref(plane, resid, wire=wire,
+                                            groups=groups, u=u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ro),
+                                   rtol=2e-6, atol=2e-6)
+        np.testing.assert_allclose(np.asarray(r2), np.asarray(rr),
+                                   rtol=2e-6, atol=2e-6)
+        np.testing.assert_allclose(float(d), float(rd), rtol=2e-5)
+
+    @pytest.mark.parametrize("wire", ["bf16", "int8", "one_bit"])
+    @pytest.mark.parametrize("kind,mode", [
+        ("sgd", "mean"), ("momentum", "mean"), ("momentum", "mix"),
+        ("adamw", "group"),
+    ])
+    def test_opt_step_compressed_matches_ref(self, wire, kind, mode):
+        m, p = 8, 50
+        plane, grads = _plane(m, p), _plane(m, p, seed=3)
+        resid = 0.1 * _plane(m, p, seed=7)
+        nstate = {"sgd": 0, "momentum": 1, "adamw": 2}[kind]
+        planes = tuple(0.01 * _plane(m, p, seed=10 + i)
+                       for i in range(nstate))
+        scalars = jnp.asarray([0.05, 1.0, 1.0, 0.0], jnp.float32)
+        u = _u(m, p) if wire == "int8" else None
+        W = Topology.ring(m).mixing_matrix() if mode == "mix" else None
+        groups = 2 if mode == "group" else 1
+        out, pl, r2, d = opt_step(plane, grads, planes, scalars,
+                                  kind=kind, mode=mode, groups=groups,
+                                  W=W, wire=wire, resid=resid, u=u,
+                                  block_p=16, interpret=True)
+        ro, rpl, rr, rd = opt_step_ref(plane, grads, planes, scalars,
+                                       kind=kind, mode=mode,
+                                       groups=groups, W=W, wire=wire,
+                                       resid=resid, u=u)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ro),
+                                   rtol=2e-6, atol=2e-6)
+        for a, b in zip(pl, rpl):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=2e-6, atol=2e-6)
+        np.testing.assert_allclose(np.asarray(r2), np.asarray(rr),
+                                   rtol=2e-6, atol=2e-6)
+        np.testing.assert_allclose(float(d), float(rd), rtol=2e-5)
+
+
+# --------------------------------------------------------------------------
+# 3. engine integration
+# --------------------------------------------------------------------------
+
+def _problem(seed=0):
+    rng = np.random.default_rng(seed)
+    X = rng.standard_normal((SAMPLES, DIM))
+    y = X @ rng.standard_normal(DIM) + 0.1 * rng.standard_normal(SAMPLES)
+    idx = rng.integers(0, SAMPLES, (STEPS, WORKERS, 8))
+    Xj, yj = jnp.asarray(X), jnp.asarray(y)
+    return lambda: [{"x": Xj[idx[t]], "y": yj[idx[t]]}
+                    for t in range(STEPS)]
+
+
+def _loss(params, batch, rng):
+    r = batch["x"] @ params["w"] - batch["y"]
+    return 0.5 * jnp.mean(r * r), {}
+
+
+def _params():
+    return {"w": jnp.zeros(DIM)}
+
+
+SCHEDULES = {
+    "periodic": AveragingSchedule("periodic", 8),
+    "stochastic": AveragingSchedule("stochastic", zeta=0.2),
+    "hierarchical": AveragingSchedule("hierarchical", inner_phase_len=5,
+                                      outer_phase_len=20, inner_groups=2),
+    "adaptive_budget": AveragingSchedule("adaptive_budget", comm_budget=5,
+                                         budget_horizon=STEPS),
+}
+
+
+class TestEngineCompressed:
+    @pytest.mark.parametrize("name", list(SCHEDULES))
+    def test_f32_wire_is_bit_exact(self, name):
+        """Acceptance: the f32 wire lowers to the existing paths."""
+        batches = _problem()
+        for kw in (dict(), dict(fused_opt=False), dict(flat=False)):
+            base = PhaseEngine(_loss, Momentum(lr=0.05, mu=0.9),
+                               SCHEDULES[name], **kw)
+            f32w = PhaseEngine(_loss, Momentum(lr=0.05, mu=0.9),
+                               SCHEDULES[name],
+                               compression=Compression("f32"), **kw)
+            a, ha = base.run(_params(), batches(), num_workers=WORKERS,
+                             seed=3, record_every=1)
+            b, hb = f32w.run(_params(), batches(), num_workers=WORKERS,
+                             seed=3, record_every=1)
+            np.testing.assert_array_equal(np.asarray(a["w"]),
+                                          np.asarray(b["w"]))
+            assert ha == hb
+
+    def test_f32_wire_is_bit_exact_with_topology(self):
+        batches = _problem()
+        topo = Topology.ring(WORKERS)
+        mk = lambda c: PhaseEngine(_loss, SGD(lr=0.05),
+                                   AveragingSchedule("periodic", 8),
+                                   topology=topo, compression=c)
+        a, _ = mk(None).run(_params(), batches(), num_workers=WORKERS,
+                            seed=3)
+        b, _ = mk(Compression("f32")).run(_params(), batches(),
+                                          num_workers=WORKERS, seed=3)
+        np.testing.assert_array_equal(np.asarray(a["w"]),
+                                      np.asarray(b["w"]))
+
+    @pytest.mark.parametrize("wire", ["bf16", "int8", "one_bit"])
+    def test_paths_bitwise_identical(self, wire):
+        """flat-native / flat / tree / host loop replay the identical
+        compressed trajectory (CPU: all four use the jnp refs)."""
+        batches = _problem()
+        sch = SCHEDULES["stochastic"]
+        mk = lambda **kw: PhaseEngine(_loss, Momentum(lr=0.05, mu=0.9),
+                                      sch,
+                                      compression=Compression(wire), **kw)
+        f0, h0 = mk().run(_params(), batches(), num_workers=WORKERS,
+                          seed=3, record_every=1)
+        for kw in (dict(fused_opt=False), dict(flat=False)):
+            f, _ = mk(**kw).run(_params(), batches(), num_workers=WORKERS,
+                                seed=3)
+            np.testing.assert_array_equal(np.asarray(f0["w"]),
+                                          np.asarray(f["w"]))
+        fh, hh = mk().run_host(_params(), batches(), num_workers=WORKERS,
+                               seed=3, record_every=1)
+        np.testing.assert_array_equal(np.asarray(f0["w"]),
+                                      np.asarray(fh["w"]))
+        assert h0["averages"] == hh["averages"]
+
+    def test_phase_blocking_invariance_compressed(self):
+        batches = _problem()
+        mk = lambda: PhaseEngine(_loss, SGD(lr=0.05),
+                                 AveragingSchedule("periodic", 8),
+                                 compression=Compression("int8"))
+        ref, _ = mk().run(_params(), batches(), num_workers=WORKERS,
+                          seed=0, phase_len=8)
+        for block in (1, 7, 100):
+            got, _ = mk().run(_params(), batches(), num_workers=WORKERS,
+                              seed=0, phase_len=block)
+            np.testing.assert_array_equal(np.asarray(ref["w"]),
+                                          np.asarray(got["w"]))
+
+    def test_error_feedback_tracks_uncompressed(self):
+        """int8 is a ~4x wire cut; with error feedback the consensus
+        trajectory stays near the uncompressed one on the convex
+        problem (the residual re-injects what quantization dropped —
+        measured drift here is ~0.2% of the solution norm)."""
+        batches = _problem()
+        sch = AveragingSchedule("periodic", 4)
+        f0, _ = PhaseEngine(_loss, SGD(lr=0.05), sch).run(
+            _params(), batches(), num_workers=WORKERS, seed=3)
+        f1, _ = PhaseEngine(_loss, SGD(lr=0.05), sch,
+                            compression=Compression("int8")).run(
+            _params(), batches(), num_workers=WORKERS, seed=3)
+        ref = np.linalg.norm(np.asarray(f0["w"]))
+        err = np.linalg.norm(np.asarray(f1["w"]) - np.asarray(f0["w"]))
+        assert err < 0.05 * ref, (err, ref)
+
+    def test_outer_optimizer_requires_f32_wire(self):
+        with pytest.raises(ValueError, match="outer optimizer"):
+            PhaseEngine(_loss, SGD(lr=0.05),
+                        AveragingSchedule("periodic", 8),
+                        outer=OuterOptimizer(),
+                        compression=Compression("int8")).run(
+                _params(), _problem()(), num_workers=WORKERS)
+        # the f32 wire is the uncompressed path — outer is fine there
+        PhaseEngine(_loss, SGD(lr=0.05), AveragingSchedule("periodic", 8),
+                    outer=OuterOptimizer(),
+                    compression=Compression("f32")).run(
+            _params(), _problem()(), num_workers=WORKERS)
+
+    def test_unflattenable_tree_rejected(self):
+        def loss(params, batch, rng):
+            r = batch["x"] @ params["w"] - batch["y"]
+            return 0.5 * jnp.mean(r * r), {}
+
+        params = {"w": jnp.zeros(DIM), "steps": jnp.zeros((), jnp.int32)}
+        with pytest.raises(ValueError, match="FlatSpec cannot embed"):
+            PhaseEngine(loss, SGD(lr=0.05),
+                        AveragingSchedule("periodic", 8),
+                        compression=Compression("int8")).run(
+                params, _problem()(), num_workers=WORKERS)
+
+
+# --------------------------------------------------------------------------
+# 4. the adaptive_bytes schedule
+# --------------------------------------------------------------------------
+
+class TestAdaptiveBytes:
+    def test_validation(self):
+        with pytest.raises(ValueError, match="adaptive_bytes"):
+            AveragingSchedule("adaptive_bytes")
+        with pytest.raises(ValueError, match="adaptive_bytes"):
+            AveragingSchedule("adaptive_bytes", byte_budget=100)
+        s = AveragingSchedule("adaptive_bytes", byte_budget=100,
+                              budget_horizon=10)
+        assert s.is_adaptive
+        assert np.isnan(s.expected_phase_len())
+
+    def test_needs_event_cost(self):
+        s = AveragingSchedule("adaptive_bytes", byte_budget=100,
+                              budget_horizon=10)
+        with pytest.raises(ValueError, match="event_cost"):
+            s.decision_state(1, s.init_sched_state(), jnp.float32(0.5))
+
+    @pytest.mark.parametrize("wire,topo", [
+        ("f32", None), ("int8", None), ("int8", "ring")])
+    def test_never_overspends_budget(self, wire, topo):
+        """averages x comm_bytes(topology, 1, P, wire) <= byte_budget,
+        and a cheaper wire/topology buys MORE events from the same
+        budget."""
+        batches = _problem()
+        topology = Topology.ring(WORKERS) if topo else None
+        comp = None if wire == "f32" else Compression(wire)
+        budget = 4 * comm_bytes(Topology.full(WORKERS), 1, DIM, "f32")
+        sch = AveragingSchedule("adaptive_bytes", byte_budget=budget,
+                                budget_horizon=STEPS)
+        eng = PhaseEngine(_loss, SGD(lr=0.05), sch, topology=topology,
+                          compression=comp)
+        _, h = eng.run(_params(), batches(), num_workers=WORKERS, seed=3,
+                       record_every=1)
+        cost = comm_bytes(topology or Topology.full(WORKERS), 1, DIM,
+                          wire)
+        assert h["averages"] * cost <= budget
+        assert h["averages"] >= 1
+
+    def test_cheaper_wire_buys_more_events(self):
+        batches = _problem()
+        budget = 4 * comm_bytes(Topology.full(WORKERS), 1, DIM, "f32")
+        counts = {}
+        for wire in ("f32", "int8"):
+            comp = None if wire == "f32" else Compression(wire)
+            sch = AveragingSchedule("adaptive_bytes", byte_budget=budget,
+                                    budget_horizon=STEPS)
+            _, h = PhaseEngine(_loss, SGD(lr=0.05), sch,
+                               compression=comp).run(
+                _params(), batches(), num_workers=WORKERS, seed=3,
+                record_every=1)
+            counts[wire] = h["averages"]
+        assert counts["int8"] > counts["f32"], counts

@@ -129,6 +129,52 @@ for kind in ("ring", "torus", "gossip_pairs"):
     np.testing.assert_allclose(np.asarray(f0["w"]), np.asarray(f2["w"]),
                                rtol=1e-5, atol=1e-7)
     print("ok topology", kind)
+
+# compressed communication planes: the gather collective all_gathers the
+# error-feedback residual rows too and must stay bit-identical to the
+# single-device run; psum encodes shard-locally (per-row scales and
+# fold_in uniforms keyed by GLOBAL row ids) and reduces the encoded
+# sums — same decision stream, f32-roundoff params
+from repro.core import Compression
+for wire in ("bf16", "int8", "one_bit"):
+    for sname in ("periodic", "stochastic", "adaptive_budget"):
+        sch_c, comp = scheds[sname], Compression(wire)
+        f0, h0 = PhaseEngine(loss_fn, opt(), sch_c, compression=comp).run(
+            params, batches(), **kw)
+        f1, h1 = PhaseEngine(loss_fn, opt(), sch_c, compression=comp,
+                             mesh=mesh, collective="gather").run(
+            params, batches(), **kw)
+        np.testing.assert_array_equal(np.asarray(f0["w"]),
+                                      np.asarray(f1["w"]))
+        assert h0 == h1, (wire, sname)
+        f2, h2 = PhaseEngine(loss_fn, opt(), sch_c, compression=comp,
+                             mesh=mesh, collective="psum").run(
+            params, batches(), **kw)
+        assert h0["averages"] == h2["averages"], (wire, sname)
+        assert [t for t, _ in h0["dispersion"]] == \
+            [t for t, _ in h2["dispersion"]], (wire, sname)
+        np.testing.assert_allclose(np.asarray(f0["w"]),
+                                   np.asarray(f2["w"]),
+                                   rtol=1e-5, atol=1e-7)
+    print("ok compressed", wire)
+
+# compressed W-mix events under both collectives
+topo = Topology.build("ring", WORKERS)
+comp = Compression("int8")
+f0, h0 = PhaseEngine(loss_fn, opt(), sch, topology=topo,
+                     compression=comp).run(params, batches(), **kw)
+f1, h1 = PhaseEngine(loss_fn, opt(), sch, topology=topo, compression=comp,
+                     mesh=mesh, collective="gather").run(
+    params, batches(), **kw)
+np.testing.assert_array_equal(np.asarray(f0["w"]), np.asarray(f1["w"]))
+assert h0 == h1
+f2, h2 = PhaseEngine(loss_fn, opt(), sch, topology=topo, compression=comp,
+                     mesh=mesh, collective="psum").run(
+    params, batches(), **kw)
+assert h0["averages"] == h2["averages"]
+np.testing.assert_allclose(np.asarray(f0["w"]), np.asarray(f2["w"]),
+                           rtol=1e-5, atol=1e-7)
+print("ok compressed ring mix")
 print("ALL-OK")
 """
 
@@ -170,10 +216,13 @@ def test_engine_state_sharding_tree():
         outer_state=(),
         key=np.zeros(2, np.uint32), dec_key=np.zeros(2, np.uint32),
         step=np.int32(0),
-        sched=AveragingSchedule("periodic", 8).init_sched_state())
+        sched=AveragingSchedule("periodic", 8).init_sched_state(),
+        resid=np.zeros((4, 3), np.float32))
     sh = engine_state_sharding(mesh, state)
     assert sh.worker_params["w"].spec == P(("data",))
     assert sh.opt_state["v"].spec == P(("data",))
     assert sh.key.spec == P()
     assert sh.step.spec == P()
     assert all(s.spec == P() for s in sh.sched)
+    # the error-feedback residual plane shards with the worker rows
+    assert sh.resid.spec == P(("data",))
