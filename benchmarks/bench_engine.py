@@ -59,6 +59,12 @@ plus a ``bf16`` arm at the same period as the baseline (half the
 bytes for free). The ``f32`` wire format must lower to the
 uncompressed path BIT-exactly (params + full history) — recorded as
 ``compressed_matches_f32`` and gated like ``full_topology_bitexact``.
+A ``faults`` row (``repro.faults``) runs the robustness axis: a
+scripted crash + warm-started rejoin with stochastic stragglers must
+recover the no-fault final loss within 5% (``dropout_recovers``,
+gated in CI), and an IID-vs-dirichlet(0.05) shard comparison records
+the non-IID dispersion gap against the variance model's predicted
+averaging benefit (``noniid_benefit_agrees``).
 Topology-sweep rows carry a ``bytes_per_worker`` column pricing their
 realized events at every wire format, so matched-budget comparisons
 read in bytes, not messages.
@@ -430,6 +436,133 @@ def bench_compressed(arrays, idx, workers, steps) -> dict:
     return row
 
 
+def bench_faults(arrays, idx, workers, steps) -> dict:
+    """Robustness sweep along the fault + heterogeneity axes.
+
+    Crash/rejoin recovery: a no-fault periodic-8 Momentum baseline vs
+    the same engine under a scripted fault plan — one worker crashes a
+    quarter of the way in, rejoins (warm-started from the alive
+    average) at three quarters, with 5% stochastic stragglers
+    throughout — on identical sample draws. The acceptance claim is
+    ``dropout_recovers``: the faulted run's final consensus loss lands
+    within 5% of the no-fault run's (the rejoined worker re-converges
+    instead of dragging the consensus), gated in CI like
+    ``compressed_matches_f32``.
+
+    Heterogeneity: an IID (replacement) vs non-IID (per-class
+    dirichlet(0.05) label skew over target-quantile pseudo-classes)
+    sampled run at the same schedule. Non-IID shards hold worker
+    iterates apart between events, so the recorded mean event
+    dispersion gap ``noniid_disp_gap`` must be positive — and the
+    variance model must agree (``noniid_benefit_agrees``). Label skew
+    SHRINKS within-pool gradient variance (a near-single-class pool is
+    more homogeneous than the full dataset); what widens the envelope
+    is the coherent drift of pool-mean gradients, which accumulates
+    linearly in iterate space over the K local steps between events
+    (vs sqrt(K) for noise) and so enters the per-event variance budget
+    with weight K. ``predict_averaging_benefit`` on that drift-aware
+    budget must predict a larger averaging benefit for the skewed
+    shards than the IID budget predicts."""
+    from repro.core import FaultPlan, predict_averaging_benefit
+    Xn, yn = np.asarray(arrays["x"]), np.asarray(arrays["y"])
+    dim = Xn.shape[1]
+
+    def full_loss(f):
+        r = Xn @ np.asarray(f["w"]) - yn
+        return 0.5 * float(np.mean(r * r))
+
+    def run(data, faults=None, run_steps=None):
+        eng = PhaseEngine(ls_mean_loss, Momentum(lr=0.01, mu=0.9),
+                          AveragingSchedule("periodic", 8), faults=faults)
+        f, h = eng.run({"w": jnp.zeros(dim)}, data, num_workers=workers,
+                       seed=7, record_every=1, steps=run_steps)
+        return full_loss(f), h
+
+    loss_clean, h_clean = run(DeviceDataset(arrays, workers, indices=idx))
+    t_crash, t_rejoin = max(1, steps // 4), max(2, 3 * steps // 4)
+    plan = FaultPlan.parse(
+        f"crash:m=1@t={t_crash},rejoin:m=1@t={t_rejoin}", workers,
+        straggle_prob=0.05)
+    loss_fault, h_fault = run(DeviceDataset(arrays, workers, indices=idx),
+                              faults=plan)
+    recovers = bool(loss_fault <= loss_clean * 1.05)
+
+    # pseudo-classes for label skew: quartiles of the regression target
+    labels = np.digitize(yn, np.quantile(yn, [0.25, 0.5, 0.75]))
+
+    def sampled(mode, alpha):
+        return run(DeviceDataset(arrays, workers, batch_size=8, seed=11,
+                                 mode=mode, labels=labels, alpha=alpha),
+                   run_steps=steps)
+
+    loss_iid, h_iid = sampled("replacement", 0.5)
+    loss_ni, h_ni = sampled("dirichlet", 0.05)
+    disp_iid = float(np.mean([v for _, v in h_iid["dispersion"]]))
+    disp_ni = float(np.mean([v for _, v in h_ni["dispersion"]]))
+
+    # per-pool gradient statistics at w0 = 0 (per-sample grad =
+    # -x_i y_i): noise = variance around the pool's own mean, drift =
+    # the pool mean's offset from the global mean. Noise accumulates
+    # as sqrt(K) over the K steps between events, drift coherently as
+    # K — so the per-event variance budget weights drift by K
+    sh = WorkerSharder(len(yn), workers, seed=11, mode="dirichlet",
+                       labels=labels, alpha=0.05)
+    grads = -Xn * yn[:, None]
+    gbar = grads.mean(0)
+
+    def pool_noise(pool):
+        g = grads[pool]
+        return float(np.mean(np.sum((g - g.mean(0)) ** 2, axis=1)))
+
+    def pool_drift(pool):
+        return float(np.sum((grads[pool].mean(0) - gbar) ** 2))
+
+    period = 8
+    s2_ni = [pool_noise(p) + period * pool_drift(p) for p in sh._pools]
+    s2_iid = [pool_noise(np.arange(len(yn)))] * workers
+    drift = float(np.mean([pool_drift(p) for p in sh._pools]))
+    pred_ni = predict_averaging_benefit(s2_ni)
+    pred_iid = predict_averaging_benefit(s2_iid)
+    alive = np.ones(workers)
+    alive[1] = 0.0
+    pred_degraded = predict_averaging_benefit(s2_iid, alive=alive)
+
+    row = {
+        "workload": "faults", "workers": workers, "steps": steps,
+        "fault_plan": f"crash:m=1@t={t_crash},rejoin:m=1@t={t_rejoin}",
+        "straggle_prob": 0.05,
+        "clean_final_loss": loss_clean, "clean_events": h_clean["averages"],
+        "faulted_final_loss": loss_fault,
+        "faulted_events": h_fault["averages"],
+        "dropout_recovers": recovers,
+        "iid_final_loss": loss_iid, "iid_mean_event_disp": disp_iid,
+        "noniid_final_loss": loss_ni, "noniid_mean_event_disp": disp_ni,
+        "noniid_disp_gap": disp_ni - disp_iid,
+        "noniid_grad_drift": drift,
+        "noniid_sigma2_bar": pred_ni["sigma2_bar"],
+        "iid_sigma2_bar": pred_iid["sigma2_bar"],
+        "noniid_predicted_benefit": pred_ni["benefit"],
+        "iid_predicted_benefit": pred_iid["benefit"],
+        "noniid_benefit_agrees": bool(
+            disp_ni > disp_iid
+            and pred_ni["benefit"] > pred_iid["benefit"]),
+        "degraded_variance_reduction": pred_degraded["variance_reduction"],
+    }
+    emit("engine_faults_recovery", 0.0 if recovers else 1.0,
+         f"clean_loss={loss_clean:.5f};fault_loss={loss_fault:.5f};"
+         f"dropout_recovers={recovers};"
+         f"noniid_disp_gap={row['noniid_disp_gap']:.4f};"
+         f"benefit_agrees={row['noniid_benefit_agrees']}")
+    if not recovers:
+        # same CI contract as compressed_matches_f32: losing the
+        # crash+rejoin recovery property must fail the PR, not just
+        # flip a field in the JSON artifact
+        raise SystemExit(
+            f"faulted run does NOT recover: final loss {loss_fault:.6f} "
+            f"vs no-fault {loss_clean:.6f} (budget 5%)")
+    return row
+
+
 def check_sharded_bitexact(loss_fn, params, arrays, idx, workers,
                            mesh) -> bool:
     """gather-collective sharded run == single-device run, bitwise —
@@ -616,6 +749,11 @@ def run(tiny: bool = False, workers_override: int | None = None,
                                       steps)
     results.append(compressed_row)
 
+    rng = np.random.default_rng(5)
+    fidx = rng.integers(0, samples, size=(steps, m_adapt, 8))
+    faults_row = bench_faults({"x": Xj, "y": yj}, fidx, m_adapt, steps)
+    results.append(faults_row)
+
     sharder = bench_sharder(max(worker_counts), steps)
     emit("sharder_replacement", sharder["sharder_block_us"],
          f"loop_us={sharder['sharder_loop_us']:.0f};"
@@ -662,6 +800,7 @@ def run(tiny: bool = False, workers_override: int | None = None,
             "adaptive": adaptive_row,
             "topology": topology_sweep,
             "compressed": compressed_row,
+            "faults": faults_row,
             "rows": results, "sharder": sharder})
     return results
 

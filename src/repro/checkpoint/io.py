@@ -3,11 +3,20 @@
 Saves both the averaged (consensus) model and, optionally, the full
 per-worker state so a local-SGD run can resume mid-phase without losing
 worker diversity (which one-shot-style resumes would destroy).
+
+Saves are crash-safe: both files are written to a temp name and
+``os.replace``'d into place, with the json metadata renamed LAST — it is
+the commit point loaders read first, so an interrupted save leaves
+either the previous checkpoint intact or no (complete) checkpoint at
+all, never a torn one that loads garbage. A torn/partial file (killed
+mid-rename, disk full, manual truncation) is refused with an actionable
+error instead of an opaque zipfile traceback.
 """
 from __future__ import annotations
 
 import json
 import os
+import zipfile
 
 import jax
 import numpy as np
@@ -18,11 +27,22 @@ def _flatten(tree):
     return leaves, treedef
 
 
+def _atomic_replace(tmp: str, dst: str):
+    os.replace(tmp, dst)
+
+
 def save_checkpoint(path: str, tree, *, step: int = 0, extra: dict | None = None):
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     leaves, treedef = _flatten(tree)
     arrays = {f"leaf_{i}": np.asarray(x) for i, x in enumerate(leaves)}
-    np.savez(path + ".npz", **arrays)
+    # temp-file + atomic rename; np.savez gets an open file object (a
+    # bare str path would sprout a second ".npz" suffix)
+    npz_tmp = path + ".npz.tmp"
+    with open(npz_tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    _atomic_replace(npz_tmp, path + ".npz")
     meta = {
         "treedef": str(treedef),
         "num_leaves": len(leaves),
@@ -31,16 +51,49 @@ def save_checkpoint(path: str, tree, *, step: int = 0, extra: dict | None = None
         "shapes": [list(np.asarray(x).shape) for x in leaves],
         "extra": extra or {},
     }
-    with open(path + ".json", "w") as f:
+    # metadata last: loaders open the json first, so its rename is the
+    # commit point for the whole checkpoint
+    json_tmp = path + ".json.tmp"
+    with open(json_tmp, "w") as f:
         json.dump(meta, f)
+        f.flush()
+        os.fsync(f.fileno())
+    _atomic_replace(json_tmp, path + ".json")
+
+
+def _read_meta(path: str) -> dict:
+    try:
+        with open(path + ".json") as f:
+            return json.load(f)
+    except json.JSONDecodeError as e:
+        raise ValueError(
+            f"checkpoint {path!r} has torn/partial metadata "
+            f"({path}.json: {e}) — the save that wrote it was "
+            "interrupted; delete this checkpoint and resume from an "
+            "earlier one") from e
 
 
 def load_checkpoint(path: str, like_tree):
-    """Restore into the structure of ``like_tree`` (shape/dtype checked)."""
-    with open(path + ".json") as f:
-        meta = json.load(f)
-    data = np.load(path + ".npz")
-    leaves = [data[f"leaf_{i}"] for i in range(meta["num_leaves"])]
+    """Restore into the structure of ``like_tree`` (shape/dtype checked).
+    Refuses torn/partial files with an actionable error."""
+    meta = _read_meta(path)
+    try:
+        data = np.load(path + ".npz")
+        leaves = [np.array(data[f"leaf_{i}"])
+                  for i in range(meta["num_leaves"])]
+    except FileNotFoundError as e:
+        raise ValueError(
+            f"checkpoint {path!r} has metadata but no array file "
+            f"({path}.npz missing) — the save that wrote it was "
+            "interrupted or the file was removed; delete this "
+            "checkpoint and resume from an earlier one") from e
+    except (zipfile.BadZipFile, EOFError, KeyError, OSError,
+            ValueError) as e:
+        raise ValueError(
+            f"checkpoint {path!r} has a torn/partial array file "
+            f"({path}.npz: {e}) — the save that wrote it was "
+            "interrupted; delete this checkpoint and resume from an "
+            "earlier one") from e
     like_leaves, treedef = jax.tree_util.tree_flatten(like_tree)
     assert len(leaves) == len(like_leaves), "checkpoint/model mismatch"
     for got, want in zip(leaves, like_leaves):
@@ -67,32 +120,45 @@ def load_checkpoint(path: str, like_tree):
 #:       when the state actually carries residual leaves; uncompressed
 #:       runs keep writing the v2 (or v0) layout, so their checkpoints
 #:       stay loadable by older builds
-ENGINE_STATE_VERSION = 3
+#:   4 — EngineState with the per-worker fault rows (``fault`` —
+#:       alive/staleness, PR 7). Written only when the state carries
+#:       fault leaves; the metadata records ``has_resid`` since the
+#:       residual plane is independent of the fault rows
+ENGINE_STATE_VERSION = 4
 _VERSION_KEY = "engine_state_version"
+_HAS_RESID_KEY = "has_resid"
+#: optional EngineState fields, in the order they were added
+_OPTIONAL_FIELDS = ("sched", "resid", "fault")
 
 
 def save_engine_state(path: str, state, *, extra: dict | None = None):
     """Checkpoint a full ``repro.core.EngineState`` — worker params,
     optimizer state, outer-optimizer state, both PRNG keys, the step
-    counter and the schedule state — so ``PhaseEngine.run(...,
-    state=loaded)`` continues the run bit-identically to one that was
-    never interrupted (static averaging decisions are pure functions of
-    (dec_key, step); the adaptive schedules' decisions are pure
-    functions of the checkpointed ``SchedState``, which carries the
-    dispersion EMA, pacing credit and budget spent forward). The
-    checkpoint metadata records ``engine_state_version`` so loaders
-    dispatch on the declared layout instead of sniffing leaf counts."""
+    counter, the schedule state and (under a fault plan) the per-worker
+    fault rows — so ``PhaseEngine.run(..., state=loaded)`` continues the
+    run bit-identically to one that was never interrupted (static
+    averaging decisions are pure functions of (dec_key, step); the
+    adaptive schedules' decisions are pure functions of the checkpointed
+    ``SchedState``; fault streams are pure functions of (dec_key, step,
+    row) plus the checkpointed alive/staleness rows). The checkpoint
+    metadata records ``engine_state_version`` so loaders dispatch on the
+    declared layout instead of sniffing leaf counts."""
     state = jax.device_get(state)
     extra = dict(extra or {})
     # the version describes the LAYOUT the state actually has: no
     # SchedState leaves (sched=()) is exactly the v0 layout, no
-    # residual leaves (resid=()) the v2 one, whoever writes it
+    # residual/fault leaves the v2 one, whoever writes it
+    has_resid = not _absent(getattr(state, "resid", ()))
+    has_fault = not _absent(getattr(state, "fault", ()))
     if _absent(getattr(state, "sched", ())):
         extra[_VERSION_KEY] = 0
-    elif _absent(getattr(state, "resid", ())):
-        extra[_VERSION_KEY] = 2
-    else:
+    elif has_fault:
         extra[_VERSION_KEY] = ENGINE_STATE_VERSION
+        extra[_HAS_RESID_KEY] = has_resid
+    elif has_resid:
+        extra[_VERSION_KEY] = 3
+    else:
+        extra[_VERSION_KEY] = 2
     save_checkpoint(path, state, step=int(state.step), extra=extra)
 
 
@@ -102,29 +168,49 @@ def _absent(field) -> bool:
     return isinstance(field, tuple) and len(field) == 0
 
 
-def _load_v0(path: str, like_state):
-    """A v0 state has neither ``sched`` nor ``resid`` leaves: load into
-    the bare layout and take both fresh from ``like_state`` (all-zero
-    bookkeeping / all-zero residuals — exactly where a run of a
-    pre-SchedState build stood)."""
-    if _absent(getattr(like_state, "sched", ())) and \
-            _absent(getattr(like_state, "resid", ())):
+def _load_subset(path: str, like_state, present: frozenset | set):
+    """Load a checkpoint whose layout carries the optional fields in
+    ``present``: fields the target state has but the checkpoint lacks
+    are stripped for the structural load and refilled fresh from
+    ``like_state``; fields the checkpoint has but the target lacks are
+    refused with a field-specific, actionable error."""
+    if "resid" in present and _absent(getattr(like_state, "resid", ())):
+        raise ValueError(
+            f"checkpoint {path!r} carries an error-feedback residual "
+            "plane but the target engine has no active compression — "
+            "init the engine with the run's Compression before loading")
+    if "fault" in present and _absent(getattr(like_state, "fault", ())):
+        raise ValueError(
+            f"checkpoint {path!r} carries per-worker fault rows "
+            "(engine-state v4) but the target engine has no fault "
+            "plan — init the engine with the run's FaultPlan before "
+            "loading")
+    strip = {f: () for f in _OPTIONAL_FIELDS
+             if f not in present
+             and not _absent(getattr(like_state, f, ()))}
+    if not strip:
         return load_checkpoint(path, like_state)
-    bare = like_state._replace(sched=(), resid=())
+    bare = like_state._replace(**strip)
     state, step = load_checkpoint(path, bare)
-    return state._replace(sched=like_state.sched,
-                          resid=like_state.resid), step
+    return state._replace(
+        **{f: getattr(like_state, f) for f in strip}), step
+
+
+def _load_v0(path: str, like_state):
+    """A v0 state has neither ``sched``, ``resid`` nor ``fault`` leaves:
+    load into the bare layout and take all three fresh from
+    ``like_state`` (all-zero bookkeeping / all-zero residuals /
+    all-alive fault rows — exactly where a run of a pre-SchedState
+    build stood)."""
+    return _load_subset(path, like_state, set())
 
 
 def _load_pre_resid(path: str, like_state):
-    """v1/v2 states carry SchedState but no residual plane: residuals
-    start fresh (zero) from ``like_state`` — error feedback begins
-    accumulating at the first post-resume event."""
-    if _absent(getattr(like_state, "resid", ())):
-        return load_checkpoint(path, like_state)
-    bare = like_state._replace(resid=())
-    state, step = load_checkpoint(path, bare)
-    return state._replace(resid=like_state.resid), step
+    """v1/v2 states carry SchedState but no residual plane or fault
+    rows: both start fresh from ``like_state`` — error feedback begins
+    accumulating at the first post-resume event, and every worker
+    resumes alive."""
+    return _load_subset(path, like_state, {"sched"})
 
 
 def load_engine_state(path: str, like_state):
@@ -133,14 +219,15 @@ def load_engine_state(path: str, like_state):
     Returns (state, step).
 
     The checkpoint's declared ``engine_state_version`` picks the
-    layout: v3 carries the error-feedback residual plane, v1/v2 carry
-    the SchedState leaves but no residuals (they start fresh at zero),
-    v0 predates both (SchedState AND residuals come fresh from
-    ``like_state``). Checkpoints from builds that did not yet write
-    the version field load too — the v0-vs-v1 distinction falls back
-    to the historical leaf-count sniff."""
-    with open(path + ".json") as f:
-        meta = json.load(f)
+    layout: v4 carries the per-worker fault rows (and, per its
+    ``has_resid`` metadata, possibly the residual plane), v3 the
+    residual plane, v1/v2 the SchedState leaves only, v0 predates all
+    of them; every field the checkpoint lacks starts fresh from
+    ``like_state`` (zero bookkeeping, zero residuals, all-alive fault
+    rows). Checkpoints from builds that did not yet write the version
+    field load too — the v0-vs-v1 distinction falls back to the
+    historical leaf-count sniff."""
+    meta = _read_meta(path)
     version = (meta.get("extra") or {}).get(_VERSION_KEY)
     if version is not None:
         if (isinstance(version, bool) or not isinstance(version, int)
@@ -157,15 +244,14 @@ def load_engine_state(path: str, like_state):
                 "wrote it")
         if version == 0:
             return _load_v0(path, like_state)
-        if version < ENGINE_STATE_VERSION:
+        if version in (1, 2):
             return _load_pre_resid(path, like_state)
-        if _absent(getattr(like_state, "resid", ())):
-            raise ValueError(
-                f"checkpoint {path!r} carries an error-feedback "
-                "residual plane (engine-state v3) but the target "
-                "engine has no active compression — init the engine "
-                "with the run's Compression before loading")
-        return load_checkpoint(path, like_state)
+        if version == 3:
+            return _load_subset(path, like_state, {"sched", "resid"})
+        present = {"sched", "fault"}
+        if (meta.get("extra") or {}).get(_HAS_RESID_KEY, True):
+            present.add("resid")
+        return _load_subset(path, like_state, present)
     try:
         return _load_pre_resid(path, like_state)
     except AssertionError:

@@ -21,5 +21,11 @@ from repro.core.theory import (  # noqa: F401
     lemma1_asymptotic_variance,
     simulate_quadratic,
 )
-from repro.core.variance_model import measure_beta2, measure_sigma2, rho  # noqa: F401
+from repro.core.variance_model import (  # noqa: F401
+    measure_beta2,
+    measure_sigma2,
+    predict_averaging_benefit,
+    rho,
+)
+from repro.faults import FaultEvent, FaultPlan, FaultState  # noqa: F401
 from repro.topology import Topology  # noqa: F401

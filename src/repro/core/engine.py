@@ -85,6 +85,8 @@ from repro.core.averaging import (AveragingSchedule, OuterOptimizer,
 from repro.core.compress import Compression, encode_decode, row_uniforms
 from repro.core.flat import FlatOptSpec, FlatSpec
 from repro.data.pipeline import DeviceDataset, Prefetcher
+from repro import faults as faults_mod
+from repro.faults import FaultPlan, FaultState
 from repro.kernels.avg_disp import (avg_disp, avg_disp_outer,
                                     compressed_mix, mix_disp)
 from repro.kernels.opt_step import opt_step
@@ -185,6 +187,8 @@ class EngineState(NamedTuple):
     sched: Any = ()      # SchedState (adaptive-schedule carry), or ()
     resid: Any = ()      # (M, P) f32 error-feedback residual plane
     #                    # (compressed communication), or ()
+    fault: Any = ()      # FaultState (alive/staleness rows, fault
+    #                    # injection — repro.faults), or ()
 
 
 @dataclass(frozen=True, eq=False)  # eq=False: hash by identity for jit
@@ -241,7 +245,23 @@ class PhaseEngine:
     the identity and lowers to the uncompressed paths bit-exactly; the
     quantizing formats require params FlatSpec can embed (every engine
     path encodes on the flat plane) and exclude the outer optimizer,
-    whose consensus step needs the exact mean."""
+    whose consensus step needs the exact mean.
+
+    ``faults`` (a :class:`repro.faults.FaultPlan`) makes worker
+    failure a scenario axis: a :class:`repro.faults.FaultState`
+    ``(alive, staleness)`` carry rides the scan like ``SchedState``
+    (checkpoint layout v4), scripted crashes/rejoins are pure
+    functions of the step and stochastic straggles of
+    ``fold_in(dec_key, salt, step, row)``, so every path, shard and
+    resume replays identical fault streams. Dead rows are masked out
+    of every event (``faults.degraded_matrix`` renormalizes mixing
+    matrices over the alive rows), stragglers skip their local update
+    but still receive the event, rejoiners warm-start from the alive
+    average with optimizer planes and residual rows zeroed, and the
+    final estimate is the alive-worker consensus. A trivial plan (no
+    events, zero straggle probability) lowers to the no-fault paths
+    bit-exactly; the outer optimizer is excluded (its consensus step
+    assumes a fixed membership)."""
     loss_fn: Callable
     optimizer: Any
     schedule: AveragingSchedule
@@ -255,6 +275,7 @@ class PhaseEngine:
     collective: str = "psum"
     topology: Topology | None = None
     compression: Compression | None = None
+    faults: FaultPlan | None = None
 
     @cached_property
     def worker_step(self):
@@ -292,6 +313,29 @@ class PhaseEngine:
                 "the outer optimizer steps on the exact consensus mean, "
                 f"which the '{self.compression.wire}' wire format never "
                 "ships — use the f32 wire, or drop the outer optimizer")
+        fp = self.faults
+        if fp is not None:
+            if fp.num_workers != num_workers:
+                raise ValueError(
+                    f"FaultPlan was built for {fp.num_workers} workers "
+                    f"but the engine runs {num_workers} — build the plan "
+                    "with the run's worker count")
+            if self._faults() is not None and self.outer is not None:
+                raise ValueError(
+                    "the outer optimizer steps on the full-membership "
+                    "consensus mean, which a fault plan (crashes / "
+                    "stragglers changing the alive set) never preserves "
+                    "— drop the outer optimizer, or run without faults")
+
+    def _faults(self) -> FaultPlan | None:
+        """The active (non-trivial) fault plan, or None. A plan with no
+        events and zero straggle probability IS the no-fault engine —
+        lowering it here keeps that configuration bit-exact by
+        construction (mirrors ``_comp``'s f32 lowering)."""
+        fp = self.faults
+        if fp is None or fp.is_trivial:
+            return None
+        return fp
 
     def _comp(self) -> Compression | None:
         """The active (non-identity) compression, or None. The ``f32``
@@ -354,10 +398,13 @@ class PhaseEngine:
         if self._comp() is not None:
             resid = jnp.zeros((num_workers, FlatSpec.of(wp).width),
                               jnp.float32)
+        fault = ()
+        if self._faults() is not None:
+            fault = faults_mod.init_fault_state(num_workers)
         key, dec_key = jax.random.split(jax.random.PRNGKey(seed))
         return EngineState(wp, opt_state, outer_state, key, dec_key,
                            jnp.zeros((), jnp.int32),
-                           self.schedule.init_sched_state(), resid)
+                           self.schedule.init_sched_state(), resid, fault)
 
     def _sched_event_cost(self, p: int, num_workers: int):
         """The per-event bytes-per-worker cost the ``adaptive_bytes``
@@ -377,23 +424,27 @@ class PhaseEngine:
             return False
         return jax.default_backend() != "cpu"
 
-    def _flat_average(self, plane, outer_c, scope: str, W=None):
+    def _flat_average(self, plane, outer_c, scope: str, W=None,
+                      alive=None):
         """ONE fused pass over the (M, P) plane: mean (global or
         per-group), Eq. 4 dispersion, broadcast, and — for the all-scope
         with an outer optimizer — the outer momentum step. With a
         mixing topology the all-scope event is the fused
-        ``W @ plane`` gossip mix instead (no broadcast)."""
+        ``W @ plane`` gossip mix instead (no broadcast). ``alive``
+        ((M,) f32, fault mode) masks every variant over the alive
+        rows; the outer optimizer is excluded under faults."""
         pallas = self._use_pallas()
         if scope == "inner":
             groups = max(self.schedule.inner_groups, 1)
             if pallas:
-                plane, disp = avg_disp(plane, groups=groups)
+                plane, disp = avg_disp(plane, groups=groups, alive=alive)
             else:
-                plane, disp = avg_disp_ref(plane, groups=groups)
+                plane, disp = avg_disp_ref(plane, groups=groups,
+                                           alive=alive)
             return plane, outer_c, disp
         if W is not None:
             mix = mix_disp if pallas else mix_disp_ref
-            plane, disp = mix(plane, W)
+            plane, disp = mix(plane, W, alive=alive)
             return plane, outer_c, disp
         if self.outer is not None and outer_c != ():
             prev, vel = outer_c
@@ -404,9 +455,9 @@ class PhaseEngine:
             return plane, (prev, vel), disp
         groups = self._all_groups()
         if pallas:
-            plane, disp = avg_disp(plane, groups=groups)
+            plane, disp = avg_disp(plane, groups=groups, alive=alive)
         else:
-            plane, disp = avg_disp_ref(plane, groups=groups)
+            plane, disp = avg_disp_ref(plane, groups=groups, alive=alive)
         return plane, outer_c, disp
 
     # ---- flat-native fused step (+ averaging) ---------------------------
@@ -431,18 +482,19 @@ class PhaseEngine:
         return row_uniforms(dec_key, step, rows, spec.width)
 
     def _compressed_plane_event(self, spec, plane, resid, scope: str,
-                                step, dec_key, W=None):
+                                step, dec_key, W=None, alive=None):
         """One compressed averaging/mixing event on the (M, P) plane:
         error-feedback encode of the post-update plane, the event
         operator (mean / group mean / ``W @``) on the decoded ``q``,
         residual update — fused (``kernels.avg_disp.compressed_mix``)
-        on accelerators, the jnp twins on CPU. Returns
-        (plane, residual, dispersion)."""
+        on accelerators, the jnp twins on CPU. ``alive`` masks the
+        event over the alive rows (dead rows ship no bytes and keep
+        their stale residual). Returns (plane, residual, dispersion)."""
         comp = self._comp()
         codes = spec.rounding_codes()
         u = self._event_uniforms(spec, plane.shape[0], step, dec_key)
         kw = dict(wire=comp.wire, u=u, codes=codes,
-                  error_feedback=comp.error_feedback)
+                  error_feedback=comp.error_feedback, alive=alive)
         groups = (max(self.schedule.inner_groups, 1) if scope == "inner"
                   else self._all_groups())
         if self._use_pallas():
@@ -456,7 +508,8 @@ class PhaseEngine:
 
     def _fused_step_average(self, spec, plane, gplane, planes, outer_c,
                             scalars, scope: str, W=None, resid=(),
-                            step=None, dec_key=None):
+                            step=None, dec_key=None, alive=None,
+                            umask=None):
         """ONE fused pass: local optimizer update on the plane (+ state
         planes) and, per ``scope``, the averaging event — mean (global
         or per-group), Eq. 4 dispersion, broadcast, or (with a mixing
@@ -470,6 +523,8 @@ class PhaseEngine:
         codes = spec.rounding_codes()
         kw = dict(kind=self.optimizer.plane_kind, codes=codes,
                   **self.optimizer.plane_hypers())
+        if alive is not None:
+            kw.update(alive=alive, umask=umask)
         fused = opt_step if self._use_pallas() else opt_step_ref
         comp = self._comp()
         if comp is not None and scope != "none":
@@ -510,19 +565,22 @@ class PhaseEngine:
                                     groups=groups, **kw)
         return plane, planes, outer_c, resid, disp
 
-    def _plane_avg_event(self, spec, plane, outer_c, scope: str, W=None):
+    def _plane_avg_event(self, spec, plane, outer_c, scope: str, W=None,
+                         alive=None):
         """Averaging event alone (no optimizer update) on the plane —
         used by the switch branches of rare-averaging schedules, where
         the update is hoisted before the switch so XLA can fuse it with
         the gradient computation. Mixed-dtype trees round the broadcast
         mean / mixed rows (and the outer-optimizer's gradient target
         and update) through the leaf dtypes (``rounding_codes``),
-        matching the tree operators' ``.astype``."""
+        matching the tree operators' ``.astype``. ``alive`` masks the
+        event over the alive rows (fault mode)."""
         codes = spec.rounding_codes()
         if codes is None:
-            return self._flat_average(plane, outer_c, scope, W=W)
+            return self._flat_average(plane, outer_c, scope, W=W,
+                                      alive=alive)
         if scope == "all" and W is not None:
-            plane, disp = mix_disp_ref(plane, W, codes=codes)
+            plane, disp = mix_disp_ref(plane, W, codes=codes, alive=alive)
             return plane, outer_c, disp
         if scope == "all" and self.outer is not None and outer_c != ():
             prev, vel = outer_c
@@ -533,11 +591,13 @@ class PhaseEngine:
             return plane, (prev, vel), disp
         groups = (max(self.schedule.inner_groups, 1)
                   if scope == "inner" else self._all_groups())
-        plane, disp = plane_average_ref(plane, groups=groups, codes=codes)
+        plane, disp = plane_average_ref(plane, groups=groups, codes=codes,
+                                        alive=alive)
         return plane, outer_c, disp
 
     def _flat_native_step(self, spec, plane, gplane, planes, outer_c,
-                          scalars, step, sst, dec_key, resid=()):
+                          scalars, step, sst, dec_key, resid=(),
+                          fmask=None):
         """One flat-native step: fused update(+average) for the
         every-step schedules, update-then-switched-average for the rare
         ones. The fused update always emits the Eq. 4 dispersion of the
@@ -545,9 +605,12 @@ class PhaseEngine:
         (``AveragingSchedule.decision_state``) and the per-step trace.
         With active compression the error-feedback ``resid`` plane
         threads through the event (untouched on non-event steps).
-        Returns (plane, state planes, outer_c, resid, sched state,
-        dispersion, decision code)."""
+        ``fmask`` (fault mode) is the ``(alive, umask)`` pair for this
+        step: rows outside ``umask`` skip the update, events and the
+        dispersion mask over ``alive``. Returns (plane, state planes,
+        outer_c, resid, sched state, dispersion, decision code)."""
         sched = self.schedule
+        alive, umask = fmask if fmask is not None else (None, None)
         ec = self._sched_event_cost(spec.width, plane.shape[0])
         if sched.kind == "minibatch":
             # the all-average is unconditional — fuse it into the update
@@ -555,13 +618,13 @@ class PhaseEngine:
             plane, planes, outer_c, resid, disp = self._fused_step_average(
                 spec, plane, gplane, planes, outer_c, scalars, "all",
                 W=self._event_W(step, dec_key), resid=resid, step=step,
-                dec_key=dec_key)
+                dec_key=dec_key, alive=alive, umask=umask)
             code, sst = sched.decision_state(step, sst, disp, dec_key,
                                              event_cost=ec)
             return plane, planes, outer_c, resid, sst, disp, code
         plane, planes, outer_c, resid, disp = self._fused_step_average(
             spec, plane, gplane, planes, outer_c, scalars, "none",
-            resid=resid)
+            resid=resid, alive=alive, umask=umask)
         code, sst = sched.decision_state(step, sst, disp, dec_key,
                                          event_cost=ec)
         if sched.kind == "oneshot":
@@ -574,19 +637,23 @@ class PhaseEngine:
         def inner_branch(args):
             if comp is not None:
                 pl_, r_, _ = self._compressed_plane_event(
-                    spec, args[0], args[2], "inner", step, dec_key)
+                    spec, args[0], args[2], "inner", step, dec_key,
+                    alive=alive)
                 return pl_, args[1], r_
             return self._plane_avg_event(spec, args[0], args[1],
-                                         "inner")[:2] + (args[2],)
+                                         "inner",
+                                         alive=alive)[:2] + (args[2],)
 
         def all_branch(args):
             W = self._event_W(step, dec_key)
             if comp is not None:
                 pl_, r_, _ = self._compressed_plane_event(
-                    spec, args[0], args[2], "all", step, dec_key, W=W)
+                    spec, args[0], args[2], "all", step, dec_key, W=W,
+                    alive=alive)
                 return pl_, args[1], r_
             return self._plane_avg_event(spec, args[0], args[1], "all",
-                                         W=W)[:2] + (args[2],)
+                                         W=W,
+                                         alive=alive)[:2] + (args[2],)
 
         plane, outer_c, resid = jax.lax.switch(
             code, [none_branch, inner_branch, all_branch],
@@ -603,7 +670,21 @@ class PhaseEngine:
         return replicate(avg, num_workers), outer_state
 
     def _tree_average(self, wp, outer_c, scope: str, num_workers: int,
-                      W=None):
+                      W=None, alive=None):
+        if alive is not None:
+            disp = faults_mod.masked_dispersion_tree(
+                wp, alive).astype(jnp.float32)
+            if scope == "inner":
+                wp = faults_mod.masked_average_all_tree(
+                    wp, alive, groups=max(self.schedule.inner_groups, 1))
+                return wp, outer_c, disp
+            if W is not None:
+                return faults_mod.masked_mix_tree(wp, W, alive), \
+                    outer_c, disp
+            g = self._all_groups()
+            wp = faults_mod.masked_average_all_tree(wp, alive,
+                                                    groups=max(g, 1))
+            return wp, outer_c, disp
         disp = worker_dispersion(wp).astype(jnp.float32)
         if scope == "inner":
             return (average_inner(wp, max(self.schedule.inner_groups, 1)),
@@ -665,38 +746,93 @@ class PhaseEngine:
             average = partial(self._tree_average, num_workers=num_workers)
         grads_fn = (make_plane_step(self.loss_fn, spec) if flat_native
                     else None)
+        fp = self._faults()
 
-        def comp_event(wp_c, resid, scope, step, W=None):
+        def comp_event(wp_c, resid, scope, step, W=None, alive=None):
             # encode -> event -> decode on the plane; tree carries pack
             # around the (rare) event only
             plane = wp_c if use_flat else spec.pack(wp_c)
             plane, resid, _ = self._compressed_plane_event(
-                spec, plane, resid, scope, step, state.dec_key, W=W)
+                spec, plane, resid, scope, step, state.dec_key, W=W,
+                alive=alive)
             return (plane if use_flat else spec.unpack(plane)), resid
 
+        def warm_start(wp_c, opt_c, resid, alive_prev, rejoined):
+            # rejoining rows take the current alive average, with
+            # optimizer state and error-feedback residual zeroed —
+            # static under fp.has_rejoin, so crash-only plans trace
+            # nothing extra
+            if use_flat:
+                glob = faults_mod.masked_mean(wp_c, alive_prev)
+                codes = spec.rounding_codes()
+                if codes is not None:
+                    glob = round_to_codes(glob, codes)
+                wp_c = faults_mod.select_rows(
+                    jnp.broadcast_to(glob[None], wp_c.shape), wp_c,
+                    rejoined)
+            else:
+                wp_c = faults_mod.warm_start_tree(wp_c, alive_prev,
+                                                  rejoined)
+            if flat_native:
+                opt_c = tuple(faults_mod.zero_rows(s, rejoined)
+                              for s in opt_c)
+            else:
+                opt_c = faults_mod.zero_rows_tree(opt_c, rejoined)
+            if comp is not None:
+                resid = faults_mod.zero_rows(resid, rejoined)
+            return wp_c, opt_c, resid
+
         def body(carry, xs_t):
-            wp_c, opt_c, outer_c, key, step, sst, resid = carry
+            wp_c, opt_c, outer_c, key, step, sst, resid, fst = carry
             step = step + 1
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, num_workers)
             batch = fetch(xs_t)
+            alive = umask = None
+            if fp is not None:
+                alive_prev = fst.alive
+                fst, _, alive, umask, rejoined = fp.transition(
+                    fst, step, state.dec_key)
+                if fp.has_rejoin:
+                    wp_c, opt_c, resid = warm_start(
+                        wp_c, opt_c, resid, alive_prev, rejoined)
             if flat_native:
                 losses, _, gplane = grads_fn(wp_c, batch, rngs)
                 scal = self.optimizer.plane_scalars(step)
                 wp_c, opt_c, outer_c, resid, sst, disp, code = \
-                    self._flat_native_step(spec, wp_c, gplane, opt_c,
-                                           outer_c, scal, step, sst,
-                                           state.dec_key, resid=resid)
+                    self._flat_native_step(
+                        spec, wp_c, gplane, opt_c, outer_c, scal, step,
+                        sst, state.dec_key, resid=resid,
+                        fmask=None if fp is None else (alive, umask))
             else:
                 wp = spec.unpack(wp_c) if use_flat else wp_c
-                wp, opt_c, losses, _ = self.worker_step(
+                wp_new, opt_new, losses, _ = self.worker_step(
                     wp, opt_c, batch, step, rngs)
-                wp_c = spec.pack(wp) if use_flat else wp
+                if fp is not None:
+                    # dead/straggling rows keep params AND optimizer
+                    # state (zeroed grads would still advance momentum)
+                    if use_flat:
+                        wp_new_c = spec.pack(wp_new)
+                        wp_c = faults_mod.select_rows(wp_new_c, wp_c,
+                                                      umask)
+                    else:
+                        wp_c = faults_mod.select_rows_tree(wp_new, wp,
+                                                           umask)
+                    opt_c = faults_mod.select_rows_tree(opt_new, opt_c,
+                                                        umask)
+                else:
+                    opt_c = opt_new
+                    wp_c = spec.pack(wp_new) if use_flat else wp_new
                 # the Eq. 4 dispersion is measured EVERY step (post
                 # update, pre average): the stateful decision consumes
                 # it and the trace records the true diagnostic on
                 # non-averaging steps too
-                if use_flat:
+                if fp is not None:
+                    disp = (faults_mod.masked_dispersion(wp_c, alive)
+                            if use_flat else
+                            faults_mod.masked_dispersion_tree(wp_c,
+                                                              alive))
+                elif use_flat:
                     glob = jnp.mean(wp_c, axis=0)
                     disp = (jnp.sum(jnp.square(wp_c - glob[None]))
                             / num_workers)
@@ -711,10 +847,10 @@ class PhaseEngine:
                     W = self._event_W(step, state.dec_key)
                     if comp is not None:
                         wp_c, resid = comp_event(wp_c, resid, "all",
-                                                 step, W=W)
+                                                 step, W=W, alive=alive)
                     else:
                         wp_c, outer_c, _ = average(wp_c, outer_c, "all",
-                                                   W=W)
+                                                   W=W, alive=alive)
                 else:
                     def none_branch(args):
                         return args
@@ -722,31 +858,38 @@ class PhaseEngine:
                     def inner_branch(args):
                         if comp is not None:
                             pl_, r_ = comp_event(args[0], args[2],
-                                                 "inner", step)
+                                                 "inner", step,
+                                                 alive=alive)
                             return pl_, args[1], r_
-                        return average(args[0], args[1],
-                                       "inner")[:2] + (args[2],)
+                        return average(args[0], args[1], "inner",
+                                       alive=alive)[:2] + (args[2],)
 
                     def all_branch(args):
                         W = self._event_W(step, state.dec_key)
                         if comp is not None:
                             pl_, r_ = comp_event(args[0], args[2],
-                                                 "all", step, W=W)
+                                                 "all", step, W=W,
+                                                 alive=alive)
                             return pl_, args[1], r_
                         return average(args[0], args[1], "all",
-                                       W=W)[:2] + (args[2],)
+                                       W=W, alive=alive)[:2] + (args[2],)
 
                     wp_c, outer_c, resid = jax.lax.switch(
                         code, [none_branch, inner_branch, all_branch],
                         (wp_c, outer_c, resid))
-            return ((wp_c, opt_c, outer_c, key, step, sst, resid),
-                    (jnp.mean(losses), disp.astype(jnp.float32), code))
+            loss_t = (jnp.mean(losses) if fp is None
+                      else jnp.sum(losses * alive) / jnp.sum(alive))
+            return ((wp_c, opt_c, outer_c, key, step, sst, resid, fst),
+                    (loss_t, disp.astype(jnp.float32), code))
 
         sst0 = (state.sched if isinstance(state.sched, SchedState)
                 else sched.init_sched_state())
+        fst0 = (state.fault if isinstance(state.fault, FaultState)
+                else (faults_mod.init_fault_state(num_workers)
+                      if fp is not None else ()))
         carry0 = (carry_p, carry_s, carry_o, state.key, state.step, sst0,
-                  state.resid)
-        (wp_c, opt_c, outer_c, key, step, sst, resid), \
+                  state.resid, fst0)
+        (wp_c, opt_c, outer_c, key, step, sst, resid, fst), \
             (loss, disp, code) = \
             jax.lax.scan(body, carry0, xs, unroll=self.scan_unroll)
 
@@ -760,7 +903,7 @@ class PhaseEngine:
         else:
             wp, opt_state, outer_state = wp_c, opt_c, outer_c
         new_state = EngineState(wp, opt_state, outer_state, key,
-                                state.dec_key, step, sst, resid)
+                                state.dec_key, step, sst, resid, fst)
         return new_state, {"loss": loss, "dispersion": disp,
                            "avg_code": code}
 
@@ -783,7 +926,7 @@ class PhaseEngine:
         return idx
 
     def _psum_avg_event(self, spec, plane, outer_c, scope: str, glob,
-                        ml: int, W=None):
+                        ml: int, W=None, alive=None, alive_full=None):
         """Cross-shard averaging event (no optimizer update) on this
         shard's (M_l, P) rows. ``glob`` is the (already psum'd) global
         worker mean — computed once per step OUTSIDE the switch, where
@@ -797,23 +940,35 @@ class PhaseEngine:
         codes = spec.rounding_codes()
         ax = self._worker_axes()
         if scope == "all" and W is not None:
+            if alive is not None:
+                W = faults_mod.degraded_matrix(W.astype(jnp.float32),
+                                               alive_full)
             full = jax.lax.all_gather(plane, ax, axis=0, tiled=True)
             rows = jax.lax.dynamic_slice_in_dim(
                 W, self._shard_index() * ml, ml, 0)
             out = jnp.dot(rows, full, preferred_element_type=jnp.float32)
             if codes is not None:
                 out = round_to_codes(out, codes)
+            if alive is not None:
+                out = faults_mod.select_rows(out, plane, alive)
             return out, outer_c
         if scope == "inner" or (scope == "all" and self._all_groups() > 1):
             groups = (max(self.schedule.inner_groups, 1)
                       if scope == "inner" else self._all_groups())
             full = jax.lax.all_gather(plane, ax, axis=0, tiled=True)
-            full, _ = plane_average_ref(full, groups=groups, codes=codes)
+            full, _ = plane_average_ref(full, groups=groups, codes=codes,
+                                        alive=alive_full)
             out = jax.lax.dynamic_slice_in_dim(
                 full, self._shard_index() * ml, ml, 0)
             return out, outer_c
         if codes is not None:
             glob = round_to_codes(glob, codes)
+        if alive is not None:
+            # ``glob`` is the alive-masked mean (psum'd by the caller);
+            # dead rows keep their last parameters
+            return (faults_mod.select_rows(
+                jnp.broadcast_to(glob[None], plane.shape), plane, alive),
+                outer_c)
         if self.outer is not None and outer_c != ():
             prev, vel = outer_c
             g = prev - glob
@@ -827,7 +982,8 @@ class PhaseEngine:
         return jnp.broadcast_to(glob[None], plane.shape), outer_c
 
     def _psum_compressed_event(self, spec, plane, resid, scope: str, step,
-                               dec_key, ml: int, m_global: int, W=None):
+                               dec_key, ml: int, m_global: int, W=None,
+                               alive=None, alive_full=None):
         """Compressed cross-shard averaging event on this shard's
         (M_l, P) rows. Encoding is row-local (per-row scales, per-row
         fold_in uniforms keyed by the GLOBAL row id ``i0 + arange``), so
@@ -843,9 +999,14 @@ class PhaseEngine:
         rows = self._shard_index() * ml + jnp.arange(ml, dtype=jnp.int32)
         u = (row_uniforms(dec_key, step, rows, spec.width)
              if comp.stochastic else None)
-        q, resid = encode_decode(plane, resid, wire=comp.wire, u=u,
+        q, r_new = encode_decode(plane, resid, wire=comp.wire, u=u,
                                  error_feedback=comp.error_feedback)
+        resid = (r_new if alive is None
+                 else faults_mod.select_rows(r_new, resid, alive))
         if scope == "all" and W is not None:
+            if alive is not None:
+                W = faults_mod.degraded_matrix(W.astype(jnp.float32),
+                                               alive_full)
             full = jax.lax.all_gather(q, ax, axis=0, tiled=True)
             wrows = jax.lax.dynamic_slice_in_dim(
                 W, self._shard_index() * ml, ml, 0)
@@ -855,21 +1016,33 @@ class PhaseEngine:
             groups = (max(self.schedule.inner_groups, 1)
                       if scope == "inner" else self._all_groups())
             full = jax.lax.all_gather(q, ax, axis=0, tiled=True)
-            g = jnp.mean(
-                full.reshape(groups, m_global // groups, -1), axis=1)
-            full = jnp.repeat(g, m_global // groups, axis=0)
+            if alive is not None:
+                full = faults_mod.masked_group_mean(full, alive_full,
+                                                    groups)
+            else:
+                g = jnp.mean(
+                    full.reshape(groups, m_global // groups, -1), axis=1)
+                full = jnp.repeat(g, m_global // groups, axis=0)
             out = jax.lax.dynamic_slice_in_dim(
                 full, self._shard_index() * ml, ml, 0)
         else:
-            glob = jax.lax.psum(jnp.sum(q, axis=0), ax) / m_global
+            if alive is not None:
+                glob = (jax.lax.psum(
+                    jnp.sum(q * alive[:, None], axis=0), ax)
+                    / jax.lax.psum(jnp.sum(alive), ax))
+            else:
+                glob = jax.lax.psum(jnp.sum(q, axis=0), ax) / m_global
             out = jnp.broadcast_to(glob[None], plane.shape)
         if codes is not None:
             out = round_to_codes(out, codes)
+        if alive is not None:
+            out = faults_mod.select_rows(out, plane, alive)
         return out, resid
 
     def _flat_native_step_psum(self, spec, plane, gplane, planes, outer_c,
                                scalars, step, sst, dec_key,
-                               m_global: int, ml: int, resid=()):
+                               m_global: int, ml: int, resid=(),
+                               fmask=None):
         """psum-mode flat-native step: shard-local plane update (hoisted
         before the switch), then the always-on Eq. 4 dispersion — ONE
         psum of the per-shard column sums gives the global mean, one
@@ -880,12 +1053,27 @@ class PhaseEngine:
         sched = self.schedule
         comp = self._comp()
         ax = self._worker_axes()
-        plane, planes = plane_update_ref(
+        alive_full, alive, umask = (fmask if fmask is not None
+                                    else (None, None, None))
+        upd, new_planes = plane_update_ref(
             plane, gplane, planes, scalars, kind=self.optimizer.plane_kind,
             codes=spec.rounding_codes(), **self.optimizer.plane_hypers())
-        glob = jax.lax.psum(jnp.sum(plane, axis=0), ax) / m_global
-        disp = jax.lax.psum(
-            jnp.sum(jnp.square(plane - glob[None])), ax) / m_global
+        if fmask is None:
+            plane, planes = upd, new_planes
+            glob = jax.lax.psum(jnp.sum(plane, axis=0), ax) / m_global
+            disp = jax.lax.psum(
+                jnp.sum(jnp.square(plane - glob[None])), ax) / m_global
+        else:
+            # dead / straggling rows keep params AND state planes
+            plane = faults_mod.select_rows(upd, plane, umask)
+            planes = tuple(faults_mod.select_rows(n, o, umask)
+                           for n, o in zip(new_planes, planes))
+            n_alive = jax.lax.psum(jnp.sum(alive), ax)
+            glob = jax.lax.psum(
+                jnp.sum(plane * alive[:, None], axis=0), ax) / n_alive
+            disp = jax.lax.psum(
+                jnp.sum(jnp.square(plane - glob[None]) * alive[:, None]),
+                ax) / n_alive
         ec = self._sched_event_cost(spec.width, m_global)
         code, sst = sched.decision_state(step, sst, disp, dec_key,
                                          event_cost=ec)
@@ -896,10 +1084,11 @@ class PhaseEngine:
             if comp is not None:
                 plane, resid = self._psum_compressed_event(
                     spec, plane, resid, "all", step, dec_key, ml,
-                    m_global, W=W)
+                    m_global, W=W, alive=alive, alive_full=alive_full)
             else:
                 plane, outer_c = self._psum_avg_event(
-                    spec, plane, outer_c, "all", glob, ml, W=W)
+                    spec, plane, outer_c, "all", glob, ml, W=W,
+                    alive=alive, alive_full=alive_full)
             return plane, planes, outer_c, resid, sst, disp, code
 
         def none_branch(args):
@@ -909,20 +1098,22 @@ class PhaseEngine:
             if comp is not None:
                 pl_, r_ = self._psum_compressed_event(
                     spec, args[0], args[2], "inner", step, dec_key, ml,
-                    m_global)
+                    m_global, alive=alive, alive_full=alive_full)
                 return pl_, args[1], r_
-            return self._psum_avg_event(spec, args[0], args[1], "inner",
-                                        glob, ml) + (args[2],)
+            return self._psum_avg_event(
+                spec, args[0], args[1], "inner", glob, ml,
+                alive=alive, alive_full=alive_full) + (args[2],)
 
         def all_branch(args):
             W = self._event_W(step, dec_key)
             if comp is not None:
                 pl_, r_ = self._psum_compressed_event(
                     spec, args[0], args[2], "all", step, dec_key, ml,
-                    m_global, W=W)
+                    m_global, W=W, alive=alive, alive_full=alive_full)
                 return pl_, args[1], r_
-            return self._psum_avg_event(spec, args[0], args[1], "all",
-                                        glob, ml, W=W) + (args[2],)
+            return self._psum_avg_event(
+                spec, args[0], args[1], "all", glob, ml, W=W,
+                alive=alive, alive_full=alive_full) + (args[2],)
 
         plane, outer_c, resid = jax.lax.switch(
             code, [none_branch, inner_branch, all_branch],
@@ -973,9 +1164,10 @@ class PhaseEngine:
         ax = self._worker_axes()
         i0 = self._shard_index() * ml
         exact = self.collective == "gather"
+        fp = self._faults()
 
         def body(carry, xs_t):
-            wp_c, opt_c, outer_c, key, step, sst, resid = carry
+            wp_c, opt_c, outer_c, key, step, sst, resid, fst = carry
             step = step + 1
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, m_global)
@@ -992,12 +1184,48 @@ class PhaseEngine:
                 resid_full = (jax.lax.all_gather(resid, ax, axis=0,
                                                  tiled=True)
                               if comp is not None else resid)
+                fmask = None
+                if fp is not None:
+                    # fault rows gather like resid: the transition and
+                    # warm start run on the FULL worker set, so the step
+                    # reproduces the single-device fault stream bitwise
+                    fst_full = FaultState(
+                        jax.lax.all_gather(fst.alive, ax, axis=0,
+                                           tiled=True),
+                        jax.lax.all_gather(fst.staleness, ax, axis=0,
+                                           tiled=True))
+                    alive_prev = fst_full.alive
+                    fst_full, _, alive_f, umask_f, rejoined_f = \
+                        fp.transition(fst_full, step, state.dec_key)
+                    if fp.has_rejoin:
+                        glob_p = faults_mod.masked_mean(wp_full,
+                                                        alive_prev)
+                        codes = spec.rounding_codes()
+                        if codes is not None:
+                            glob_p = round_to_codes(glob_p, codes)
+                        wp_full = faults_mod.select_rows(
+                            jnp.broadcast_to(glob_p[None], wp_full.shape),
+                            wp_full, rejoined_f)
+                        opt_full = tuple(
+                            faults_mod.zero_rows(s, rejoined_f)
+                            for s in opt_full)
+                        if comp is not None:
+                            resid_full = faults_mod.zero_rows(
+                                resid_full, rejoined_f)
+                    fst = FaultState(
+                        jax.lax.dynamic_slice_in_dim(
+                            fst_full.alive, i0, ml, 0),
+                        jax.lax.dynamic_slice_in_dim(
+                            fst_full.staleness, i0, ml, 0))
+                    fmask = (alive_f, umask_f)
                 losses, _, gplane = grads_fn(wp_full, batch, rngs)
                 wp_full, opt_full, outer_c, resid_full, sst, disp, code = \
                     self._flat_native_step(spec, wp_full, gplane, opt_full,
                                            outer_c, scal, step, sst,
-                                           state.dec_key, resid=resid_full)
-                loss_t = jnp.mean(losses)
+                                           state.dec_key, resid=resid_full,
+                                           fmask=fmask)
+                loss_t = (jnp.mean(losses) if fp is None else
+                          jnp.sum(losses * alive_f) / jnp.sum(alive_f))
                 wp_c = jax.lax.dynamic_slice_in_dim(wp_full, i0, ml, 0)
                 opt_c = tuple(
                     jax.lax.dynamic_slice_in_dim(s, i0, ml, 0)
@@ -1006,22 +1234,50 @@ class PhaseEngine:
                     resid = jax.lax.dynamic_slice_in_dim(
                         resid_full, i0, ml, 0)
             else:
+                fmask = None
+                if fp is not None:
+                    alive_prev = fst.alive
+                    fst, alive_fl, alive_l, umask_l, rejoined_l = \
+                        fp.transition(fst, step, state.dec_key,
+                                      row0=i0, num_rows=ml)
+                    if fp.has_rejoin:
+                        glob_p = (jax.lax.psum(jnp.sum(
+                            wp_c * alive_prev[:, None], axis=0), ax)
+                            / jax.lax.psum(jnp.sum(alive_prev), ax))
+                        codes = spec.rounding_codes()
+                        if codes is not None:
+                            glob_p = round_to_codes(glob_p, codes)
+                        wp_c = faults_mod.select_rows(
+                            jnp.broadcast_to(glob_p[None], wp_c.shape),
+                            wp_c, rejoined_l)
+                        opt_c = tuple(faults_mod.zero_rows(s, rejoined_l)
+                                      for s in opt_c)
+                        if comp is not None:
+                            resid = faults_mod.zero_rows(resid, rejoined_l)
+                    fmask = (alive_fl, alive_l, umask_l)
                 rngs = jax.lax.dynamic_slice_in_dim(rngs, i0, ml, 0)
                 losses, _, gplane = grads_fn(wp_c, batch, rngs)
                 wp_c, opt_c, outer_c, resid, sst, disp, code = \
                     self._flat_native_step_psum(spec, wp_c, gplane, opt_c,
                                                 outer_c, scal, step, sst,
                                                 state.dec_key, m_global,
-                                                ml, resid=resid)
-                loss_t = jax.lax.psum(jnp.sum(losses), ax) / m_global
-            return ((wp_c, opt_c, outer_c, key, step, sst, resid),
+                                                ml, resid=resid,
+                                                fmask=fmask)
+                loss_t = (jax.lax.psum(jnp.sum(losses), ax) / m_global
+                          if fp is None else
+                          jax.lax.psum(jnp.sum(losses * alive_l), ax)
+                          / jax.lax.psum(jnp.sum(alive_l), ax))
+            return ((wp_c, opt_c, outer_c, key, step, sst, resid, fst),
                     (loss_t, disp.astype(jnp.float32), code))
 
         sst0 = (state.sched if isinstance(state.sched, SchedState)
                 else sched.init_sched_state())
+        fst0 = (state.fault if isinstance(state.fault, FaultState)
+                else (faults_mod.init_fault_state(ml)
+                      if fp is not None else ()))
         carry0 = (carry_p, carry_s, carry_o, state.key, state.step, sst0,
-                  state.resid)
-        (wp_c, opt_c, outer_c, key, step, sst, resid), \
+                  state.resid, fst0)
+        (wp_c, opt_c, outer_c, key, step, sst, resid, fst), \
             (loss, disp, code) = \
             jax.lax.scan(body, carry0, xs, unroll=self.scan_unroll)
 
@@ -1032,7 +1288,7 @@ class PhaseEngine:
             outer_state = (spec.unpack1(outer_c[0]),
                            spec.unpack1(outer_c[1], dtypes=jnp.float32))
         new_state = EngineState(wp, opt_state, outer_state, key,
-                                state.dec_key, step, sst, resid)
+                                state.dec_key, step, sst, resid, fst)
         return new_state, {"loss": loss, "dispersion": disp,
                            "avg_code": code}
 
@@ -1044,7 +1300,8 @@ class PhaseEngine:
             jax.tree.map(lambda _: P(), state.outer_state),
             P(), P(), P(),
             jax.tree.map(lambda _: P(), state.sched),
-            jax.tree.map(lambda _: ax, state.resid))
+            jax.tree.map(lambda _: ax, state.resid),
+            jax.tree.map(lambda _: ax, state.fault))
 
     def _trace_specs(self):
         return {"loss": P(), "dispersion": P(), "avg_code": P()}
@@ -1182,6 +1439,15 @@ class PhaseEngine:
             return jax.tree.map(lambda x: jnp.asarray(jax.device_get(x)),
                                 tree)
 
+        def cons(wp):
+            # under a fault plan the consensus is over alive workers
+            # only — dead rows hold stale (or warm-start) parameters
+            if (self._faults() is not None
+                    and isinstance(state.fault, FaultState)):
+                alive = jnp.asarray(jax.device_get(state.fault.alive))
+                return faults_mod.masked_mean_tree(wp, alive)
+            return consensus(wp)
+
         def consume(t, k, trace):
             trace = jax.device_get(trace)
             for i in range(k):
@@ -1197,7 +1463,7 @@ class PhaseEngine:
             if needs_eval and t % record_every == 0:
                 if eval_fn is not None:
                     hist["eval"].append(
-                        (t, eval_fn(consensus(unshard(
+                        (t, eval_fn(cons(unshard(
                             state.worker_params)))))
                 if worker_eval_fn is not None:
                     hist["worker_eval"].append(
@@ -1222,7 +1488,7 @@ class PhaseEngine:
                 state, trace = self.run_phase_indexed(state, data.arrays,
                                                       idx)
                 t = consume(t, take, trace)
-            final = consensus(unshard(state.worker_params))
+            final = cons(unshard(state.worker_params))
             return (final, hist, state) if return_state else (final,
                                                               hist)
 
@@ -1257,7 +1523,7 @@ class PhaseEngine:
         finally:
             if pf is not None:
                 pf.close()
-        final = consensus(unshard(state.worker_params))
+        final = cons(unshard(state.worker_params))
         return (final, hist, state) if return_state else (final, hist)
 
     # ---- legacy host-driven loop (benchmark baseline / equivalence) ------
@@ -1274,6 +1540,52 @@ class PhaseEngine:
         code, sst = self.schedule.decision_state(step, sst, disp, dec_key,
                                                  event_cost=ec)
         return wp, opt_state, jnp.mean(losses), disp, code, sst
+
+    def _run_host_faults(self, params, batches, *, num_workers: int,
+                         seed: int = 0, record_every: int = 0,
+                         eval_fn=None, worker_eval_fn=None):
+        """Host-driven loop under a fault plan: one :meth:`run_phase`
+        dispatch per step, decisions and metrics read on host.
+
+        Unlike the no-fault host loop, this path does NOT re-derive the
+        step from tree ops: masked-update graphs large enough to carry
+        the fault transition compile with different FMA contraction
+        than the scan bodies (which sub-expressions LLVM fuses depends
+        on the whole surrounding graph), drifting a second
+        implementation one ulp per step no matter how the ops are
+        ordered. Driving the SAME compiled phase one step at a time
+        keeps the host loop's per-step dispatch granularity and host
+        decision reads while making bit-identity with :meth:`run` hold
+        by construction; the independent-implementation check under
+        faults is the flat-native / flat / tree triple, which tier-1
+        asserts bitwise."""
+        state = self.init(params, num_workers, seed)
+        hist = {"loss": [], "dispersion": [], "disp_trace": [],
+                "averages": 0, "eval": [], "worker_eval": []}
+
+        def cons(state):
+            alive = jnp.asarray(jax.device_get(state.fault.alive))
+            return faults_mod.masked_mean_tree(state.worker_params,
+                                               alive)
+
+        step = 0
+        for batch in batches:
+            step += 1
+            state, trace = self.run_phase(state, tree_stack([batch]))
+            trace = jax.device_get(trace)
+            disp = float(trace["dispersion"][0])
+            if int(trace["avg_code"][0]):
+                hist["dispersion"].append((step, disp))
+                hist["averages"] += 1
+            if record_every and step % record_every == 0:
+                hist["loss"].append((step, float(trace["loss"][0])))
+                hist["disp_trace"].append((step, disp))
+                if eval_fn is not None:
+                    hist["eval"].append((step, eval_fn(cons(state))))
+                if worker_eval_fn is not None:
+                    hist["worker_eval"].append(
+                        (step, worker_eval_fn(state.worker_params)))
+        return cons(state), hist
 
     @partial(jax.jit, static_argnums=(0, 5))
     def _host_compressed_average(self, wp, resid, dec_key, step,
@@ -1311,8 +1623,16 @@ class PhaseEngine:
         transition on the same per-step dispersion) — kept as the
         dispatch-bound baseline the engine is benchmarked against. The
         history dict has the same keys and semantics as :meth:`run`'s,
-        including ``disp_trace`` and ``worker_eval``."""
+        including ``disp_trace`` and ``worker_eval``. Under a fault
+        plan the loop delegates to :meth:`_run_host_faults`, which
+        keeps the per-step dispatch shape but drives the shared
+        compiled phase."""
         self._check_workers(num_workers)
+        if self._faults() is not None:
+            return self._run_host_faults(
+                params, batches, num_workers=num_workers, seed=seed,
+                record_every=record_every, eval_fn=eval_fn,
+                worker_eval_fn=worker_eval_fn)
         state = self.init(params, num_workers, seed)
         wp, opt_state, outer_state = (state.worker_params, state.opt_state,
                                       state.outer_state)
@@ -1328,8 +1648,8 @@ class PhaseEngine:
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, num_workers)
             wp, opt_state, loss, disp, code, sst = self._host_step(
-                wp, opt_state, batch, jnp.asarray(step, jnp.int32), rngs,
-                sst, state.dec_key, ec)
+                wp, opt_state, batch, jnp.asarray(step, jnp.int32),
+                rngs, sst, state.dec_key, ec)
             code = int(code)
             if code:
                 W = (self._event_W(jnp.asarray(step, jnp.int32),

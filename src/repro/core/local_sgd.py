@@ -45,11 +45,12 @@ class LocalSGD:
     optimizer: Any
     schedule: AveragingSchedule
     outer: OuterOptimizer | None = None
+    faults: Any = None  # repro.faults.FaultPlan | None
 
     @cached_property
     def engine(self) -> PhaseEngine:
         return PhaseEngine(self.loss_fn, self.optimizer, self.schedule,
-                           outer=self.outer)
+                           outer=self.outer, faults=self.faults)
 
     # ---- jitted pieces ---------------------------------------------------
     def init(self, params, num_workers: int):

@@ -51,6 +51,45 @@ def rho(beta2: float, sigma2: float, w0, w_star) -> float:
     return beta2 * d2 / max(sigma2, 1e-30)
 
 
+def predict_averaging_benefit(sigma2_workers, *, beta2: float = 0.0,
+                              dist2: float = 0.0, alive=None) -> dict:
+    """Predict what one averaging event buys from measured PER-WORKER
+    gradient variances (paper §2.2, Lemma 1 asymptotics).
+
+    Averaging n i.i.d.-noise workers divides the noise floor by n, so
+    with ``sigma2_bar`` the mean alive-worker variance the predicted
+    per-step variance drops ``sigma2_bar * (1 - 1/n)``. Heterogeneous
+    (non-IID) shards raise the measured σ² — the model predicts a LARGER
+    absolute benefit — while dead workers shrink n and with it the
+    reduction factor. ``rho = β² d² / σ̄²`` (Eq. 5) large means the
+    bias term dominates and frequent averaging helps beyond the noise
+    floor.
+
+    Returns a dict with ``n_alive``, ``sigma2_bar``, ``rho``,
+    ``variance_reduction`` (the 1/n factor) and ``benefit`` (the
+    absolute predicted variance drop).
+    """
+    s2 = np.asarray(sigma2_workers, dtype=np.float64).reshape(-1)
+    if alive is None:
+        a = np.ones_like(s2)
+    else:
+        a = (np.asarray(alive, dtype=np.float64).reshape(-1) > 0)
+        a = a.astype(np.float64)
+        if a.shape != s2.shape:
+            raise ValueError(f"alive {a.shape} vs sigma2 {s2.shape}")
+    n = float(a.sum())
+    if n < 1:
+        raise ValueError("predict_averaging_benefit needs >=1 alive worker")
+    sigma2_bar = float((s2 * a).sum() / n)
+    return {
+        "n_alive": n,
+        "sigma2_bar": sigma2_bar,
+        "rho": float(beta2) * float(dist2) / max(sigma2_bar, 1e-30),
+        "variance_reduction": 1.0 / n,
+        "benefit": sigma2_bar * (1.0 - 1.0 / n),
+    }
+
+
 def empirical_variance_fn(kind: str, X, y):
     """Definition 1 for a dataset: jitted Δ(w)."""
     from repro.models.convex import gradient_variance

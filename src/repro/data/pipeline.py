@@ -24,29 +24,98 @@ import numpy as np
 
 
 class WorkerSharder:
-    """Deterministic per-worker sampler over an in-memory dataset."""
+    """Deterministic per-worker sampler over an in-memory dataset.
+
+    Modes: ``permute`` (distinct per-worker epoch permutations, §3.2),
+    ``replacement`` (common-pool i.i.d. draws, Eq. 2), and
+    ``dirichlet`` — heterogeneous (non-IID) shards via per-class
+    Dirichlet(α) label skew: each class's probability mass is split
+    across workers by one Dirichlet draw, giving every worker its own
+    biased pool to sample (with replacement) from. Small α → near
+    single-class workers; large α → approaches ``replacement``.
+    ``dirichlet`` requires ``labels`` (the (N,) integer class array)."""
 
     def __init__(self, num_samples: int, num_workers: int, *, seed: int = 0,
-                 mode: str = "permute"):
-        assert mode in ("permute", "replacement")
+                 mode: str = "permute", labels=None, alpha: float = 0.5):
+        assert mode in ("permute", "replacement", "dirichlet")
         self.n = num_samples
         self.m = num_workers
         self.mode = mode
+        self.alpha = float(alpha)
         if mode == "permute":
             self.rngs = [np.random.default_rng(seed * 10_007 + i)
                          for i in range(num_workers)]
             self._perms = [r.permutation(num_samples) for r in self.rngs]
             self._cursor = [0] * num_workers
+        elif mode == "dirichlet":
+            if labels is None:
+                raise ValueError(
+                    "mode='dirichlet' needs the (N,) labels array to "
+                    "build label-skewed worker pools")
+            labels = np.asarray(labels).reshape(-1)
+            if labels.shape[0] != num_samples:
+                raise ValueError(
+                    f"labels cover {labels.shape[0]} samples, dataset "
+                    f"has {num_samples}")
+            if self.alpha <= 0:
+                raise ValueError(f"dirichlet alpha must be > 0, "
+                                 f"got {alpha}")
+            self._rng = np.random.default_rng(seed * 10_007)
+            self._pools = self._dirichlet_pools(labels)
         else:
             # replacement mode draws all workers (and all steps of a
             # block) from ONE stacked stream in a single batched
             # ``integers`` call — no per-worker generators/permutations
             self._rng = np.random.default_rng(seed * 10_007)
 
+    def _dirichlet_pools(self, labels) -> list[np.ndarray]:
+        """Per-worker index pools: each class's samples are dealt to
+        workers in proportion to one Dirichlet(α) draw. Every pool is
+        guaranteed non-empty (a worker dealt nothing steals one sample
+        from the largest pool), so degenerate α never strands a
+        worker."""
+        pools = [[] for _ in range(self.m)]
+        for cls in np.unique(labels):
+            idx = np.flatnonzero(labels == cls)
+            idx = self._rng.permutation(idx)
+            p = self._rng.dirichlet(np.full(self.m, self.alpha))
+            # cumulative proportional split (exact partition of idx)
+            cuts = np.floor(np.cumsum(p) * len(idx)).astype(int)
+            start = 0
+            for i, end in enumerate(cuts):
+                pools[i].extend(idx[start:end])
+                start = end
+            pools[-1].extend(idx[start:])
+        pools = [np.asarray(sorted(pl), np.int64) for pl in pools]
+        for i in range(self.m):
+            if len(pools[i]) == 0:
+                donor = int(np.argmax([len(pl) for pl in pools]))
+                pools[i] = pools[donor][-1:]
+                pools[donor] = pools[donor][:-1]
+        return pools
+
+    def class_fractions(self, labels) -> np.ndarray:
+        """(M, C) per-worker class composition of the dirichlet pools —
+        the heterogeneity diagnostic benchmarks record."""
+        assert self.mode == "dirichlet"
+        labels = np.asarray(labels).reshape(-1)
+        classes = np.unique(labels)
+        out = np.zeros((self.m, len(classes)))
+        for i, pool in enumerate(self._pools):
+            for j, cls in enumerate(classes):
+                out[i, j] = np.mean(labels[pool] == cls)
+        return out
+
     def next_indices(self, batch: int) -> np.ndarray:
         """(num_workers, batch) int — each worker's next sample indices."""
         if self.mode == "replacement":
             return self._rng.integers(0, self.n, (self.m, batch))
+        if self.mode == "dirichlet":
+            # one stream, worker-major — same draw order as a stacked
+            # next_index_block, so blocks equal successive calls
+            return np.stack([
+                pool[self._rng.integers(0, len(pool), batch)]
+                for pool in self._pools])
         out = np.empty((self.m, batch), np.int64)
         for i in range(self.m):
             idx = []
@@ -64,8 +133,8 @@ class WorkerSharder:
         """(steps, num_workers, batch) int — a whole phase block of
         indices. In replacement mode this is ONE batched draw (numpy
         fills C-order from the bit stream, so it equals ``steps``
-        successive :meth:`next_indices` calls); permute mode walks the
-        per-worker epoch cursors."""
+        successive :meth:`next_indices` calls); permute and dirichlet
+        modes walk their per-worker state step by step."""
         if self.mode == "replacement":
             return self._rng.integers(0, self.n, (steps, self.m, batch))
         return np.stack([self.next_indices(batch) for _ in range(steps)])
@@ -98,7 +167,8 @@ class DeviceDataset:
     """
 
     def __init__(self, arrays, num_workers: int, *, batch_size: int = 0,
-                 seed: int = 0, mode: str = "replacement", indices=None):
+                 seed: int = 0, mode: str = "replacement", indices=None,
+                 labels=None, alpha: float = 0.5):
         import jax
         import jax.numpy as jnp
         self.arrays = jax.tree.map(
@@ -114,7 +184,8 @@ class DeviceDataset:
         if indices is None:
             assert batch_size > 0, "batch_size required without indices"
             self.sharder = WorkerSharder(self.num_samples, num_workers,
-                                         seed=seed, mode=mode)
+                                         seed=seed, mode=mode,
+                                         labels=labels, alpha=alpha)
         else:
             self._indices = np.asarray(indices)
             assert self._indices.shape[1] == num_workers, \
@@ -196,7 +267,13 @@ class Prefetcher:
             raise StopIteration
         item = self._q.get()
         if item is self._END:
+            # the stream is over either way: stop BEFORE raising, so a
+            # consumer that catches the producer's error and calls
+            # next() again gets StopIteration instead of blocking
+            # forever on the now-empty queue
+            self._stop.set()
             if self._err is not None:
-                raise self._err
+                err, self._err = self._err, None
+                raise err
             raise StopIteration
         return item

@@ -153,12 +153,26 @@ def _pad_cols(x, p_pad):
 
 @functools.partial(jax.jit,
                    static_argnames=("groups", "block_p", "interpret"))
-def avg_disp(plane, *, groups: int = 1, block_p: int = DEFAULT_BLOCK_P,
+def avg_disp(plane, *, groups: int = 1, alive=None,
+             block_p: int = DEFAULT_BLOCK_P,
              interpret: bool | None = None):
     """plane: (M, P) float32 -> (averaged plane, Eq. 4 dispersion scalar).
 
     ``groups`` > 1 broadcasts per-group means (hierarchical inner
-    average); the dispersion is always against the global mean."""
+    average); the dispersion is always against the global mean.
+
+    ``alive`` ((M,) f32, ``repro.faults``) degrades the event over the
+    alive rows: the masked (group-)mean lowers to the SAME fused mix
+    pass (``faults.masked_event_matrix`` is doubly stochastic with
+    identity rows for dead workers), the dispersion is over the alive
+    set, and dead rows keep their stale values. Matches the masked
+    ``repro.kernels.ref.avg_disp_ref`` up to matmul rounding."""
+    if alive is not None:
+        from repro import faults as _faults
+        A = _faults.masked_event_matrix(alive, groups)
+        out, _ = mix_disp(plane, A, block_p=block_p, interpret=interpret)
+        out = _faults.select_rows(out, plane, alive)
+        return out, _faults.masked_dispersion(plane, alive)
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     m, p = plane.shape
@@ -186,13 +200,24 @@ def avg_disp(plane, *, groups: int = 1, block_p: int = DEFAULT_BLOCK_P,
 
 
 @functools.partial(jax.jit, static_argnames=("block_p", "interpret"))
-def mix_disp(plane, W, *, block_p: int = DEFAULT_BLOCK_P,
+def mix_disp(plane, W, *, alive=None, block_p: int = DEFAULT_BLOCK_P,
              interpret: bool | None = None):
     """Fused gossip mix + dispersion: plane (M, P) f32, W (M, M)
     doubly-stochastic f32 -> (W @ plane, Eq. 4 dispersion of the input
     plane). Each worker keeps its own mixed row — no broadcast. The
     generalization of :func:`avg_disp` to a mixing-matrix topology
-    (``repro.topology``); matches ``repro.kernels.ref.mix_disp_ref``."""
+    (``repro.topology``); matches ``repro.kernels.ref.mix_disp_ref``.
+
+    ``alive`` ((M,) f32, ``repro.faults``) renormalizes ``W`` over the
+    alive rows (``faults.degraded_matrix``) before the same fused pass;
+    dead rows keep their stale values and the dispersion is over the
+    alive set."""
+    if alive is not None:
+        from repro import faults as _faults
+        Wm = _faults.degraded_matrix(W.astype(jnp.float32), alive)
+        out, _ = mix_disp(plane, Wm, block_p=block_p, interpret=interpret)
+        out = _faults.select_rows(out, plane, alive)
+        return out, _faults.masked_dispersion(plane, alive)
     if interpret is None:
         interpret = jax.default_backend() == "cpu"
     m, p = plane.shape
@@ -269,7 +294,7 @@ def avg_disp_outer(plane, prev_avg, vel, *, lr: float, momentum: float,
                      "interpret"))
 def compressed_mix(plane, resid, *, wire, mode="mean", groups: int = 1,
                    W=None, u=None, codes=None, error_feedback: bool = True,
-                   block_p: int = DEFAULT_BLOCK_P,
+                   alive=None, block_p: int = DEFAULT_BLOCK_P,
                    interpret: bool | None = None):
     """Fused compressed averaging/mixing event on the (M, P) plane:
     error-feedback encode (``v = plane + resid``, ``q = Q(v)``,
@@ -286,10 +311,30 @@ def compressed_mix(plane, resid, *, wire, mode="mean", groups: int = 1,
     event and writes the plane + residual. ``u`` is the int8
     ``row_uniforms`` plane. Returns (plane, new residual, dispersion);
     matches ``repro.kernels.ref.compressed_avg_ref`` /
-    ``compressed_mix_ref``."""
+    ``compressed_mix_ref``.
+
+    ``alive`` ((M,) f32, ``repro.faults``) degrades the event over the
+    alive rows: masked means lower to the kernel's own fused ``mix``
+    path on ``faults.masked_event_matrix``, gossip ``W`` is
+    renormalized by ``faults.degraded_matrix``, and dead rows keep
+    their stale params AND residual (they ship no bytes). Matches the
+    masked refs up to matmul rounding."""
     assert wire in ("bf16", "int8", "one_bit"), wire
     assert mode in ("mean", "group", "mix"), mode
     assert (W is not None) == (mode == "mix"), (mode, W is None)
+    if alive is not None:
+        from repro import faults as _faults
+        Wm = (_faults.degraded_matrix(W.astype(jnp.float32), alive)
+              if mode == "mix"
+              else _faults.masked_event_matrix(
+                  alive, groups if mode == "group" else 1))
+        out, r_new, _ = compressed_mix(
+            plane, resid, wire=wire, mode="mix", W=Wm, u=u, codes=codes,
+            error_feedback=error_feedback, block_p=block_p,
+            interpret=interpret)
+        out = _faults.select_rows(out, plane, alive)
+        r_new = _faults.select_rows(r_new, resid, alive)
+        return out, r_new, _faults.masked_dispersion(plane, alive)
     has_u = wire == "int8"
     assert (u is not None) == has_u, (wire, u is None)
     if interpret is None:

@@ -186,6 +186,7 @@ def opt_step(plane, grads, planes, scalars, *, kind, mode="none",
              groups: int = 1, W=None, mu=0.9, nesterov=False, b1=0.9,
              b2=0.95, eps=1e-8, weight_decay=0.0, codes=None,
              wire=None, resid=None, u=None, error_feedback: bool = True,
+             alive=None, umask=None,
              block_p: int = DEFAULT_BLOCK_P, interpret: bool | None = None):
     """Fused optimizer step + optional averaging on the (M, P) plane.
 
@@ -210,10 +211,51 @@ def opt_step(plane, grads, planes, scalars, *, kind, mode="none",
     column blocks, so the grid becomes (2, nb) — phase 0 accumulates
     the row scales into VMEM scratch, phase 1 quantizes and applies the
     event. Returns (plane, state planes, new residual, dispersion).
+
+    ``alive`` / ``umask`` ((M,) f32, ``repro.faults``) run the
+    fault-degraded pass: the fused update kernel runs in "none" mode
+    and only rows with ``umask > 0`` keep the result (dead and
+    straggling rows must not advance optimizer momentum), then the
+    masked event rides the SAME fused mix kernels — masked means lower
+    to ``faults.masked_event_matrix``, gossip ``W`` to
+    ``faults.degraded_matrix`` — with the dispersion over the alive
+    set. Matches the masked ``opt_step_ref`` up to matmul rounding.
     """
     assert kind in _KINDS, kind
     assert mode in _MODES, mode
     assert (W is not None) == (mode == "mix"), (mode, W is None)
+    if alive is not None:
+        from repro import faults as _faults
+        from repro.kernels import avg_disp as _avg
+        if umask is None:
+            umask = alive
+        upd, new_planes, _ = opt_step(
+            plane, grads, planes, scalars, kind=kind, mode="none",
+            mu=mu, nesterov=nesterov, b1=b1, b2=b2, eps=eps,
+            weight_decay=weight_decay, codes=codes, block_p=block_p,
+            interpret=interpret)
+        upd = _faults.select_rows(upd, plane, umask)
+        new_planes = tuple(_faults.select_rows(n, o, umask)
+                           for n, o in zip(new_planes, planes))
+        if wire is not None and mode != "none":
+            out, r_new, disp = _avg.compressed_mix(
+                upd, resid, wire=wire, mode=mode, groups=groups, W=W,
+                u=u, codes=codes, error_feedback=error_feedback,
+                alive=alive, block_p=block_p, interpret=interpret)
+            return out, new_planes, r_new, disp
+        if mode == "none":
+            return upd, new_planes, _faults.masked_dispersion(upd, alive)
+        if mode == "mix":
+            out, disp = _avg.mix_disp(upd, W, alive=alive,
+                                      block_p=block_p, interpret=interpret)
+        else:
+            out, disp = _avg.avg_disp(
+                upd, groups=groups if mode == "group" else 1,
+                alive=alive, block_p=block_p, interpret=interpret)
+        if codes is not None:
+            out = _round_codes(out, jnp.asarray(codes, jnp.float32)[None])
+            out = _faults.select_rows(out, upd, alive)
+        return out, new_planes, disp
     compressed = wire is not None
     assert not compressed or (wire in ("bf16", "int8", "one_bit")
                               and mode != "none"), (wire, mode)

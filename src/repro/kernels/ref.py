@@ -34,7 +34,7 @@ def flash_attention_ref(q, k, v, *, causal: bool, window: int = 0,
     return out.astype(q.dtype)
 
 
-def avg_disp_ref(plane, *, groups: int = 1):
+def avg_disp_ref(plane, *, groups: int = 1, alive=None):
     """Fused worker-average + dispersion on the flat (M, P) float32 plane.
 
     Returns (averaged plane, dispersion). ``groups`` > 1 averages within
@@ -42,7 +42,13 @@ def avg_disp_ref(plane, *, groups: int = 1):
     the dispersion is ALWAYS measured against the global mean — the
     paper's Eq. 4 diagnostic E||w_i - w̄||², matching
     ``repro.core.averaging.worker_dispersion``.
+
+    ``alive`` ((M,) f32, ``repro.faults``) restricts the event to the
+    alive rows: the mean and dispersion are over the alive set, dead
+    rows keep their stale values.
     """
+    if alive is not None:
+        return plane_average_ref(plane, groups=groups, alive=alive)
     m, p = plane.shape
     glob = jnp.mean(plane, axis=0)
     disp = jnp.sum(jnp.square(plane - glob[None])) / m
@@ -55,7 +61,7 @@ def avg_disp_ref(plane, *, groups: int = 1):
     return out, disp
 
 
-def mix_disp_ref(plane, W, *, codes=None):
+def mix_disp_ref(plane, W, *, codes=None, alive=None):
     """Gossip mixing event on the flat (M, P) plane: ``W @ plane`` for a
     doubly-stochastic (M, M) mixing matrix — each worker keeps its own
     mixed row, no broadcast — plus the Eq. 4 dispersion of the INPUT
@@ -65,8 +71,19 @@ def mix_disp_ref(plane, W, *, codes=None):
 
     ``codes`` (``FlatSpec.rounding_codes``) rounds the mixed rows
     through the leaf dtypes, matching the tree operator
-    ``repro.topology.mix_tree``'s ``.astype``. Returns
-    (mixed plane, dispersion)."""
+    ``repro.topology.mix_tree``'s ``.astype``. ``alive`` ((M,) f32,
+    ``repro.faults``) degrades ``W`` over the alive rows
+    (``faults.degraded_matrix`` Metropolis renormalization): dead rows
+    keep their stale values, the dispersion is over the alive set.
+    Returns (mixed plane, dispersion)."""
+    from repro import faults as _faults
+    if alive is not None:
+        disp = _faults.masked_dispersion(plane, alive)
+        Wm = _faults.degraded_matrix(W.astype(jnp.float32), alive)
+        out = jnp.dot(Wm, plane, preferred_element_type=jnp.float32)
+        if codes is not None:
+            out = round_to_codes(out, codes[None])
+        return _faults.select_rows(out, plane, alive), disp
     m = plane.shape[0]
     glob = jnp.mean(plane, axis=0)
     disp = jnp.sum(jnp.square(plane - glob[None])) / m
@@ -149,12 +166,26 @@ def plane_update_ref(plane, grads, planes, scalars, *, kind, mu=0.9,
     return upd, planes
 
 
-def plane_average_ref(plane, *, groups: int = 1, codes=None):
+def plane_average_ref(plane, *, groups: int = 1, codes=None, alive=None):
     """Worker mean (global, or per contiguous group) + Eq. 4 dispersion
     + broadcast on the (M, P) plane. Like ``avg_disp_ref`` but with the
     per-column dtype rounding the tree operators apply (``average_all``
-    casts the mean back to the leaf dtype)."""
+    casts the mean back to the leaf dtype). ``alive`` ((M,) f32,
+    ``repro.faults``) makes the event a masked one: the exact mean over
+    alive rows broadcast to alive rows only, dead rows keeping their
+    stale values, the dispersion over the alive set."""
+    from repro import faults as _faults
     m, p = plane.shape
+    if alive is not None:
+        disp = _faults.masked_dispersion(plane, alive)
+        if groups > 1:
+            out = _faults.masked_group_mean(plane, alive, groups)
+        else:
+            glob = _faults.masked_mean(plane, alive)
+            out = jnp.broadcast_to(glob[None], (m, p))
+        if codes is not None:
+            out = round_to_codes(out, codes[None])
+        return _faults.select_rows(out, plane, alive), disp
     glob = jnp.mean(plane, axis=0)
     disp = jnp.sum(jnp.square(plane - glob[None])) / m
     if groups > 1:
@@ -172,7 +203,7 @@ def opt_step_ref(plane, grads, planes, scalars, *, kind, mode="none",
                  groups: int = 1, W=None, mu=0.9, nesterov=False, b1=0.9,
                  b2=0.95, eps=1e-8, weight_decay=0.0, codes=None,
                  wire=None, resid=None, u=None,
-                 error_feedback: bool = True):
+                 error_feedback: bool = True, alive=None, umask=None):
     """Fused local optimizer step + optional averaging event in one pass
     over the flat (M, P) plane — the jnp twin of
     ``repro.kernels.opt_step``.
@@ -193,13 +224,29 @@ def opt_step_ref(plane, grads, planes, scalars, *, kind, mode="none",
     acts on the POST-update plane (``resid`` the (M, P) residual, ``u``
     the int8 ``row_uniforms``), the event operator on the decoded
     ``q``, and the return gains the residual:
-    (plane, new state planes, new residual, dispersion)."""
-    upd, planes = plane_update_ref(
+    (plane, new state planes, new residual, dispersion).
+
+    ``alive`` / ``umask`` ((M,) f32, ``repro.faults``) make the pass a
+    fault-degraded one: only rows with ``umask > 0`` apply the local
+    update (dead AND straggling rows keep their params and optimizer
+    planes — zeroing the gradient would still advance momentum), the
+    event is masked over the alive rows (degraded ``W`` for "mix",
+    exact alive means otherwise), and the dispersion is over the alive
+    set."""
+    from repro import faults as _faults
+    upd, new_planes = plane_update_ref(
         plane, grads, planes, scalars, kind=kind, mu=mu, nesterov=nesterov,
         b1=b1, b2=b2, eps=eps, weight_decay=weight_decay, codes=codes)
+    if alive is not None:
+        if umask is None:
+            umask = alive
+        upd = _faults.select_rows(upd, plane, umask)
+        new_planes = tuple(_faults.select_rows(n, o, umask)
+                           for n, o in zip(new_planes, planes))
+    planes = new_planes
     if wire is not None and mode != "none":
         kw = dict(wire=wire, u=u, codes=codes,
-                  error_feedback=error_feedback)
+                  error_feedback=error_feedback, alive=alive)
         if mode == "mix":
             out, resid, disp = compressed_mix_ref(upd, resid, W, **kw)
         else:
@@ -207,20 +254,24 @@ def opt_step_ref(plane, grads, planes, scalars, *, kind, mode="none",
                 upd, resid, groups=groups if mode == "group" else 1, **kw)
         return out, planes, resid, disp
     if mode == "none":
+        if alive is not None:
+            return upd, planes, _faults.masked_dispersion(upd, alive)
         m = upd.shape[0]
         glob = jnp.mean(upd, axis=0)
         disp = jnp.sum(jnp.square(upd - glob[None])) / m
         return upd, planes, disp
     if mode == "mix":
-        out, disp = mix_disp_ref(upd, W, codes=codes)
+        out, disp = mix_disp_ref(upd, W, codes=codes, alive=alive)
         return out, planes, disp
     out, disp = plane_average_ref(
-        upd, groups=groups if mode == "group" else 1, codes=codes)
+        upd, groups=groups if mode == "group" else 1, codes=codes,
+        alive=alive)
     return out, planes, disp
 
 
 def compressed_avg_ref(plane, resid, *, wire, groups: int = 1, u=None,
-                       codes=None, error_feedback: bool = True):
+                       codes=None, error_feedback: bool = True,
+                       alive=None):
     """Compressed averaging event on the (M, P) plane: error-feedback
     encode (``v = plane + resid``, ``q = Q(v)``, ``resid' = v - q``,
     ``repro.core.compress``), then the worker mean (global, or per
@@ -230,10 +281,27 @@ def compressed_avg_ref(plane, resid, *, wire, groups: int = 1, u=None,
     pre-average), like every other event twin. ``u`` is the
     ``row_uniforms`` plane (int8 stochastic rounding); ``codes``
     (``FlatSpec.rounding_codes``) rounds the broadcast mean through the
-    leaf dtypes like ``plane_average_ref``. Returns
+    leaf dtypes like ``plane_average_ref``. ``alive`` ((M,) f32,
+    ``repro.faults``) masks the event: dead rows neither ship bytes nor
+    accumulate residual, the mean is over the alive rows' decoded
+    ``q``, and dead rows keep their stale params. Returns
     (plane, new residual, dispersion)."""
     from repro.core.compress import encode_decode
+    from repro import faults as _faults
     m, p = plane.shape
+    if alive is not None:
+        disp = _faults.masked_dispersion(plane, alive)
+        q, r_new = encode_decode(plane, resid, wire=wire, u=u,
+                                 error_feedback=error_feedback)
+        resid = _faults.select_rows(r_new, resid, alive)
+        if groups > 1:
+            out = _faults.masked_group_mean(q, alive, groups)
+        else:
+            out = jnp.broadcast_to(
+                _faults.masked_mean(q, alive)[None], (m, p))
+        if codes is not None:
+            out = round_to_codes(out, codes[None])
+        return _faults.select_rows(out, plane, alive), resid, disp
     glob = jnp.mean(plane, axis=0)
     disp = jnp.sum(jnp.square(plane - glob[None])) / m
     q, resid = encode_decode(plane, resid, wire=wire, u=u,
@@ -250,14 +318,27 @@ def compressed_avg_ref(plane, resid, *, wire, groups: int = 1, u=None,
 
 
 def compressed_mix_ref(plane, resid, W, *, wire, u=None, codes=None,
-                       error_feedback: bool = True):
+                       error_feedback: bool = True, alive=None):
     """Compressed gossip mixing event: error-feedback encode, then
     ``W @ q`` on the decoded plane — each worker keeps its own mixed
     row, no broadcast. The Eq. 4 dispersion is of the input plane
-    (pre-encode, pre-mix), matching ``mix_disp_ref``. Returns
+    (pre-encode, pre-mix), matching ``mix_disp_ref``. ``alive``
+    degrades ``W`` over the alive rows (``repro.faults``): dead rows
+    keep their stale params and residual. Returns
     (mixed plane, new residual, dispersion)."""
     from repro.core.compress import encode_decode
+    from repro import faults as _faults
     m = plane.shape[0]
+    if alive is not None:
+        disp = _faults.masked_dispersion(plane, alive)
+        q, r_new = encode_decode(plane, resid, wire=wire, u=u,
+                                 error_feedback=error_feedback)
+        resid = _faults.select_rows(r_new, resid, alive)
+        Wm = _faults.degraded_matrix(W.astype(jnp.float32), alive)
+        out = jnp.dot(Wm, q, preferred_element_type=jnp.float32)
+        if codes is not None:
+            out = round_to_codes(out, codes[None])
+        return _faults.select_rows(out, plane, alive), resid, disp
     glob = jnp.mean(plane, axis=0)
     disp = jnp.sum(jnp.square(plane - glob[None])) / m
     q, resid = encode_decode(plane, resid, wire=wire, u=u,

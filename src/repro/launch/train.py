@@ -124,6 +124,29 @@ def main(argv=None):
                     help="sharded averaging collective: psum (production; "
                          "one psum of column sums per event) or gather "
                          "(validation; bit-identical to single-device)")
+    ap.add_argument("--faults", default=None,
+                    help="deterministic fault script (repro.faults): "
+                         "comma-separated kind:m=<row>@t=<step> events, "
+                         "e.g. 'crash:m=3@t=100,rejoin:m=3@t=200' — "
+                         "crashed rows drop out of every update and "
+                         "averaging event, rejoining rows warm-start "
+                         "from the alive consensus")
+    ap.add_argument("--straggle-prob", type=float, default=0.0,
+                    help="per-worker per-step probability of skipping "
+                         "the local update (still receives the mix); "
+                         "drawn from the deterministic fold_in stream, "
+                         "so every engine path replays the identical "
+                         "straggler pattern")
+    ap.add_argument("--rejoin", type=int, default=0,
+                    help="auto-rejoin every scripted crash N steps "
+                         "later (crashes with a later scripted event "
+                         "for the same worker are left alone)")
+    ap.add_argument("--non-iid-alpha", type=float, default=0.0,
+                    help="> 0 enables Dirichlet(alpha) label-skewed "
+                         "(non-IID) worker shards for dataset-backed "
+                         "runs; the synthetic token stream has no "
+                         "labels, so this CLI only validates and "
+                         "records the setting")
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--resume", default=None,
@@ -175,6 +198,35 @@ def main(argv=None):
         ap.error(f"--outer-momentum steps on the exact consensus mean, "
                  f"which a {args.comm_dtype} wire never forms — use "
                  "--comm-dtype f32 or drop the outer optimizer")
+    faults = None
+    if args.faults or args.straggle_prob > 0:
+        from repro.faults import FaultPlan
+        if not 0.0 <= args.straggle_prob <= 1.0:
+            ap.error(f"--straggle-prob must be in [0, 1], got "
+                     f"{args.straggle_prob}")
+        if args.rejoin < 0:
+            ap.error(f"--rejoin must be >= 0, got {args.rejoin}")
+        try:
+            # FaultPlan validates eagerly: rows in [0, workers), steps
+            # >= 1, crash/rejoin alternation per worker (a rejoin
+            # needs a prior crash), never-all-dead — surface its
+            # message at parse time instead of deep inside a trace
+            faults = FaultPlan.parse(args.faults or "", args.workers,
+                                     straggle_prob=args.straggle_prob,
+                                     rejoin_after=args.rejoin)
+        except ValueError as e:
+            ap.error(f"--faults: {e}")
+        if args.outer_momentum > 0:
+            ap.error("--outer-momentum steps on the full-membership "
+                     "consensus mean, which a faulty run never forms — "
+                     "drop --faults/--straggle-prob or the outer "
+                     "optimizer")
+    elif args.rejoin:
+        ap.error("--rejoin without --faults has no crash to rejoin "
+                 "from")
+    if args.non_iid_alpha < 0:
+        ap.error(f"--non-iid-alpha must be >= 0, got "
+                 f"{args.non_iid_alpha}")
     topology = None
     if args.topology:
         # invalid topology/worker-count combinations (ring needs M >= 3,
@@ -243,7 +295,13 @@ def main(argv=None):
                          flat=not args.tree_engine,
                          fused_opt=not args.no_fused_opt,
                          mesh=mesh, collective=args.collective,
-                         topology=topology, compression=compression)
+                         topology=topology, compression=compression,
+                         faults=faults)
+    if faults is not None and not faults.is_trivial:
+        crashes = sum(ev.kind == "crash" for ev in faults.events)
+        rejoins = sum(ev.kind == "rejoin" for ev in faults.events)
+        print(f"[train] faults: {crashes} crash / {rejoins} rejoin "
+              f"events, straggle_prob={faults.straggle_prob}")
     if topology is not None:
         print(f"[train] topology={topology.kind} "
               f"(spectral gap {topology.spectral_gap:.3f}, "

@@ -155,8 +155,9 @@ def plane_sharding(mesh, *, axes=None):
 def engine_state_sharding(mesh, state, *, axes=None):
     """Shardings for a full ``repro.core.EngineState``: worker-axis
     leaves (params + optimizer state + the error-feedback residual
-    plane) via :func:`plane_sharding`, everything else (outer state,
-    PRNG keys, step, schedule state) replicated."""
+    plane + the per-worker fault rows) via :func:`plane_sharding`,
+    everything else (outer state, PRNG keys, step, schedule state)
+    replicated."""
     ws = plane_sharding(mesh, axes=axes)
     repl = jax.sharding.NamedSharding(mesh, P())
     return type(state)(
@@ -165,7 +166,8 @@ def engine_state_sharding(mesh, state, *, axes=None):
         jax.tree.map(lambda _: repl, state.outer_state),
         repl, repl, repl,
         jax.tree.map(lambda _: repl, state.sched),
-        jax.tree.map(lambda _: ws, state.resid))
+        jax.tree.map(lambda _: ws, state.resid),
+        jax.tree.map(lambda _: ws, state.fault))
 
 
 _SIZES = {}

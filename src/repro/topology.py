@@ -278,6 +278,37 @@ class Topology:
         and ``groups`` (the graph has no global consensus direction)."""
         return 1.0 - self.slem
 
+    def effective_spectral_gap(self, alive) -> float:
+        """Spectral gap of the fault-degraded expected mixing matrix,
+        restricted to the alive workers.
+
+        Dead rows are masked out the way ``repro.faults.degraded_matrix``
+        does at runtime — off-diagonal mass to/from dead workers is
+        dropped and the lost weight refilled on the diagonal — and the
+        gap is the SLEM gap of the alive-alive submatrix (dead workers
+        are identity rows: they neither mix nor count toward consensus).
+        All alive recovers :attr:`spectral_gap` (up to eigensolver
+        roundoff); a cut that disconnects the alive subgraph returns
+        0.0."""
+        a = (np.asarray(alive, np.float64).reshape(-1) > 0)
+        if a.shape[0] != self.num_workers:
+            raise ValueError(f"alive has {a.shape[0]} rows, topology "
+                             f"has {self.num_workers}")
+        idx = np.flatnonzero(a)
+        if len(idx) == 0:
+            raise ValueError("effective_spectral_gap needs >= 1 alive "
+                             "worker")
+        if len(idx) == 1:
+            return 1.0  # a single alive worker is trivially at consensus
+        W = self.expected_matrix()
+        af = a.astype(np.float64)
+        off = W * (1.0 - np.eye(self.num_workers)) * af[:, None] * af[None, :]
+        Wm = off + np.diag(1.0 - off.sum(1))
+        sub = Wm[np.ix_(idx, idx)]
+        ev = np.linalg.eigvalsh(sub)
+        slem = float(min(1.0, max(abs(ev[0]), ev[-2], 0.0)))
+        return 1.0 - slem
+
     @cached_property
     def comm_degree(self) -> float:
         """Mean per-event messages per worker: the off-diagonal nonzero
