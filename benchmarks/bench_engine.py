@@ -65,6 +65,14 @@ recover the no-fault final loss within 5% (``dropout_recovers``,
 gated in CI), and an IID-vs-dirichlet(0.05) shard comparison records
 the non-IID dispersion gap against the variance model's predicted
 averaging benefit (``noniid_benefit_agrees``).
+An ``elastic`` row (``repro.elastic``) runs the membership axis: a
+fixed-M periodic-8 baseline vs the same recipe shrinking to 3M/4 a
+quarter of the way in and growing back (4-step rejoin curriculum) at
+three quarters — the resized run must recover the fixed-M final loss
+within 5% (``elastic_recovers``, gated in CI), and the K-weighted
+drift budget (``predict_post_resize_dispersion``, arXiv 1807.06629)
+calibrated on dirichlet(0.05) shards must predict the measured
+post-resize dispersion within 2x (``envelope_calibrated``).
 Topology-sweep rows carry a ``bytes_per_worker`` column pricing their
 realized events at every wire format, so matched-budget comparisons
 read in bytes, not messages.
@@ -87,7 +95,7 @@ from repro.core import AveragingSchedule, PhaseEngine
 from repro.data import convex_dataset
 from repro.data.pipeline import DeviceDataset, WorkerSharder
 from repro.launch.mesh import make_worker_mesh
-from repro.optim import Momentum
+from repro.optim import SGD, Momentum
 
 DIM, SAMPLES, STEPS = 64, 1024, 512
 PHASE_LENS = (1, 4, 8, 64, 512)
@@ -563,6 +571,156 @@ def bench_faults(arrays, idx, workers, steps) -> dict:
     return row
 
 
+def bench_elastic(arrays, idx, workers, steps, labels) -> dict:
+    """Elastic-membership sweep (``repro.elastic``).
+
+    Recovery: a fixed-M periodic-8 Momentum baseline vs the same recipe
+    losing a quarter of its workers a quarter of the way in
+    (shrink M -> 3M/4 at steps/4) and getting them back at three
+    quarters (grow back, 4-step rejoin curriculum), on identical sample
+    draws — at the default shapes that is the ISSUE's 16 -> 12 at
+    t=128, back to 16 at t=384. The acceptance claim is
+    ``elastic_recovers``: the resized run's final consensus loss lands
+    within 5% of the fixed-M run's (the noise band the other recovery
+    gates use), gated in CI like ``dropout_recovers``.
+
+    Calibration: an SGD run on dirichlet(0.05) label-skewed shards
+    exercises ``predict_post_resize_dispersion`` — the K-weighted
+    drift budget of Parallel Restarted SGD (arXiv 1807.06629) — as a
+    MAGNITUDE predictor, not just a direction: per-pool gradient noise
+    (sigma^2 / batch), pool-mean drift and the pool-curvature
+    contraction rate along it are measured at the consensus reached by
+    the averaging event at the grow-back step, and the predicted
+    K=8-step dispersion must land within 2x of the dispersion the
+    engine actually records one period later
+    (``envelope_calibrated``, gated the same way)."""
+    from repro.core import predict_post_resize_dispersion
+    from repro.elastic import ElasticPlan, run_elastic
+    Xn, yn = np.asarray(arrays["x"]), np.asarray(arrays["y"])
+    dim = Xn.shape[1]
+
+    def full_loss(f):
+        r = Xn @ np.asarray(f["w"]) - yn
+        return 0.5 * float(np.mean(r * r))
+
+    t1, t2 = max(2, steps // 4), 3 * steps // 4
+    m1 = max(1, 3 * workers // 4)
+    plan = ElasticPlan.parse(workers, shrink_at=[f"{t1}:{m1}"],
+                             grow_at=[f"{t2}:{workers}"], curriculum=4)
+
+    def factory(m, t0, k):
+        return DeviceDataset(arrays, m,
+                             indices=idx[t0 - 1:t0 - 1 + k, :m])
+
+    def run_fixed():
+        eng = PhaseEngine(ls_mean_loss, Momentum(lr=0.01, mu=0.9),
+                          AveragingSchedule("periodic", 8))
+        f, h = eng.run({"w": jnp.zeros(dim)},
+                       DeviceDataset(arrays, workers, indices=idx),
+                       num_workers=workers, seed=6, record_every=1)
+        return full_loss(f), h
+
+    loss_fixed, h_fixed = run_fixed()
+    eng = PhaseEngine(ls_mean_loss, Momentum(lr=0.01, mu=0.9),
+                      AveragingSchedule("periodic", 8))
+    f_el, h_el = run_elastic(eng, {"w": jnp.zeros(dim)}, factory, plan,
+                             steps=steps, seed=6, record_every=1)
+    loss_el = full_loss(f_el)
+    recovers = bool(loss_el <= loss_fixed * 1.05)
+
+    # ---- calibration: predicted vs measured post-resize dispersion ----
+    # dirichlet(0.05) shards, SGD (the K-window weights c_j = lr exactly;
+    # momentum's velocity carry-over from BEFORE the window would break
+    # the from-consensus assumption), curriculum 0 so the grown rows
+    # enter the mix — and the model's n — immediately
+    lr, period = 0.01, 8
+    sh = WorkerSharder(len(yn), workers, seed=13, mode="dirichlet",
+                       labels=labels, alpha=0.05)
+    cal_steps = t2 + period
+    block = sh.next_index_block(cal_steps, 8)
+
+    def cal_factory(m, t0, k):
+        return DeviceDataset(arrays, m,
+                             indices=block[t0 - 1:t0 - 1 + k, :m])
+
+    cal_plan = ElasticPlan.parse(workers, shrink_at=[f"{t1}:{m1}"],
+                                 grow_at=[f"{t2}:{workers}"])
+    cal_eng = PhaseEngine(ls_mean_loss, SGD(lr=lr),
+                          AveragingSchedule("periodic", period))
+    # stop at the averaging event DURING step t2 (t2 % 8 == 0): every
+    # row — survivors and grown alike — leaves it at the consensus w_c,
+    # so the next period is exactly the model's from-consensus K-window
+    w_c, _, st = run_elastic(cal_eng, {"w": jnp.zeros(dim)}, cal_factory,
+                             cal_plan, steps=t2, seed=6,
+                             return_state=True)
+    _, h_cal = run_elastic(cal_eng, {"w": jnp.zeros(dim)}, cal_factory,
+                           cal_plan, steps=cal_steps, seed=6,
+                           record_every=1, state=st)
+    measured = float(dict(h_cal["dispersion"])[cal_steps])
+
+    # per-pool gradient statistics AT w_c: per-sample grad of the
+    # 0.5*mean(r^2) objective is x_i r_i; a B-sample batch mean has
+    # sigma^2_pool / B of it. Pool-mean drifts are centered on the
+    # ACROSS-POOL mean (dispersion is measured against the worker
+    # mean, which tracks it, not the full-data gradient), and the
+    # contraction rate each drift decays at is the pool Hessian's
+    # Rayleigh quotient along it, weighted by drift mass
+    wc = np.asarray(w_c["w"])
+    g = Xn * (Xn @ wc - yn)[:, None]
+    means = np.stack([g[p].mean(0) for p in sh._pools])
+    s2 = [float(np.mean(np.sum((g[p] - g[p].mean(0)) ** 2, axis=1))) / 8
+          for p in sh._pools]
+    drift2 = float(np.mean(np.sum((means - means.mean(0)) ** 2, axis=1)))
+    lams = np.array([float(d @ (Xn[p].T @ Xn[p] / len(p)) @ d / (d @ d))
+                     for p, d in zip(sh._pools, means)])
+    w2 = np.sum(means ** 2, axis=1)
+    curvature = float(np.sum(w2 * lams) / np.sum(w2))
+    pred = predict_post_resize_dispersion(s2, lr=lr, steps=period,
+                                          drift2=drift2,
+                                          curvature=curvature)
+    predicted = pred["predicted_dispersion"]
+    ratio = measured / predicted if predicted > 0 else float("inf")
+    calibrated = bool(0.5 <= ratio <= 2.0)
+
+    row = {
+        "workload": "elastic", "workers": workers, "steps": steps,
+        "plan": f"shrink@{t1}:{m1},grow@{t2}:{workers}",
+        "curriculum": 4,
+        "fixed_final_loss": loss_fixed,
+        "fixed_events": h_fixed["averages"],
+        "elastic_final_loss": loss_el,
+        "elastic_events": h_el["averages"],
+        "resizes": h_el["resizes"],
+        "elastic_recovers": recovers,
+        "calib_measured_disp": measured,
+        "calib_predicted_disp": predicted,
+        "calib_drift2": drift2,
+        "calib_curvature": curvature,
+        "calib_noise_disp": pred["noise_dispersion"],
+        "calib_drift_disp": pred["drift_dispersion"],
+        "calib_ratio": ratio,
+        "envelope_calibrated": calibrated,
+    }
+    emit("engine_elastic_recovery", 0.0 if recovers else 1.0,
+         f"fixed_loss={loss_fixed:.5f};elastic_loss={loss_el:.5f};"
+         f"elastic_recovers={recovers};"
+         f"disp_pred={predicted:.5g};disp_meas={measured:.5g}"
+         f"({ratio:.2f}x);envelope_calibrated={calibrated}")
+    if not recovers:
+        # same CI contract as dropout_recovers: losing the resize
+        # recovery property must fail the PR, not just flip a field in
+        # the JSON artifact
+        raise SystemExit(
+            f"elastic run does NOT recover: final loss {loss_el:.6f} "
+            f"vs fixed-M {loss_fixed:.6f} (budget 5%)")
+    if not calibrated:
+        raise SystemExit(
+            f"post-resize dispersion prediction is OFF: predicted "
+            f"{predicted:.6g} vs measured {measured:.6g} "
+            f"({ratio:.2f}x, budget [0.5, 2.0])")
+    return row
+
+
 def check_sharded_bitexact(loss_fn, params, arrays, idx, workers,
                            mesh) -> bool:
     """gather-collective sharded run == single-device run, bitwise —
@@ -754,6 +912,13 @@ def run(tiny: bool = False, workers_override: int | None = None,
     faults_row = bench_faults({"x": Xj, "y": yj}, fidx, m_adapt, steps)
     results.append(faults_row)
 
+    rng = np.random.default_rng(6)
+    eidx = rng.integers(0, samples, size=(steps, m_adapt, 8))
+    labels = np.digitize(yn, np.quantile(yn, [0.25, 0.5, 0.75]))
+    elastic_row = bench_elastic({"x": Xj, "y": yj}, eidx, m_adapt, steps,
+                                labels)
+    results.append(elastic_row)
+
     sharder = bench_sharder(max(worker_counts), steps)
     emit("sharder_replacement", sharder["sharder_block_us"],
          f"loop_us={sharder['sharder_loop_us']:.0f};"
@@ -801,6 +966,7 @@ def run(tiny: bool = False, workers_override: int | None = None,
             "topology": topology_sweep,
             "compressed": compressed_row,
             "faults": faults_row,
+            "elastic": elastic_row,
             "rows": results, "sharder": sharder})
     return results
 

@@ -124,14 +124,27 @@ def load_checkpoint(path: str, like_tree):
 #:       alive/staleness, PR 7). Written only when the state carries
 #:       fault leaves; the metadata records ``has_resid`` since the
 #:       residual plane is independent of the fault rows
-ENGINE_STATE_VERSION = 4
+#:   5 — elastic-membership saves (``repro.elastic``): the leaf layout
+#:       is unchanged, but the metadata declares which optional fields
+#:       are present (``has_sched`` / ``has_resid`` / ``has_fault``)
+#:       instead of implying them from the version, plus the worker
+#:       plane row count ``num_workers`` — a resized run resumes
+#:       bit-exactly into the like-state of the segment that saved it.
+#:       Fixed-membership runs keep writing the lowest version that
+#:       describes their layout, so their checkpoints stay loadable by
+#:       older builds
+ENGINE_STATE_VERSION = 5
 _VERSION_KEY = "engine_state_version"
 _HAS_RESID_KEY = "has_resid"
+_HAS_FAULT_KEY = "has_fault"
+_HAS_SCHED_KEY = "has_sched"
+_NUM_WORKERS_KEY = "num_workers"
 #: optional EngineState fields, in the order they were added
 _OPTIONAL_FIELDS = ("sched", "resid", "fault")
 
 
-def save_engine_state(path: str, state, *, extra: dict | None = None):
+def save_engine_state(path: str, state, *, extra: dict | None = None,
+                      elastic: bool = False):
     """Checkpoint a full ``repro.core.EngineState`` — worker params,
     optimizer state, outer-optimizer state, both PRNG keys, the step
     counter, the schedule state and (under a fault plan) the per-worker
@@ -142,18 +155,33 @@ def save_engine_state(path: str, state, *, extra: dict | None = None):
     ``SchedState``; fault streams are pure functions of (dec_key, step,
     row) plus the checkpointed alive/staleness rows). The checkpoint
     metadata records ``engine_state_version`` so loaders dispatch on the
-    declared layout instead of sniffing leaf counts."""
+    declared layout instead of sniffing leaf counts.
+
+    ``elastic=True`` marks the save as coming from a resizable-membership
+    run (``repro.elastic``): the v5 metadata declares the optional
+    fields explicitly and the worker plane row count, so a later resume
+    can be matched against the elastic plan's segment for that step."""
     state = jax.device_get(state)
     extra = dict(extra or {})
     # the version describes the LAYOUT the state actually has: no
     # SchedState leaves (sched=()) is exactly the v0 layout, no
     # residual/fault leaves the v2 one, whoever writes it
+    has_sched = not _absent(getattr(state, "sched", ()))
     has_resid = not _absent(getattr(state, "resid", ()))
     has_fault = not _absent(getattr(state, "fault", ()))
-    if _absent(getattr(state, "sched", ())):
+    wp_leaves = jax.tree_util.tree_leaves(state.worker_params)
+    if wp_leaves:
+        extra[_NUM_WORKERS_KEY] = int(np.shape(wp_leaves[0])[0])
+    if elastic:
+        extra[_VERSION_KEY] = ENGINE_STATE_VERSION
+        extra[_HAS_SCHED_KEY] = has_sched
+        extra[_HAS_RESID_KEY] = has_resid
+        extra[_HAS_FAULT_KEY] = has_fault
+    elif not has_sched:
         extra[_VERSION_KEY] = 0
     elif has_fault:
-        extra[_VERSION_KEY] = ENGINE_STATE_VERSION
+        # the fault-row layout is v4; v5 marks elastic saves only
+        extra[_VERSION_KEY] = 4
         extra[_HAS_RESID_KEY] = has_resid
     elif has_resid:
         extra[_VERSION_KEY] = 3
@@ -219,16 +247,42 @@ def load_engine_state(path: str, like_state):
     Returns (state, step).
 
     The checkpoint's declared ``engine_state_version`` picks the
-    layout: v4 carries the per-worker fault rows (and, per its
+    layout: v5 (elastic saves) declares its optional fields in the
+    metadata, v4 carries the per-worker fault rows (and, per its
     ``has_resid`` metadata, possibly the residual plane), v3 the
     residual plane, v1/v2 the SchedState leaves only, v0 predates all
     of them; every field the checkpoint lacks starts fresh from
     ``like_state`` (zero bookkeeping, zero residuals, all-alive fault
     rows). Checkpoints from builds that did not yet write the version
     field load too — the v0-vs-v1 distinction falls back to the
-    historical leaf-count sniff."""
+    historical leaf-count sniff.
+
+    A checkpoint whose worker plane has a different row count than
+    ``like_state`` is refused eagerly with both Ms named — membership
+    changed between save and resume, and the fix is the resize API,
+    not a structural load into the wrong-sized plane."""
     meta = _read_meta(path)
-    version = (meta.get("extra") or {}).get(_VERSION_KEY)
+    extra = meta.get("extra") or {}
+    like_wp = jax.tree_util.tree_leaves(like_state.worker_params)
+    got_m = extra.get(_NUM_WORKERS_KEY)
+    if got_m is None and meta.get("shapes") and meta["shapes"][0]:
+        # pre-v5 saves: the first flattened leaf is a worker-params
+        # plane, so its leading dim is the saved M
+        got_m = meta["shapes"][0][0]
+    if like_wp and got_m is not None:
+        want_m = int(np.shape(like_wp[0])[0])
+        if int(got_m) != want_m:
+            raise ValueError(
+                f"checkpoint {path!r} holds a {int(got_m)}-row worker "
+                f"plane but the target engine state has {want_m} rows — "
+                "membership changed between save and resume. Resume "
+                "through repro.elastic instead: replay the run's "
+                "--shrink-at/--grow-at plan (run_elastic applies the "
+                "resizes), or build the matching like-state with "
+                "repro.elastic.segment_engine(engine, plan, step) — "
+                "loading into a fixed-M engine of the wrong size would "
+                "scramble the worker rows")
+    version = extra.get(_VERSION_KEY)
     if version is not None:
         if (isinstance(version, bool) or not isinstance(version, int)
                 or version < 0):
@@ -248,9 +302,18 @@ def load_engine_state(path: str, like_state):
             return _load_pre_resid(path, like_state)
         if version == 3:
             return _load_subset(path, like_state, {"sched", "resid"})
-        present = {"sched", "fault"}
-        if (meta.get("extra") or {}).get(_HAS_RESID_KEY, True):
+        if version == 4:
+            present = {"sched", "fault"}
+            if extra.get(_HAS_RESID_KEY, True):
+                present.add("resid")
+            return _load_subset(path, like_state, present)
+        present = set()
+        if extra.get(_HAS_SCHED_KEY, True):
+            present.add("sched")
+        if extra.get(_HAS_RESID_KEY, False):
             present.add("resid")
+        if extra.get(_HAS_FAULT_KEY, False):
+            present.add("fault")
         return _load_subset(path, like_state, present)
     try:
         return _load_pre_resid(path, like_state)

@@ -25,6 +25,7 @@ from repro.core.variance_model import (  # noqa: F401
     measure_beta2,
     measure_sigma2,
     predict_averaging_benefit,
+    predict_post_resize_dispersion,
     rho,
 )
 from repro.faults import FaultEvent, FaultPlan, FaultState  # noqa: F401

@@ -90,6 +90,9 @@ class AveragingSchedule:
     comm_budget: int = 0        # adaptive_budget: max averaging events
     budget_horizon: int = 0     # adaptive_*: steps the budget spans
     byte_budget: int = 0        # adaptive_bytes: max bytes per worker
+    straggle_aware: bool = False  # adaptive: discount straggler-widened
+    #                           # dispersion (engine passes the alive/
+    #                           # updated fraction as disp_scale)
 
     _KINDS = ("oneshot", "minibatch", "periodic", "stochastic",
               "hierarchical", "adaptive_threshold", "adaptive_budget",
@@ -139,6 +142,12 @@ class AveragingSchedule:
                     "adaptive_bytes needs byte_budget >= 1 and "
                     f"budget_horizon >= 1, got ({self.byte_budget}, "
                     f"{self.budget_horizon})")
+        if self.straggle_aware and not self.is_adaptive:
+            raise ValueError(
+                f"straggle_aware discounts the dispersion fed to the "
+                f"adaptive schedules; {self.kind!r} never consumes "
+                "dispersion — drop straggle_aware or use one of "
+                f"{self._ADAPTIVE}")
 
     @property
     def is_adaptive(self) -> bool:
@@ -184,7 +193,7 @@ class AveragingSchedule:
         return SchedState(f32(), f32(), f32(), i32(), i32())
 
     def decision_state(self, step, sched_state: SchedState, disp, key=None,
-                       event_cost=None):
+                       event_cost=None, disp_scale=None):
         """The stateful on-device decision: one pure transition
         ``(step, state, dispersion) -> (code, new state)`` shared by
         every engine path (flat-native scan, tree scan, sharded
@@ -224,9 +233,21 @@ class AveragingSchedule:
         paths on multi-leaf models; the single-buffer paths (flat vs
         host on one leaf, gather-collective vs single-device) reduce
         identically and replay identical decision streams — what the
-        equivalence tests pin."""
+        equivalence tests pin.
+
+        ``disp_scale``: with ``straggle_aware=True`` the engine passes
+        the fraction of the mixing cohort that applied its update this
+        step (``FaultPlan.disp_scale``); the measured dispersion is
+        multiplied by it before entering the EMA/budget accrual, so a
+        straggler's frozen iterate — which lags the mean and widens the
+        dispersion without carrying gradient-variance signal — is
+        discounted instead of triggering spurious averaging events. The
+        recorded dispersion trace is NOT scaled; only the decision
+        input is."""
         s = sched_state
         disp = jnp.asarray(disp, jnp.float32)
+        if self.straggle_aware and disp_scale is not None:
+            disp = disp * jnp.asarray(disp_scale, jnp.float32)
         beta = jnp.asarray(self.disp_ema_beta, jnp.float32)
         ema = beta * s.disp_ema + (1.0 - beta) * disp
         cum = s.cum_disp + disp

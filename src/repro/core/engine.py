@@ -597,7 +597,7 @@ class PhaseEngine:
 
     def _flat_native_step(self, spec, plane, gplane, planes, outer_c,
                           scalars, step, sst, dec_key, resid=(),
-                          fmask=None):
+                          fmask=None, dscale=None):
         """One flat-native step: fused update(+average) for the
         every-step schedules, update-then-switched-average for the rare
         ones. The fused update always emits the Eq. 4 dispersion of the
@@ -605,10 +605,13 @@ class PhaseEngine:
         (``AveragingSchedule.decision_state``) and the per-step trace.
         With active compression the error-feedback ``resid`` plane
         threads through the event (untouched on non-event steps).
-        ``fmask`` (fault mode) is the ``(alive, umask)`` pair for this
+        ``fmask`` (fault mode) is the ``(mix, umask)`` pair for this
         step: rows outside ``umask`` skip the update, events and the
-        dispersion mask over ``alive``. Returns (plane, state planes,
-        outer_c, resid, sched state, dispersion, decision code)."""
+        dispersion mask over the mixing cohort ``mix`` (alive rows not
+        inside a solo window). ``dscale`` is the straggle-aware
+        dispersion discount forwarded to the schedule decision. Returns
+        (plane, state planes, outer_c, resid, sched state, dispersion,
+        decision code)."""
         sched = self.schedule
         alive, umask = fmask if fmask is not None else (None, None)
         ec = self._sched_event_cost(spec.width, plane.shape[0])
@@ -620,13 +623,15 @@ class PhaseEngine:
                 W=self._event_W(step, dec_key), resid=resid, step=step,
                 dec_key=dec_key, alive=alive, umask=umask)
             code, sst = sched.decision_state(step, sst, disp, dec_key,
-                                             event_cost=ec)
+                                             event_cost=ec,
+                                             disp_scale=dscale)
             return plane, planes, outer_c, resid, sst, disp, code
         plane, planes, outer_c, resid, disp = self._fused_step_average(
             spec, plane, gplane, planes, outer_c, scalars, "none",
             resid=resid, alive=alive, umask=umask)
         code, sst = sched.decision_state(step, sst, disp, dec_key,
-                                         event_cost=ec)
+                                         event_cost=ec,
+                                         disp_scale=dscale)
         if sched.kind == "oneshot":
             return plane, planes, outer_c, resid, sst, disp, code
         comp = self._comp()
@@ -788,14 +793,20 @@ class PhaseEngine:
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, num_workers)
             batch = fetch(xs_t)
-            alive = umask = None
+            alive = umask = dscale = None
             if fp is not None:
                 alive_prev = fst.alive
                 fst, _, alive, umask, rejoined = fp.transition(
                     fst, step, state.dec_key)
                 if fp.has_rejoin:
+                    # the warm-start consensus is the PREVIOUS step's
+                    # mixing cohort: mid-curriculum (solo) rows train
+                    # but their unrepresentative iterates stay out of it
                     wp_c, opt_c, resid = warm_start(
-                        wp_c, opt_c, resid, alive_prev, rejoined)
+                        wp_c, opt_c, resid,
+                        fp.mix_at(alive_prev, step - 1), rejoined)
+                if sched.straggle_aware:
+                    dscale = fp.disp_scale(alive, state.dec_key, step)
             if flat_native:
                 losses, _, gplane = grads_fn(wp_c, batch, rngs)
                 scal = self.optimizer.plane_scalars(step)
@@ -803,7 +814,8 @@ class PhaseEngine:
                     self._flat_native_step(
                         spec, wp_c, gplane, opt_c, outer_c, scal, step,
                         sst, state.dec_key, resid=resid,
-                        fmask=None if fp is None else (alive, umask))
+                        fmask=None if fp is None else (alive, umask),
+                        dscale=dscale)
             else:
                 wp = spec.unpack(wp_c) if use_flat else wp_c
                 wp_new, opt_new, losses, _ = self.worker_step(
@@ -840,7 +852,8 @@ class PhaseEngine:
                     disp = worker_dispersion(wp_c)
                 code, sst = sched.decision_state(step, sst, disp,
                                                  state.dec_key,
-                                                 event_cost=ec)
+                                                 event_cost=ec,
+                                                 disp_scale=dscale)
                 if sched.kind == "oneshot":
                     pass
                 elif sched.kind == "minibatch":
@@ -1042,7 +1055,7 @@ class PhaseEngine:
     def _flat_native_step_psum(self, spec, plane, gplane, planes, outer_c,
                                scalars, step, sst, dec_key,
                                m_global: int, ml: int, resid=(),
-                               fmask=None):
+                               fmask=None, dscale=None):
         """psum-mode flat-native step: shard-local plane update (hoisted
         before the switch), then the always-on Eq. 4 dispersion — ONE
         psum of the per-shard column sums gives the global mean, one
@@ -1076,7 +1089,8 @@ class PhaseEngine:
                 ax) / n_alive
         ec = self._sched_event_cost(spec.width, m_global)
         code, sst = sched.decision_state(step, sst, disp, dec_key,
-                                         event_cost=ec)
+                                         event_cost=ec,
+                                         disp_scale=dscale)
         if sched.kind == "oneshot":
             return plane, planes, outer_c, resid, sst, disp, code
         if sched.kind == "minibatch":
@@ -1185,6 +1199,7 @@ class PhaseEngine:
                                                  tiled=True)
                               if comp is not None else resid)
                 fmask = None
+                dscale = None
                 if fp is not None:
                     # fault rows gather like resid: the transition and
                     # warm start run on the FULL worker set, so the step
@@ -1198,8 +1213,8 @@ class PhaseEngine:
                     fst_full, _, alive_f, umask_f, rejoined_f = \
                         fp.transition(fst_full, step, state.dec_key)
                     if fp.has_rejoin:
-                        glob_p = faults_mod.masked_mean(wp_full,
-                                                        alive_prev)
+                        glob_p = faults_mod.masked_mean(
+                            wp_full, fp.mix_at(alive_prev, step - 1))
                         codes = spec.rounding_codes()
                         if codes is not None:
                             glob_p = round_to_codes(glob_p, codes)
@@ -1218,12 +1233,15 @@ class PhaseEngine:
                         jax.lax.dynamic_slice_in_dim(
                             fst_full.staleness, i0, ml, 0))
                     fmask = (alive_f, umask_f)
+                    if sched.straggle_aware:
+                        dscale = fp.disp_scale(alive_f, state.dec_key,
+                                               step)
                 losses, _, gplane = grads_fn(wp_full, batch, rngs)
                 wp_full, opt_full, outer_c, resid_full, sst, disp, code = \
                     self._flat_native_step(spec, wp_full, gplane, opt_full,
                                            outer_c, scal, step, sst,
                                            state.dec_key, resid=resid_full,
-                                           fmask=fmask)
+                                           fmask=fmask, dscale=dscale)
                 loss_t = (jnp.mean(losses) if fp is None else
                           jnp.sum(losses * alive_f) / jnp.sum(alive_f))
                 wp_c = jax.lax.dynamic_slice_in_dim(wp_full, i0, ml, 0)
@@ -1235,15 +1253,18 @@ class PhaseEngine:
                         resid_full, i0, ml, 0)
             else:
                 fmask = None
+                dscale = None
                 if fp is not None:
                     alive_prev = fst.alive
                     fst, alive_fl, alive_l, umask_l, rejoined_l = \
                         fp.transition(fst, step, state.dec_key,
                                       row0=i0, num_rows=ml)
                     if fp.has_rejoin:
+                        aprev = fp.mix_at(alive_prev, step - 1,
+                                          row0=i0, num_rows=ml)
                         glob_p = (jax.lax.psum(jnp.sum(
-                            wp_c * alive_prev[:, None], axis=0), ax)
-                            / jax.lax.psum(jnp.sum(alive_prev), ax))
+                            wp_c * aprev[:, None], axis=0), ax)
+                            / jax.lax.psum(jnp.sum(aprev), ax))
                         codes = spec.rounding_codes()
                         if codes is not None:
                             glob_p = round_to_codes(glob_p, codes)
@@ -1255,6 +1276,9 @@ class PhaseEngine:
                         if comp is not None:
                             resid = faults_mod.zero_rows(resid, rejoined_l)
                     fmask = (alive_fl, alive_l, umask_l)
+                    if sched.straggle_aware:
+                        dscale = fp.disp_scale(alive_fl, state.dec_key,
+                                               step)
                 rngs = jax.lax.dynamic_slice_in_dim(rngs, i0, ml, 0)
                 losses, _, gplane = grads_fn(wp_c, batch, rngs)
                 wp_c, opt_c, outer_c, resid, sst, disp, code = \
@@ -1262,7 +1286,7 @@ class PhaseEngine:
                                                 outer_c, scal, step, sst,
                                                 state.dec_key, m_global,
                                                 ml, resid=resid,
-                                                fmask=fmask)
+                                                fmask=fmask, dscale=dscale)
                 loss_t = (jax.lax.psum(jnp.sum(losses), ax) / m_global
                           if fp is None else
                           jax.lax.psum(jnp.sum(losses * alive_l), ax)
@@ -1445,6 +1469,9 @@ class PhaseEngine:
             if (self._faults() is not None
                     and isinstance(state.fault, FaultState)):
                 alive = jnp.asarray(jax.device_get(state.fault.alive))
+                # mid-curriculum (solo) rows stay out of the consensus,
+                # exactly as they stay out of averaging events
+                alive = self._faults().mix_at(alive, int(state.step))
                 return faults_mod.masked_mean_tree(wp, alive)
             return consensus(wp)
 
@@ -1565,6 +1592,7 @@ class PhaseEngine:
 
         def cons(state):
             alive = jnp.asarray(jax.device_get(state.fault.alive))
+            alive = self._faults().mix_at(alive, int(state.step))
             return faults_mod.masked_mean_tree(state.worker_params,
                                                alive)
 

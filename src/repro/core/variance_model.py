@@ -52,7 +52,12 @@ def rho(beta2: float, sigma2: float, w0, w_star) -> float:
 
 
 def predict_averaging_benefit(sigma2_workers, *, beta2: float = 0.0,
-                              dist2: float = 0.0, alive=None) -> dict:
+                              dist2: float = 0.0, alive=None,
+                              lr: float | None = None,
+                              steps: int | None = None,
+                              momentum: float = 0.0,
+                              drift2: float = 0.0,
+                              curvature: float = 0.0) -> dict:
     """Predict what one averaging event buys from measured PER-WORKER
     gradient variances (paper §2.2, Lemma 1 asymptotics).
 
@@ -67,8 +72,15 @@ def predict_averaging_benefit(sigma2_workers, *, beta2: float = 0.0,
 
     Returns a dict with ``n_alive``, ``sigma2_bar``, ``rho``,
     ``variance_reduction`` (the 1/n factor) and ``benefit`` (the
-    absolute predicted variance drop).
+    absolute predicted variance drop). With ``lr`` and ``steps`` both
+    given, the calibrated :func:`predict_post_resize_dispersion`
+    magnitude fields (``predicted_dispersion`` etc.) are merged in —
+    the quantitative K-step envelope, not just the direction.
     """
+    if lr is not None and steps is not None:
+        return predict_post_resize_dispersion(
+            sigma2_workers, lr=lr, steps=steps, momentum=momentum,
+            drift2=drift2, curvature=curvature, alive=alive)
     s2 = np.asarray(sigma2_workers, dtype=np.float64).reshape(-1)
     if alive is None:
         a = np.ones_like(s2)
@@ -88,6 +100,76 @@ def predict_averaging_benefit(sigma2_workers, *, beta2: float = 0.0,
         "variance_reduction": 1.0 / n,
         "benefit": sigma2_bar * (1.0 - 1.0 / n),
     }
+
+
+def predict_post_resize_dispersion(sigma2_workers, *, lr: float,
+                                   steps: int, momentum: float = 0.0,
+                                   drift2: float = 0.0,
+                                   curvature: float = 0.0,
+                                   alive=None) -> dict:
+    """Predict the Eq. 4 dispersion *magnitude* ``steps`` local steps
+    after a consensus point (a resize warm-start, an averaging event)
+    via the K-weighted drift budget of Parallel Restarted SGD
+    (arXiv 1807.06629, Thm. 2's noise + divergence decomposition).
+
+    Every worker starts the window at the shared consensus, so after K
+    steps its deviation from the mean is a weighted sum of its own
+    gradient noise plus the drift of its shard mean from the global
+    objective. With heavy-ball momentum each past gradient g_j is still
+    being applied at step K with total weight
+
+        c_j = lr * (1 - mu^(K - j + 1)) / (1 - mu)
+
+    (= lr for plain SGD). Independent per-step noise adds in quadrature
+    and loses the 1/n mean-projection share; the per-shard drift is the
+    same direction every step, so its weights add coherently:
+
+        E disp ≈ Σ_j c_j² · σ̄² · (1 - 1/n)  +  (Σ_j c_j γ^(j-1))² · drift²
+
+    — linear in K for the noise term, quadratic (at γ = 1) for the
+    drift term, exactly the two regimes the K-step bounds trade off.
+    ``drift2`` is the mean squared deviation of the per-shard mean
+    gradients from their across-shard mean (0 for IID shards);
+    ``sigma2_workers`` the per-worker σ² estimates *at the batch size
+    used* (σ²_sample / batch). ``curvature`` is the local curvature λ
+    of the shard objectives along the drift directions (a Rayleigh
+    quotient d'Hd/d'd; 0 keeps the raw budget): each local step
+    contracts the shard gradient by γ = 1 - lr·λ as the worker
+    descends its own shard objective, so the coherent drift
+    accumulation is geometric, not linear — without it the raw budget
+    systematically over-predicts on curved objectives. Returns the
+    :func:`predict_averaging_benefit` fields plus ``k``,
+    ``noise_dispersion``, ``drift_dispersion`` and their sum
+    ``predicted_dispersion``.
+    """
+    if steps < 1:
+        raise ValueError(f"steps must be >= 1, got {steps}")
+    if not 0.0 <= momentum < 1.0:
+        raise ValueError(f"momentum must be in [0, 1), got {momentum}")
+    gamma = 1.0 - float(lr) * float(curvature)
+    if not 0.0 <= gamma <= 1.0:
+        raise ValueError(
+            f"lr * curvature = {float(lr) * float(curvature)} must be in "
+            "[0, 1] — beyond it the one-step drift contraction "
+            "1 - lr*curvature is not a contraction at all")
+    base = predict_averaging_benefit(sigma2_workers, alive=alive)
+    k = int(steps)
+    mu = float(momentum)
+    j = np.arange(1, k + 1, dtype=np.float64)
+    if mu > 0.0:
+        c = float(lr) * (1.0 - mu ** (k - j + 1.0)) / (1.0 - mu)
+    else:
+        c = np.full(k, float(lr))
+    n = base["n_alive"]
+    noise = float((c ** 2).sum()) * base["sigma2_bar"] * (1.0 - 1.0 / n)
+    drift = float((c * gamma ** (j - 1.0)).sum()) ** 2 * float(drift2)
+    base.update({
+        "k": k,
+        "noise_dispersion": noise,
+        "drift_dispersion": drift,
+        "predicted_dispersion": noise + drift,
+    })
+    return base
 
 
 def empirical_variance_fn(kind: str, X, y):

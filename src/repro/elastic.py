@@ -1,0 +1,445 @@
+"""Elastic membership: live plane resize on a running engine.
+
+PR 7's fault engine masks dead rows but never frees them — a worker
+that leaves for good still costs memory, compute and collective
+bandwidth on every step. This module makes membership a first-class,
+*resizable* runtime axis: an :class:`ElasticPlan` scripts M -> M'
+changes at step boundaries, and :func:`run_elastic` executes them by
+actually repacking the ``EngineState`` planes — params, every
+``FlatOptSpec`` optimizer plane, the error-feedback residual, the
+``FaultState`` rows — and rebuilding the :class:`~repro.topology.Topology`
+and the worker mesh for the new M. Between resizes the unmodified
+``PhaseEngine.run`` drives each segment, so a no-op plan (M' = M, no
+curriculum) lowers to the fault engine bit-exactly: phase blocking
+never affects results, and a resize is just a phase cut plus a row
+repack.
+
+Semantics:
+
+* ``shrink`` at step t: rows ``M'..M-1`` are dropped before step t
+  runs; the surviving rows continue bit-identically (their iterates,
+  optimizer planes and residual rows are untouched — row repack is a
+  pure ``take``).
+* ``grow`` at step t: rows ``M..M'-1`` are appended before step t
+  runs, warm-started from the mixing-cohort consensus of step t-1
+  (optimizer planes and residual rows zeroed, exactly like a fault
+  rejoin). With ``curriculum=c > 0`` each grown row runs c solo steps
+  — it trains but is masked out of every averaging / mixing event,
+  the loss and the dispersion via ``FaultPlan`` solo windows — before
+  its iterate re-enters the mix.
+* a base :class:`~repro.faults.FaultPlan` (scripted crashes / rejoins /
+  straggle on the original rows) composes with the resize plan: each
+  segment keeps the base events of the rows that exist in it. Worker
+  row indices are stable identities across resizes.
+
+``core/variance_model.predict_post_resize_dispersion`` predicts what a
+membership change should cost: the K-weighted drift budget of Parallel
+Restarted SGD (arXiv 1807.06629) calibrated against the measured
+post-resize dispersion (see ``benchmarks/bench_engine.py`` ``elastic``
+arm).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import faults as faults_mod
+from repro.faults import FaultPlan, FaultState
+from repro.topology import Topology
+
+
+class ResizeEvent(NamedTuple):
+    """One scripted membership change: the plane is resized to
+    ``num_workers`` rows immediately BEFORE local step ``step`` runs
+    (1-based, matching ``FaultEvent``: steps >= ``step`` run at the
+    new size)."""
+    step: int
+    num_workers: int
+
+
+class Segment(NamedTuple):
+    """A maximal fixed-membership run of steps ``start <= t < stop``."""
+    start: int
+    stop: int
+    num_workers: int
+
+
+@dataclasses.dataclass(frozen=True)
+class ElasticPlan:
+    """A deterministic resize script for a run starting at
+    ``num_workers`` rows.
+
+    resizes:    :class:`ResizeEvent` tuples, strictly increasing steps
+                >= 2 (a resize at t=1 would precede every step — start
+                the run at that size instead). ``num_workers`` equal to
+                the current size is allowed: a no-op resize is a pure
+                phase cut, bit-identical to the unresized run.
+    curriculum: c > 0 gives every GROWN row c solo steps (train alone,
+                out of the mix) before its iterate re-enters averaging.
+    """
+    num_workers: int
+    resizes: tuple = ()
+    curriculum: int = 0
+
+    def __post_init__(self):
+        if self.num_workers < 1:
+            raise ValueError(
+                f"num_workers must be >= 1, got {self.num_workers}")
+        if self.curriculum < 0:
+            raise ValueError(
+                f"curriculum must be >= 0, got {self.curriculum}")
+        resizes = tuple(ResizeEvent(int(s), int(m)) for s, m in self.resizes)
+        prev_step = 1
+        for ev in resizes:
+            if ev.step <= prev_step:
+                raise ValueError(
+                    f"resize steps must be strictly increasing and >= 2, "
+                    f"got t={ev.step} after t={prev_step}")
+            if ev.num_workers < 1:
+                raise ValueError(
+                    f"resize target M'={ev.num_workers} at t={ev.step} "
+                    "must be >= 1")
+            prev_step = ev.step
+        object.__setattr__(self, "resizes", resizes)
+
+    @classmethod
+    def parse(cls, num_workers: int, *, shrink_at=(), grow_at=(),
+              curriculum: int = 0) -> "ElasticPlan":
+        """Build a plan from CLI ``step:M'`` terms. Each term is
+        validated against the membership it would apply to: shrinks
+        must shrink, grows must grow (equal M' is allowed on either —
+        a scripted no-op)."""
+        events = []
+        for kind, terms in (("shrink", shrink_at), ("grow", grow_at)):
+            for term in terms:
+                try:
+                    step_s, m_s = str(term).split(":")
+                    step, m = int(step_s), int(m_s)
+                except ValueError:
+                    raise ValueError(
+                        f"cannot parse --{kind}-at {term!r} (expected "
+                        "step:M', e.g. 128:12)") from None
+                events.append((step, m, kind))
+        events.sort()
+        cur = num_workers
+        resizes = []
+        for step, m, kind in events:
+            if kind == "shrink" and m > cur:
+                raise ValueError(
+                    f"--shrink-at {step}:{m} would grow the plane "
+                    f"({cur} -> {m} workers) — use --grow-at")
+            if kind == "grow" and m < cur:
+                raise ValueError(
+                    f"--grow-at {step}:{m} would shrink the plane "
+                    f"({cur} -> {m} workers) — use --shrink-at")
+            resizes.append((step, m))
+            cur = m
+        return cls(num_workers, tuple(resizes), curriculum)
+
+    @property
+    def is_trivial(self) -> bool:
+        """True when no resize ever changes the plane and no curriculum
+        window exists — the plan is pure phase cuts."""
+        cur = self.num_workers
+        for ev in self.resizes:
+            if ev.num_workers != cur:
+                return False
+            cur = ev.num_workers
+        return True
+
+    def sizes(self) -> tuple:
+        """Every membership the run passes through, in order."""
+        out = [self.num_workers]
+        for ev in self.resizes:
+            if ev.num_workers != out[-1]:
+                out.append(ev.num_workers)
+        return tuple(out)
+
+    def segments(self, total_steps: int) -> list:
+        """Maximal fixed-membership :class:`Segment` list covering
+        local steps ``1..total_steps``."""
+        if total_steps < 1:
+            raise ValueError(f"total_steps must be >= 1, got {total_steps}")
+        bounds = [1]
+        ms = [self.num_workers]
+        for ev in self.resizes:
+            if ev.step > total_steps:
+                break
+            bounds.append(ev.step)
+            ms.append(ev.num_workers)
+        bounds.append(total_steps + 1)
+        return [Segment(bounds[i], bounds[i + 1], ms[i])
+                for i in range(len(ms))]
+
+    def solo_windows(self) -> tuple:
+        """Global ``(row, start, stop)`` curriculum windows: every
+        grown row trains ``curriculum`` solo steps from its grow step.
+        Rows re-grown after a later shrink get a fresh window."""
+        if self.curriculum <= 0:
+            return ()
+        out = []
+        cur = self.num_workers
+        for ev in self.resizes:
+            for row in range(cur, ev.num_workers):
+                out.append((row, ev.step, ev.step + self.curriculum))
+            cur = ev.num_workers
+        return tuple(out)
+
+    def segment_faults(self, base: FaultPlan | None, m: int,
+                       start: int = 1, stop: int | None = None):
+        """The fault plan a ``m``-row segment engine runs: the base
+        plan's events / straggle / rejoin curriculum restricted to the
+        rows that exist, plus the grow-curriculum solo windows for
+        those rows overlapping steps ``[start, stop)`` (a window from
+        another segment's grow would needlessly engage the fault
+        machinery here). Returns None when the restriction is trivial
+        (the segment lowers to the no-fault engine)."""
+        if base is not None and base.num_workers != self.num_workers:
+            raise ValueError(
+                f"base fault plan has {base.num_workers} workers but the "
+                f"elastic plan starts at {self.num_workers}")
+        events = tuple(ev for ev in (base.events if base else ())
+                       if ev.worker < m)
+        solo = tuple(w for w in self.solo_windows()
+                     if w[0] < m and w[2] > start
+                     and (stop is None or w[1] < stop))
+        plan = FaultPlan(
+            m, events,
+            base.straggle_prob if base else 0.0,
+            solo=solo,
+            rejoin_curriculum=base.rejoin_curriculum if base else 0)
+        return None if plan.is_trivial else plan
+
+
+# --------------------------------------------------------------------------
+# Row repack: EngineState M -> M'
+# --------------------------------------------------------------------------
+
+def _state_m(state) -> int:
+    """The worker-plane row count of an ``EngineState``."""
+    return int(jax.tree.leaves(state.worker_params)[0].shape[0])
+
+
+def _map_planes(state, fn):
+    """Apply ``fn`` to every worker-axis leaf of the state (params,
+    optimizer planes, EF residual, fault rows); scalar carries — keys,
+    step, ``SchedState`` — ride along untouched."""
+    return state._replace(
+        worker_params=jax.tree.map(fn, state.worker_params),
+        opt_state=jax.tree.map(fn, state.opt_state),
+        resid=jax.tree.map(fn, state.resid),
+        fault=jax.tree.map(fn, state.fault))
+
+
+def shrink_state(state, new_m: int):
+    """Repack an ``EngineState`` from M to ``new_m`` <= M rows by
+    dropping rows ``new_m..M-1``. The kept rows are untouched (a pure
+    ``take`` on every plane), so the surviving workers continue
+    bit-identically."""
+    old_m = _state_m(state)
+    if not 1 <= new_m <= old_m:
+        raise ValueError(
+            f"cannot shrink a {old_m}-row plane to {new_m} rows")
+    if isinstance(state.fault, FaultState):
+        alive = np.asarray(jax.device_get(state.fault.alive))[:new_m]
+        if not np.any(alive > 0):
+            raise ValueError(
+                f"shrinking to {new_m} rows would keep no alive worker "
+                "— every kept row is dead under the fault plan")
+    return _map_planes(state, lambda x: x[:new_m])
+
+
+def grow_state(state, new_m: int, *, optimizer, faults=None):
+    """Repack an ``EngineState`` from M to ``new_m`` >= M rows. The
+    appended rows warm-start from the current consensus — the mean
+    over the mixing cohort (alive, non-solo) of the last completed
+    step under ``faults``, the plain worker mean otherwise — with
+    optimizer planes, error-feedback residual rows and staleness
+    zeroed, exactly like a fault-plan rejoin."""
+    old_m = _state_m(state)
+    if not old_m <= new_m:
+        raise ValueError(
+            f"cannot grow a {old_m}-row plane to {new_m} rows")
+    if new_m == old_m:
+        return state
+    k = new_m - old_m
+    if isinstance(state.fault, FaultState):
+        mask = state.fault.alive
+    else:
+        mask = jnp.ones((old_m,), jnp.float32)
+    if faults is not None:
+        mask = faults.mix_at(mask, int(state.step))
+    glob = faults_mod.masked_mean_tree(state.worker_params, mask)
+    new_rows = jax.tree.map(
+        lambda g: jnp.broadcast_to(g[None], (k,) + g.shape), glob)
+    new_opt = jax.vmap(optimizer.init)(new_rows)
+
+    def cat(a, b):
+        return jnp.concatenate([a, jnp.asarray(b, a.dtype)], axis=0)
+
+    out = state._replace(
+        worker_params=jax.tree.map(cat, state.worker_params, new_rows),
+        opt_state=jax.tree.map(cat, state.opt_state, new_opt))
+    if not (isinstance(state.resid, tuple) and len(state.resid) == 0):
+        width = state.resid.shape[1]
+        out = out._replace(resid=cat(
+            state.resid, jnp.zeros((k, width), state.resid.dtype)))
+    if isinstance(state.fault, FaultState):
+        out = out._replace(fault=FaultState(
+            cat(state.fault.alive, jnp.ones((k,), jnp.float32)),
+            cat(state.fault.staleness, jnp.zeros((k,), jnp.int32))))
+    return out
+
+
+def resize_state(state, new_m: int, *, optimizer, faults=None):
+    """Dispatch :func:`shrink_state` / :func:`grow_state` (a no-op
+    when the plane is already ``new_m`` rows). ``faults`` is the fault
+    plan of the segment that just ENDED — it defines the consensus
+    cohort grown rows warm-start from."""
+    old_m = _state_m(state)
+    if new_m < old_m:
+        return shrink_state(state, new_m)
+    if new_m > old_m:
+        return grow_state(state, new_m, optimizer=optimizer,
+                          faults=faults)
+    return state
+
+
+def resize_engine(engine, new_m: int, *, faults=None):
+    """A segment engine for ``new_m`` rows: the topology re-validated
+    and rebuilt at the new size (``full`` stays bit-exact to the mean
+    path by construction), the worker mesh rebuilt over the devices
+    dividing ``new_m``, and the segment fault plan swapped in."""
+    from repro.launch.mesh import make_worker_mesh
+    kw = {"faults": faults}
+    t = engine.topology
+    if t is not None:
+        kw["topology"] = Topology.build(
+            t.kind, new_m,
+            groups=t.groups if t.kind == "groups" else None)
+    if engine.mesh is not None:
+        kw["mesh"] = make_worker_mesh(new_m)
+    return dataclasses.replace(engine, **kw)
+
+
+def segment_engine(engine, plan: ElasticPlan, step: int,
+                   total_steps: int | None = None):
+    """The ``(engine, num_workers)`` in effect at local step ``step``
+    (the resized engine whose segment contains it). ``step`` may be 0
+    (before the first step). Used by ``train.py`` to build the
+    like-state a mid-resize checkpoint resumes into."""
+    m, start, stop = plan.num_workers, 1, None
+    for ev in plan.resizes:
+        if total_steps is not None and ev.step > total_steps:
+            break
+        if ev.step <= max(step, 1):
+            m, start = ev.num_workers, ev.step
+        elif stop is None:
+            stop = ev.step
+    if total_steps is not None and stop is None:
+        stop = total_steps + 1
+    fp = plan.segment_faults(engine.faults, m, start, stop)
+    return resize_engine(engine, m, faults=fp), m
+
+
+def _validate(engine, plan: ElasticPlan):
+    if engine.outer is not None:
+        raise ValueError(
+            "elastic membership is incompatible with the outer "
+            "optimizer (its consensus step assumes a fixed membership) "
+            "— drop --outer or the resize plan")
+    base = engine.faults
+    if base is not None and base.num_workers != plan.num_workers:
+        raise ValueError(
+            f"fault plan covers {base.num_workers} workers but the "
+            f"elastic plan starts at {plan.num_workers}")
+    g = engine.schedule.inner_groups
+    for m in plan.sizes():
+        if engine.schedule.kind == "hierarchical" and m % g:
+            raise ValueError(
+                f"resize target M'={m} is not divisible by "
+                f"inner_groups={g} — hierarchical averaging needs every "
+                "membership the run passes through to split evenly")
+        t = engine.topology
+        if t is not None:
+            Topology.build(t.kind, m,
+                           groups=t.groups if t.kind == "groups" else None)
+        plan.segment_faults(base, m)  # eager solo/event validation
+
+
+def run_elastic(engine, params, data_factory, plan: ElasticPlan, *,
+                steps: int, seed: int = 0, record_every: int = 0,
+                eval_fn=None, worker_eval_fn=None, state=None,
+                return_state: bool = False):
+    """Drive ``engine`` through ``plan`` for ``steps`` local steps.
+
+    ``data_factory(m, t0, k)`` returns the data argument (e.g. a
+    ``DeviceDataset`` slice) for ``k`` steps starting at local step
+    ``t0`` under an ``m``-row plane — it must be a pure function of
+    its arguments so resume replays identical batches.
+
+    Resumes from ``state`` (a checkpointed ``EngineState``; its plane
+    row count disambiguates whether a resize at exactly
+    ``state.step + 1`` was already applied before the save). Returns
+    ``(final consensus params, history)`` like ``PhaseEngine.run``;
+    the history additionally records ``resizes`` as
+    ``(step, old_m, new_m)``. ``return_state`` appends the final
+    state. A plan with no effective resizes and no curriculum lowers
+    to the plain (fault) engine bit-exactly: segment boundaries are
+    phase cuts, which never affect results.
+    """
+    _validate(engine, plan)
+    segs = plan.segments(steps)
+    done = 0 if state is None else int(state.step)
+    if done >= steps:
+        raise ValueError(
+            f"state has already completed {done} of {steps} steps")
+    hist = {"loss": [], "dispersion": [], "disp_trace": [],
+            "averages": 0, "eval": [], "worker_eval": [],
+            "resizes": []}
+    prev_faults = None
+    for seg in segs:
+        fp = plan.segment_faults(engine.faults, seg.num_workers,
+                                 seg.start, seg.stop)
+        if seg.stop - 1 <= done:  # segment fully completed before resume
+            prev_faults = fp
+            continue
+        eng = resize_engine(engine, seg.num_workers, faults=fp)
+        if state is not None:
+            old_m = _state_m(state)
+            if old_m != seg.num_workers:
+                if done + 1 != seg.start:
+                    raise ValueError(
+                        f"resumed state has {old_m} worker rows but the "
+                        f"segment covering step {done + 1} runs "
+                        f"{seg.num_workers} — the checkpoint does not "
+                        "match the elastic plan")
+                if engine.mesh is not None:
+                    from repro.sharding.specs import unshard_engine_state
+                    state = unshard_engine_state(state)
+                state = resize_state(state, seg.num_workers,
+                                     optimizer=engine.optimizer,
+                                     faults=prev_faults)
+                hist["resizes"].append(
+                    (seg.start, old_m, seg.num_workers))
+        t0 = max(done + 1, seg.start)
+        k = seg.stop - t0
+        data = data_factory(seg.num_workers, t0, k)
+        out = eng.run(params, data, num_workers=seg.num_workers,
+                      seed=seed, record_every=record_every,
+                      eval_fn=eval_fn, worker_eval_fn=worker_eval_fn,
+                      steps=k, state=state, return_state=True)
+        params_final, h, state = out
+        for key in ("loss", "dispersion", "disp_trace", "eval",
+                    "worker_eval"):
+            hist[key].extend(h[key])
+        hist["averages"] += h["averages"]
+        done = seg.stop - 1
+        prev_faults = fp
+    if return_state:
+        return params_final, hist, state
+    return params_final, hist

@@ -7,8 +7,15 @@ module makes those faults a first-class, bit-reproducible scenario axis
 instead of an ops accident:
 
 * a :class:`FaultPlan` scripts crash / rejoin events (and membership
-  changes M -> M', which are just simultaneous crashes) and an optional
-  stochastic per-step straggle probability;
+  changes M -> M': :meth:`FaultPlan.shrink` / :meth:`FaultPlan.grow`,
+  which are simultaneous crashes / rejoins — ``repro.elastic`` applies
+  the same change to a live ``EngineState`` by actually repacking the
+  plane), an optional stochastic per-step straggle probability, and
+  **solo windows**: steps during which a row trains (its local update
+  applies) but is masked out of every averaging / mixing event, the
+  loss and the dispersion. ``rejoin_curriculum=c`` derives a c-step
+  solo window after every scripted rejoin, so a warm-started worker
+  re-converges alone before its iterate re-enters the mix;
 * the plan compiles to a pure per-step transition on a small
   :class:`FaultState` ``(alive, staleness)`` carry riding the engine
   scan exactly like ``SchedState`` — scripted liveness is a pure
@@ -91,10 +98,22 @@ class FaultPlan:
                    mixing event). Drawn per (step, row) from the salted
                    ``dec_key`` stream — identical across engine paths,
                    shards and resume.
+    solo:          ``(worker, start, stop)`` windows — during steps
+                   ``start <= t < stop`` the row keeps updating but is
+                   excluded from averaging / mixing events, the loss
+                   and the dispersion (a curriculum: train alone, then
+                   re-enter the mix). ``repro.elastic`` uses these for
+                   grown rows.
+    rejoin_curriculum: c > 0 derives a ``(worker, t, t + c)`` solo
+                   window after every scripted rejoin at ``t``, so the
+                   warm-started worker runs c solo steps before its
+                   iterate re-enters the mix.
     """
     num_workers: int
     events: tuple = ()
     straggle_prob: float = 0.0
+    solo: tuple = ()
+    rejoin_curriculum: int = 0
 
     def __post_init__(self):
         if self.num_workers < 1:
@@ -145,6 +164,51 @@ class FaultPlan:
                     f"all {self.num_workers} workers are dead from step "
                     f"{ev.step} — at least one must stay alive")
         object.__setattr__(self, "events", events)
+        if self.rejoin_curriculum < 0:
+            raise ValueError(
+                f"rejoin_curriculum must be >= 0, got "
+                f"{self.rejoin_curriculum}")
+        solo = tuple(tuple(int(v) for v in w) for w in self.solo)
+        for w in solo:
+            if len(w) != 3:
+                raise ValueError(
+                    f"solo window {w!r} must be (worker, start, stop)")
+            worker, start, stop = w
+            if not 0 <= worker < self.num_workers:
+                raise ValueError(
+                    f"solo window row m={worker} out of range for "
+                    f"{self.num_workers} workers")
+            if not 1 <= start < stop:
+                raise ValueError(
+                    f"solo window {w!r} needs 1 <= start < stop")
+        object.__setattr__(self, "solo", solo)
+        # curriculum windows derive from the scripted rejoins; explicit
+        # solo windows come from the caller (repro.elastic adds them
+        # for grown rows). _solo_windows is what the streams consume.
+        derived = tuple((ev.worker, ev.step, ev.step + self.rejoin_curriculum)
+                        for ev in events
+                        if ev.kind == "rejoin" and self.rejoin_curriculum > 0)
+        windows = solo + tuple(w for w in derived if w not in solo)
+        object.__setattr__(self, "_solo_windows", windows)
+        if windows:
+            # at every liveness/solo breakpoint, some row must remain in
+            # the mix (alive and not solo) — events and dispersion are
+            # normalized by the mix count
+            breaks = sorted({1} | {ev.step for ev in events}
+                            | {t for _, a, b in windows for t in (a, b)})
+            for t in breaks:
+                alive = [True] * self.num_workers
+                for ev in events:
+                    if ev.step <= t:
+                        alive[ev.worker] = ev.kind == "rejoin"
+                in_solo = [any(w == i and a <= t < b
+                               for i, a, b in windows)
+                           for w in range(self.num_workers)]
+                if not any(a and not s for a, s in zip(alive, in_solo)):
+                    raise ValueError(
+                        f"no worker left in the mix at step {t}: every "
+                        "alive row is inside a solo window — at least "
+                        "one must keep averaging")
 
     # -- static structure ------------------------------------------------
 
@@ -152,7 +216,8 @@ class FaultPlan:
     def is_trivial(self) -> bool:
         """True when the plan can be lowered away entirely (the engine
         then runs its unmodified no-fault paths, bit-identically)."""
-        return not self.events and self.straggle_prob == 0.0
+        return (not self.events and self.straggle_prob == 0.0
+                and not self._solo_windows)
 
     @property
     def has_rejoin(self) -> bool:
@@ -160,13 +225,14 @@ class FaultPlan:
 
     @classmethod
     def parse(cls, text: str, num_workers: int, *,
-              straggle_prob: float = 0.0, rejoin_after: int = 0
-              ) -> "FaultPlan":
+              straggle_prob: float = 0.0, rejoin_after: int = 0,
+              rejoin_curriculum: int = 0) -> "FaultPlan":
         """Parse a CLI fault script: comma-separated
         ``kind:m=<row>@t=<step>`` terms, e.g.
         ``"crash:m=3@t=100,rejoin:m=3@t=200"``. ``rejoin_after > 0``
         auto-appends a rejoin N steps after every crash that has no
-        later scripted event for the same worker."""
+        later scripted event for the same worker; ``rejoin_curriculum``
+        passes through to the plan (c solo steps after every rejoin)."""
         events = []
         for part in text.split(","):
             if not part.strip():
@@ -192,7 +258,8 @@ class FaultPlan:
                 if not later:
                     events.append(FaultEvent("rejoin", ev.worker,
                                              ev.step + rejoin_after))
-        return cls(num_workers, tuple(events), straggle_prob)
+        return cls(num_workers, tuple(events), straggle_prob,
+                   rejoin_curriculum=rejoin_curriculum)
 
     @classmethod
     def shrink(cls, num_workers: int, new_num_workers: int, step: int,
@@ -205,6 +272,28 @@ class FaultPlan:
         events = tuple(FaultEvent("crash", m, step)
                        for m in range(new_num_workers, num_workers))
         return cls(num_workers, events, **kw)
+
+    @classmethod
+    def grow(cls, num_workers: int, new_num_workers: int, step: int,
+             **kw) -> "FaultPlan":
+        """Scripted membership change M -> M' (M' >= M) at ``step``: a
+        plan for the GROWN M'-row plane whose rows
+        ``num_workers..new_num_workers-1`` are dead from step 1 and
+        rejoin (warm-started from the alive consensus) at ``step``.
+        Pass ``rejoin_curriculum=c`` for c solo steps before the new
+        rows re-enter the mix. ``repro.elastic`` applies the same
+        change to a LIVE ``EngineState`` without padding the plane."""
+        if not 1 <= num_workers <= new_num_workers:
+            raise ValueError(
+                f"cannot grow {num_workers} workers to {new_num_workers}")
+        if step < 2:
+            raise ValueError(
+                f"grow step t={step} must be >= 2 (the joining rows "
+                "crash at t=1 and rejoin at t)")
+        events = tuple(ev for m in range(num_workers, new_num_workers)
+                       for ev in (FaultEvent("crash", m, 1),
+                                  FaultEvent("rejoin", m, step)))
+        return cls(new_num_workers, events, **kw)
 
     # -- pure per-step streams -------------------------------------------
 
@@ -231,35 +320,83 @@ class FaultPlan:
             jax.random.fold_in(base, r), (), jnp.float32))(rows)
         return (u < self.straggle_prob).astype(jnp.float32)
 
+    def solo_at(self, step):
+        """(M,) f32 — 1.0 where the row is inside a solo window at local
+        step ``step`` (explicit windows plus the rejoin-curriculum
+        derived ones). Pure function of ``step``, like :meth:`alive_at`."""
+        out = jnp.zeros((self.num_workers,), jnp.float32)
+        for worker, start, stop in self._solo_windows:
+            out = out.at[worker].set(
+                jnp.where((step >= start) & (step < stop), 1.0,
+                          out[worker]))
+        return out
+
+    def mix_at(self, alive, step, *, row0=0, num_rows: int | None = None):
+        """Mask ``alive`` down to the mixing cohort at ``step`` —
+        alive rows not inside a solo window. With no solo windows this
+        returns ``alive`` unchanged (the same array: bit-exact no-op).
+        ``alive`` spans the full plane by default; shards pass their
+        slice via ``row0``/``num_rows``."""
+        if not self._solo_windows:
+            return alive
+        solo = self.solo_at(step)
+        if num_rows is not None and num_rows != self.num_workers:
+            solo = jax.lax.dynamic_slice_in_dim(solo, row0, num_rows, 0)
+        return alive * (1.0 - solo)
+
+    def disp_scale(self, mix_full, dec_key, step):
+        """Fraction of the mixing cohort that applied its local update
+        this step — the discount ``straggle_aware`` adaptive schedules
+        multiply into the measured dispersion before it feeds their
+        EMA/budget (a straggler's frozen iterate lags the mean and
+        widens dispersion without carrying gradient-variance signal).
+        Pure function of ``(dec_key, step)`` plus the scripted masks,
+        so every engine path and every shard computes the identical
+        scalar with no collective."""
+        rows = jnp.arange(self.num_workers, dtype=jnp.int32)
+        straggle = self.straggle_mask(dec_key, step, rows)
+        updated = jnp.sum(mix_full * (1.0 - straggle))
+        return updated / jnp.maximum(jnp.sum(mix_full), 1.0)
+
     def transition(self, state: FaultState, step, dec_key, *,
                    row0=0, num_rows: int | None = None):
         """One pure fault-state step for rows ``[row0, row0+num_rows)``
         (the full plane by default; shards pass their slice).
 
-        Returns ``(new_state, alive_full, alive, umask, rejoined)``:
-        ``alive_full`` the global (M,) liveness (every shard computes it
-        locally — mixing matrices need all rows), ``alive`` / ``umask``
-        / ``rejoined`` the local-row masks. ``umask`` = alive and not
-        straggling = rows that apply their local update this step.
+        Returns ``(new_state, mix_full, mix, umask, rejoined)``:
+        ``mix_full`` the global (M,) mixing cohort — alive rows not in
+        a solo window (every shard computes it locally — mixing
+        matrices need all rows), ``mix`` / ``umask`` / ``rejoined`` the
+        local-row masks. ``umask`` = alive and not straggling = rows
+        that apply their local update this step (solo rows DO update —
+        that is the curriculum). Without solo windows the mix masks are
+        exactly the alive masks, bitwise. The carried ``new_state``
+        keeps the *scripted* liveness, so rejoin detection (and its
+        one-time warm start) is independent of curricula.
         """
         m = self.num_workers
         if num_rows is None:
             num_rows = m
         alive_prev = state.alive
         alive_full = self.alive_at(step)
+        mix_full = self.mix_at(alive_full, step)
         if num_rows == m and isinstance(row0, int) and row0 == 0:
             alive = alive_full
+            mix = mix_full
             rows = jnp.arange(m, dtype=jnp.int32)
         else:
             alive = jax.lax.dynamic_slice_in_dim(alive_full, row0,
                                                  num_rows, 0)
+            mix = (alive if mix_full is alive_full else
+                   jax.lax.dynamic_slice_in_dim(mix_full, row0,
+                                                num_rows, 0))
             rows = jnp.asarray(row0, jnp.int32) + jnp.arange(
                 num_rows, dtype=jnp.int32)
         straggle = self.straggle_mask(dec_key, step, rows)
         umask = alive * (1.0 - straggle)
         rejoined = alive * (1.0 - alive_prev)
         staleness = jnp.where(umask > 0, jnp.int32(0), state.staleness + 1)
-        return (FaultState(alive, staleness), alive_full, alive, umask,
+        return (FaultState(alive, staleness), mix_full, mix, umask,
                 rejoined)
 
 

@@ -141,6 +141,30 @@ def main(argv=None):
                     help="auto-rejoin every scripted crash N steps "
                          "later (crashes with a later scripted event "
                          "for the same worker are left alone)")
+    ap.add_argument("--shrink-at", action="append", default=[],
+                    metavar="STEP:M'",
+                    help="elastic membership (repro.elastic): shrink "
+                         "the live worker plane to M' rows before STEP "
+                         "runs — the dropped rows' memory, compute and "
+                         "collective bandwidth are actually freed "
+                         "(repeatable; composes with --grow-at)")
+    ap.add_argument("--grow-at", action="append", default=[],
+                    metavar="STEP:M'",
+                    help="elastic membership: grow the live worker "
+                         "plane to M' rows before STEP runs; new rows "
+                         "warm-start from the mixing-cohort consensus "
+                         "with optimizer planes zeroed (repeatable)")
+    ap.add_argument("--rejoin-curriculum", type=int, default=0,
+                    help="solo steps a rejoined or grown worker trains "
+                         "before its iterate re-enters averaging (it "
+                         "updates locally but is masked out of every "
+                         "mix, the loss and the dispersion)")
+    ap.add_argument("--straggle-aware", action="store_true",
+                    help="adaptive schedules only: discount the "
+                         "measured dispersion by the fraction of the "
+                         "mixing cohort that actually updated, so "
+                         "straggler-widened dispersion does not "
+                         "trigger spurious averaging events")
     ap.add_argument("--non-iid-alpha", type=float, default=0.0,
                     help="> 0 enables Dirichlet(alpha) label-skewed "
                          "(non-IID) worker shards for dataset-backed "
@@ -211,9 +235,11 @@ def main(argv=None):
             # >= 1, crash/rejoin alternation per worker (a rejoin
             # needs a prior crash), never-all-dead — surface its
             # message at parse time instead of deep inside a trace
-            faults = FaultPlan.parse(args.faults or "", args.workers,
-                                     straggle_prob=args.straggle_prob,
-                                     rejoin_after=args.rejoin)
+            faults = FaultPlan.parse(
+                args.faults or "", args.workers,
+                straggle_prob=args.straggle_prob,
+                rejoin_after=args.rejoin,
+                rejoin_curriculum=max(args.rejoin_curriculum, 0))
         except ValueError as e:
             ap.error(f"--faults: {e}")
         if args.outer_momentum > 0:
@@ -224,6 +250,55 @@ def main(argv=None):
     elif args.rejoin:
         ap.error("--rejoin without --faults has no crash to rejoin "
                  "from")
+    if args.rejoin_curriculum < 0:
+        ap.error(f"--rejoin-curriculum must be >= 0, got "
+                 f"{args.rejoin_curriculum}")
+    if args.straggle_aware:
+        if args.avg not in ("adaptive_threshold", "adaptive_budget",
+                            "adaptive_bytes"):
+            ap.error(f"--straggle-aware discounts the dispersion fed to "
+                     f"the adaptive schedules; --avg {args.avg} never "
+                     "consumes dispersion — use an adaptive_* schedule "
+                     "or drop the flag")
+        if args.straggle_prob <= 0.0:
+            ap.error("--straggle-aware needs --straggle-prob > 0 — "
+                     "with no stragglers there is nothing to discount")
+    elastic = None
+    if args.shrink_at or args.grow_at:
+        from repro.elastic import ElasticPlan
+        try:
+            # ElasticPlan.parse validates eagerly: step:M' syntax,
+            # strictly increasing steps >= 2, shrinks shrink and grows
+            # grow relative to the running membership
+            elastic = ElasticPlan.parse(
+                args.workers, shrink_at=args.shrink_at,
+                grow_at=args.grow_at,
+                curriculum=args.rejoin_curriculum)
+        except ValueError as e:
+            ap.error(f"--shrink-at/--grow-at: {e}")
+        if args.outer_momentum > 0:
+            ap.error("--outer-momentum steps on a fixed-membership "
+                     "consensus mean, which an elastic run never keeps "
+                     "— drop --shrink-at/--grow-at or the outer "
+                     "optimizer")
+        for m in elastic.sizes():
+            # every membership the run passes through must satisfy the
+            # same topology / inner-groups constraints as the initial M
+            if args.avg == "hierarchical" and m % args.inner_groups:
+                ap.error(f"resize target M'={m} is not divisible by "
+                         f"--inner-groups ({args.inner_groups}) — "
+                         "hierarchical averaging needs every membership "
+                         "the run passes through to split evenly")
+            if args.topology and m != args.workers:
+                try:
+                    Topology.build(args.topology, m,
+                                   groups=args.topology_groups)
+                except ValueError as e:
+                    ap.error(f"resize target M'={m} is incompatible "
+                             f"with --topology {args.topology}: {e}")
+    elif args.rejoin_curriculum and not (faults and faults.has_rejoin):
+        ap.error("--rejoin-curriculum without --grow-at or a rejoin "
+                 "fault event has no worker to run a curriculum for")
     if args.non_iid_alpha < 0:
         ap.error(f"--non-iid-alpha must be >= 0, got "
                  f"{args.non_iid_alpha}")
@@ -275,12 +350,17 @@ def main(argv=None):
         kind=args.avg, phase_len=args.phase_len, zeta=args.zeta,
         inner_phase_len=args.phase_len,
         outer_phase_len=args.outer_phase_len or args.phase_len * 8,
-        inner_groups=args.inner_groups,
+        # only hierarchical consumes inner groups, but the lax.switch
+        # traces the inner branch for every kind — a non-dividing
+        # (dead) group count would still fail the reshape under trace
+        inner_groups=(args.inner_groups if args.avg == "hierarchical"
+                      else 1),
         disp_threshold=args.disp_threshold,
         disp_ema_beta=args.disp_ema_beta,
         comm_budget=args.comm_budget,
         byte_budget=args.byte_budget,
-        budget_horizon=args.budget_horizon or args.steps)
+        budget_horizon=args.budget_horizon or args.steps,
+        straggle_aware=args.straggle_aware)
     outer = (OuterOptimizer(lr=1.0, momentum=args.outer_momentum)
              if args.outer_momentum > 0 else None)
     mesh = None
@@ -310,26 +390,64 @@ def main(argv=None):
         print(f"[train] wire={compression.wire} "
               f"(error_feedback={compression.error_feedback})")
 
-    # per-worker independent data streams (paper §3.2: distinct shuffles)
-    def batch_iter():
-        streams = [token_stream(cfg.vocab_size, args.batch, args.seq,
-                                seed=args.seed * 131 + i)
-                   for i in range(args.workers)]
-        for _ in range(args.steps):
-            toks = np.stack([next(s) for s in streams])
+    # per-worker independent data streams (paper §3.2: distinct
+    # shuffles); under an elastic plan a row keeps its stream across
+    # resizes (row indices are stable identities), so a re-grown worker
+    # continues where it left off instead of replaying data
+    streams = {}
+
+    def stream(i):
+        if i not in streams:
+            streams[i] = token_stream(cfg.vocab_size, args.batch,
+                                      args.seq, seed=args.seed * 131 + i)
+        return streams[i]
+
+    def batches(m, k):
+        for _ in range(k):
+            toks = np.stack([next(stream(i)) for i in range(m)])
             yield {"tokens": jnp.asarray(toks)}
 
     resume_state = None
+    at = 0
     if args.resume:
-        like = engine.init(params, args.workers, args.seed)
+        if elastic is not None:
+            import json
+            with open(args.resume + ".json") as f:
+                meta = json.load(f)
+            at = int(meta["step"])
+            saved_m = (meta.get("extra") or {}).get("num_workers")
+            # a save at an exact resize boundary may hold either the
+            # pre- or post-resize plane; the recorded row count picks
+            # the matching segment's like-state
+            from repro.elastic import segment_engine
+            seg_eng, m = segment_engine(engine, elastic, at,
+                                        at + args.steps)
+            if saved_m is not None and int(saved_m) != m:
+                seg_eng, m = segment_engine(engine, elastic, at + 1,
+                                            at + args.steps)
+            like = seg_eng.init(params, m, args.seed)
+        else:
+            like = engine.init(params, args.workers, args.seed)
         resume_state, at = load_engine_state(args.resume, like)
         print(f"[train] resuming from {args.resume} at step {at}")
 
     t0 = time.time()
-    final, hist, state = engine.run(
-        params, batch_iter(), num_workers=args.workers, seed=args.seed,
-        record_every=10, prefetch=not args.no_prefetch,
-        state=resume_state, return_state=True)
+    if elastic is not None:
+        from repro.elastic import run_elastic
+        final, hist, state = run_elastic(
+            engine, params, lambda m, t_start, k: batches(m, k),
+            elastic, steps=at + args.steps, seed=args.seed,
+            record_every=10, state=resume_state, return_state=True)
+        for t, old_m, new_m in hist["resizes"]:
+            kind = "shrink" if new_m < old_m else "grow"
+            print(f"[train] {kind} {old_m} -> {new_m} workers before "
+                  f"step {t}")
+    else:
+        final, hist, state = engine.run(
+            params, batches(args.workers, args.steps),
+            num_workers=args.workers, seed=args.seed,
+            record_every=10, prefetch=not args.no_prefetch,
+            state=resume_state, return_state=True)
     dt = time.time() - t0
     losses = hist["loss"]
     print(f"[train] {args.steps} steps in {dt:.1f}s "
@@ -342,7 +460,8 @@ def main(argv=None):
               f"{hist['dispersion'][-1][1]:.3e}")
     if args.checkpoint:
         save_checkpoint(args.checkpoint, final, step=int(state.step))
-        save_engine_state(args.checkpoint + ".state", state)
+        save_engine_state(args.checkpoint + ".state", state,
+                          elastic=elastic is not None)
         print(f"[train] saved consensus model to {args.checkpoint} "
               f"(+ resumable EngineState at {args.checkpoint}.state)")
     return final, hist

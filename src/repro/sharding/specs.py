@@ -16,6 +16,7 @@ These are the *baseline* rules — EXPERIMENTS.md §Perf iterates on them
 from __future__ import annotations
 
 import jax
+import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 
@@ -168,6 +169,21 @@ def engine_state_sharding(mesh, state, *, axes=None):
         jax.tree.map(lambda _: repl, state.sched),
         jax.tree.map(lambda _: ws, state.resid),
         jax.tree.map(lambda _: ws, state.fault))
+
+
+def unshard_engine_state(state):
+    """Pull the worker-axis leaves of an ``EngineState`` back to host
+    as plain single-device arrays (``repro.elastic`` repacks rows
+    between mesh layouts; the PRNG keys and scalar carries are left
+    untouched — ``device_get`` on typed key arrays would strip the key
+    dtype)."""
+    pull = lambda t: jax.tree.map(
+        lambda x: jnp.asarray(jax.device_get(x)), t)
+    return state._replace(
+        worker_params=pull(state.worker_params),
+        opt_state=pull(state.opt_state),
+        resid=pull(state.resid),
+        fault=pull(state.fault))
 
 
 _SIZES = {}

@@ -216,9 +216,10 @@ class TestEngineStateVersions:
         save_engine_state(path, st)
         meta = json.load(open(path + ".json"))
         # compressed no-fault states keep the v3 layout even though the
-        # build's latest version is 4 (fault rows)
+        # build's latest version has moved on (v4 fault rows, v5
+        # elastic saves)
         assert meta["extra"]["engine_state_version"] == 3
-        assert ENGINE_STATE_VERSION == 4
+        assert ENGINE_STATE_VERSION == 5
         loaded, step = load_engine_state(path, like)
         assert step == 16
         self._assert_restored(st, loaded)
@@ -284,7 +285,7 @@ class TestEngineStateVersions:
             self._assert_restored(st._replace(sched=like.sched), loaded)
             assert int(loaded.sched.comm_spent) == 0
 
-    @pytest.mark.parametrize("future", [5, 99])
+    @pytest.mark.parametrize("future", [6, 99])
     def test_future_version_refused(self, tmp_path, future):
         st, like = self._state()
         path = os.path.join(tmp_path, f"v{future}")
