@@ -2,7 +2,6 @@
 averaging rate ζ — closed form against Monte-Carlo simulation."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import emit, save, timeit
 from repro.configs.paper import QuadraticConfig

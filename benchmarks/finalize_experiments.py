@@ -2,7 +2,6 @@
 the §Roofline table and the averaging-cost table. Idempotent."""
 from __future__ import annotations
 
-import json
 import os
 import re
 

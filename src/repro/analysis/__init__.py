@@ -1,0 +1,30 @@
+"""repro.analysis: repo-invariant static analysis for the parallel-SGD repro.
+
+Run from the repo root::
+
+    PYTHONPATH=src python -m repro.analysis            # text report
+    PYTHONPATH=src python -m repro.analysis --format json
+
+or import from tests::
+
+    from repro.analysis import analyze, get_rule, RepoModel
+
+The pass is pure ``ast`` — it never imports the analyzed code and has no
+third-party dependencies, so it runs before jax is even installed.  See
+``docs/INVARIANTS.md`` for the contracts each rule encodes.
+"""
+
+from repro.analysis.base import (  # noqa: F401
+    Finding,
+    Rule,
+    all_rules,
+    get_rule,
+    register,
+)
+from repro.analysis.baseline import (  # noqa: F401
+    BASELINE_NAME,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.model import RepoModel  # noqa: F401
+from repro.analysis.runner import Report, analyze, run_rules  # noqa: F401

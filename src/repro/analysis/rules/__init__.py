@@ -1,0 +1,10 @@
+"""Rule modules self-register on import; importing this package loads all."""
+
+from repro.analysis.rules import (  # noqa: F401
+    cache_hygiene,
+    checkpoint_ladder,
+    eager_validation,
+    kernel_twin,
+    rng_salt,
+    trace_safety,
+)

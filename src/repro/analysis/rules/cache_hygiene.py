@@ -1,0 +1,121 @@
+"""jit-cache-hygiene: per-module executable cleanup is a convention.
+
+Contract (docs/INVARIANTS.md §6): the tier-1 suite compiles hundreds of
+jitted executables; without cleanup, CPU-host runs accumulate live
+executables until the suite OOMs.  The convention: ``tests/conftest.py``
+owns a module-scoped autouse fixture that calls ``jax.clear_caches()``
+after every test module, so no test module may leak more than N=0 live
+executables past its own scope.  Structurally that means:
+
+  * ``tests/conftest.py`` must define the fixture
+    (``@pytest.fixture(autouse=True, scope="module")`` +
+    ``jax.clear_caches()``);
+  * no other test module calls ``jax.clear_caches()`` ad hoc — cleanup
+    has one owner;
+  * no test module builds a jitted/pallas executable at import time
+    (module-level ``jax.jit(...)`` / ``pl.pallas_call(...)`` calls):
+    import-time executables outlive the per-module clear.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List
+
+from repro.analysis.base import Finding, register
+from repro.analysis.model import RepoModel, dotted_call_name
+
+RULE_ID = "jit-cache-hygiene"
+MAX_LEAKED_EXECUTABLES = 0
+
+
+def _is_module_scoped_autouse(fn: ast.AST) -> bool:
+    for dec in getattr(fn, "decorator_list", []):
+        if not isinstance(dec, ast.Call):
+            continue
+        name = dotted_call_name(dec.func) or ""
+        if name.rsplit(".", 1)[-1] != "fixture":
+            continue
+        autouse = False
+        module_scoped = False
+        for kw in dec.keywords:
+            if kw.arg == "autouse" and isinstance(kw.value, ast.Constant):
+                autouse = bool(kw.value.value)
+            if kw.arg == "scope" and isinstance(kw.value, ast.Constant):
+                module_scoped = kw.value.value == "module"
+        if autouse and module_scoped:
+            return True
+    return False
+
+
+def _calls_clear_caches(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = dotted_call_name(node.func) or ""
+            if name.rsplit(".", 1)[-1] == "clear_caches":
+                return True
+    return False
+
+
+@register(RULE_ID, "conftest owns per-module jax.clear_caches(); no leaks")
+def check(model: RepoModel) -> List[Finding]:
+    if not model.test_modules():
+        return []
+    findings: List[Finding] = []
+
+    conftest = model.find("tests/conftest.py")
+    has_fixture = False
+    if conftest is not None:
+        for qn, fi in conftest.functions.items():
+            if _is_module_scoped_autouse(fi.node) and _calls_clear_caches(fi.node):
+                has_fixture = True
+                break
+    if not has_fixture:
+        findings.append(
+            Finding(
+                RULE_ID,
+                conftest.rel if conftest else "tests/conftest.py",
+                1,
+                "tests/conftest.py must define a module-scoped autouse "
+                "fixture calling jax.clear_caches() (per-module executable "
+                f"cleanup; leak budget N={MAX_LEAKED_EXECUTABLES})",
+            )
+        )
+
+    for mod in model.test_modules():
+        is_conftest = mod.rel.endswith("conftest.py")
+        # ad-hoc cache clearing outside conftest
+        if not is_conftest:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, ast.Call):
+                    name = dotted_call_name(node.func) or ""
+                    if name.rsplit(".", 1)[-1] == "clear_caches":
+                        findings.append(
+                            Finding(
+                                RULE_ID,
+                                mod.rel,
+                                node.lineno,
+                                "ad-hoc jax.clear_caches(): cleanup is owned "
+                                "by the conftest module-scoped fixture",
+                            )
+                        )
+        # import-time executables escape the per-module clear
+        for stmt in mod.tree.body:
+            if isinstance(stmt, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+                continue
+            for node in ast.walk(stmt):
+                if isinstance(node, ast.Call):
+                    name = dotted_call_name(node.func) or ""
+                    tail = name.rsplit(".", 1)[-1]
+                    if tail in ("jit", "pallas_call"):
+                        findings.append(
+                            Finding(
+                                RULE_ID,
+                                mod.rel,
+                                node.lineno,
+                                f"import-time `{tail}` executable in a test "
+                                "module outlives the per-module cache clear; "
+                                "build it inside the test",
+                            )
+                        )
+    return findings

@@ -1,0 +1,204 @@
+"""kernel-twin: every Pallas kernel has a registered jnp reference twin.
+
+Contract (docs/INVARIANTS.md §3): each fused Pallas pass under
+``src/repro/kernels/`` must have a pure-jnp twin in ``kernels/ref.py`` —
+the twin is the semantics; the kernel is the fast path — plus an
+equivalence test in ``tests/``.  The mapping is explicit: ``ref.py``
+exports a ``TWINS`` dict literal mapping kernel name to twin name(s).
+
+Checks:
+  * a public module-level function calling ``pl.pallas_call`` with no
+    ``TWINS`` entry -> finding;
+  * a ``TWINS`` entry whose twin is not defined in ``ref.py`` -> finding;
+  * a stale ``TWINS`` key naming no discovered kernel -> finding;
+  * twin-signature drift: every kernel parameter (minus launch-only
+    parameters in ``EXEMPT_PARAMS``) must appear in the union of its
+    twins' signatures -> finding;
+  * no test module mentioning both the kernel and one of its twins
+    -> finding.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Set, Tuple
+
+from repro.analysis.base import Finding, register
+from repro.analysis.model import ModuleInfo, RepoModel, dotted_call_name
+
+RULE_ID = "kernel-twin"
+
+# Launch-geometry / dispatch parameters that have no meaning for a jnp twin.
+EXEMPT_PARAMS = {
+    "block_p", "block_m", "block_q", "block_k", "block_s", "block_w",
+    "interpret", "mode",
+}
+
+
+def _param_names(fn: ast.AST) -> Set[str]:
+    a = fn.args
+    return {p.arg for p in a.posonlyargs + a.args + a.kwonlyargs}
+
+
+def _calls_pallas(fn: ast.AST) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            name = dotted_call_name(node.func)
+            if name and name.rsplit(".", 1)[-1] == "pallas_call":
+                return True
+    return False
+
+
+def discover_kernels(model: RepoModel) -> List[Tuple[ModuleInfo, str, ast.AST]]:
+    """Public module-level defs under kernels/ that launch a pallas_call."""
+    out = []
+    for mod in model.src_modules():
+        if "/kernels/" not in mod.rel:
+            continue
+        if mod.rel.endswith(("/ref.py", "/__init__.py")):
+            continue
+        for qn, fi in sorted(mod.functions.items()):
+            if "." in qn or qn.startswith("_"):
+                continue
+            if _calls_pallas(fi.node):
+                out.append((mod, qn, fi.node))
+    return out
+
+
+def _twins_table(ref: ModuleInfo):
+    """(assign_line, {kernel: [twin, ...]}) from the TWINS dict literal."""
+    for node in ref.tree.body:
+        if not isinstance(node, ast.Assign) or len(node.targets) != 1:
+            continue
+        t = node.targets[0]
+        if not (isinstance(t, ast.Name) and t.id == "TWINS"):
+            continue
+        if not isinstance(node.value, ast.Dict):
+            return node.lineno, None
+        table: Dict[str, List[str]] = {}
+        for k, v in zip(node.value.keys, node.value.values):
+            if not (isinstance(k, ast.Constant) and isinstance(k.value, str)):
+                continue
+            names: List[str] = []
+            vals = v.elts if isinstance(v, (ast.Tuple, ast.List)) else [v]
+            for e in vals:
+                if isinstance(e, ast.Constant) and isinstance(e.value, str):
+                    names.append(e.value)
+            table[k.value] = names
+        return node.lineno, table
+    return 0, None
+
+
+def _test_identifiers(mod: ModuleInfo) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(mod.tree):
+        if isinstance(node, ast.Name):
+            out.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            out.add(node.attr)
+        elif isinstance(node, (ast.Import, ast.ImportFrom)):
+            for a in node.names:
+                out.add((a.asname or a.name).split(".")[-1])
+    return out
+
+
+@register(RULE_ID, "every Pallas kernel has a ref.py twin + equivalence test")
+def check(model: RepoModel) -> List[Finding]:
+    kernels = discover_kernels(model)
+    if not kernels:
+        return []
+    ref = model.find("kernels/ref.py")
+    if ref is None:
+        mod = kernels[0][0]
+        return [
+            Finding(
+                RULE_ID,
+                mod.rel,
+                0,
+                "kernels/ref.py is missing: Pallas kernels have no jnp twins",
+            )
+        ]
+    twins_line, table = _twins_table(ref)
+    if table is None:
+        return [
+            Finding(
+                RULE_ID,
+                ref.rel,
+                twins_line,
+                "kernels/ref.py must define a TWINS dict literal mapping "
+                "each Pallas kernel to its jnp twin(s)",
+            )
+        ]
+
+    findings: List[Finding] = []
+    ref_defs = {qn for qn in ref.functions if "." not in qn}
+    test_ids = {m.rel: _test_identifiers(m) for m in model.test_modules()}
+    kernel_names = {qn for _, qn, _ in kernels}
+
+    for mod, name, fn in kernels:
+        if name not in table:
+            findings.append(
+                Finding(
+                    RULE_ID,
+                    mod.rel,
+                    fn.lineno,
+                    f"Pallas kernel `{name}` has no TWINS entry in "
+                    "kernels/ref.py (register its jnp twin)",
+                )
+            )
+            continue
+        twin_names = table[name]
+        missing = [t for t in twin_names if t not in ref_defs]
+        for t in missing:
+            findings.append(
+                Finding(
+                    RULE_ID,
+                    ref.rel,
+                    twins_line,
+                    f"TWINS maps `{name}` to `{t}`, which is not defined in "
+                    "kernels/ref.py",
+                )
+            )
+        present = [t for t in twin_names if t in ref_defs]
+        if present:
+            twin_params: Set[str] = set()
+            for t in present:
+                twin_params |= _param_names(ref.functions[t].node)
+            drift = sorted(_param_names(fn) - twin_params - EXEMPT_PARAMS)
+            if drift:
+                findings.append(
+                    Finding(
+                        RULE_ID,
+                        mod.rel,
+                        fn.lineno,
+                        f"twin-signature drift: kernel `{name}` parameters "
+                        f"{drift} missing from twin(s) {present}",
+                    )
+                )
+        covered = any(
+            name in ids and any(t in ids for t in twin_names)
+            for ids in test_ids.values()
+        )
+        if not covered:
+            findings.append(
+                Finding(
+                    RULE_ID,
+                    mod.rel,
+                    fn.lineno,
+                    f"no equivalence test references kernel `{name}` together "
+                    f"with twin(s) {twin_names} under tests/",
+                )
+            )
+
+    for key in sorted(table):
+        if key not in kernel_names:
+            findings.append(
+                Finding(
+                    RULE_ID,
+                    ref.rel,
+                    twins_line,
+                    f"stale TWINS entry `{key}`: no Pallas kernel of that "
+                    "name found under kernels/",
+                )
+            )
+    return findings

@@ -1,0 +1,674 @@
+"""trace-purity: no host-side control flow or impurity in traced code.
+
+Contract (docs/INVARIANTS.md §1): every function reachable from a
+``PhaseEngine`` scan body, a ``jax.jit`` entry point, or a Pallas kernel
+body must be trace-pure.  Python ``if``/``while``/``assert`` on traced
+values raise ``TracerBoolConversionError`` at best and silently bake in a
+single trace at worst; ``.item()``/``float()``/``np.*`` coercions force a
+device sync; ``time``/``random``/``print``/``global`` make replay
+non-deterministic.
+
+Implementation: AST-level taint analysis.  Roots are discovered
+syntactically (functions passed to ``lax.scan`` & friends, ``jax.jit``
+decorations including ``functools.partial(jax.jit, static_argnames=...)``,
+``pl.pallas_call`` bodies, and ``*_kernel`` functions under ``kernels/``).
+Taint propagates interprocedurally through a conservative intra-repo call
+graph (module-level defs, ``self.`` methods, imported names, plus
+unique-method-name resolution); static arguments (``static_argnames``,
+keyword arguments bound by ``functools.partial`` around a kernel body,
+string/``is None`` comparisons, ``.shape``/``.dtype``/``.ndim`` reads,
+``len()``) are untainted.  Return-value taint is tracked per callee so a
+helper that reduces tracers to static metadata does not taint its caller.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Set, Tuple
+
+from repro.analysis.base import Finding, register
+from repro.analysis.model import (
+    FunctionInfo,
+    ModuleInfo,
+    RepoModel,
+    dotted_call_name,
+)
+from repro.analysis.rules.rng_salt import _single_assignments
+
+RULE_ID = "trace-purity"
+
+# HOF name (last dotted component) -> positions of callee arguments.
+HOF_CALLEE_ARGS = {
+    "scan": (0,),
+    "while_loop": (0, 1),
+    "fori_loop": (2,),
+    "cond": (1, 2),
+    "switch": (1,),
+    "map": (0,),
+    "vmap": (0,),
+    "pmap": (0,),
+    "jit": (0,),
+    "shard_map": (0,),
+    "pallas_call": (0,),
+    "checkpoint": (0,),
+    "remat": (0,),
+    "grad": (0,),
+    "value_and_grad": (0,),
+}
+
+UNTAINT_ATTRS = {
+    "shape", "ndim", "dtype", "size", "sharding", "weak_type", "itemsize",
+}
+UNTAINT_CALLS = {"len", "isinstance", "type", "hasattr", "callable", "repr"}
+IMPURE_CALLS = {"print", "input", "open", "breakpoint", "exec", "eval"}
+IMPURE_MODULES = {"time", "random", "os", "sys", "io", "logging"}
+COERCE_CALLS = {"float", "int", "bool"}
+# Method names never resolved via the unique-name fallback (too generic).
+NO_FALLBACK = {
+    "get", "update", "items", "keys", "values", "append", "extend", "pop",
+    "copy", "sum", "mean", "max", "min", "reshape", "astype", "at", "set",
+    "add", "dot", "tolist", "item", "split", "join", "format", "apply",
+    "init", "build", "read", "write", "close", "encode", "decode",
+}
+
+QualKey = Tuple[str, str]  # (module rel path, function qualname)
+
+
+def _params(fn: ast.AST) -> List[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    names += [p.arg for p in a.kwonlyargs]
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return names
+
+
+def _pos_params(fn: ast.AST) -> List[str]:
+    a = fn.args
+    return [p.arg for p in a.posonlyargs + a.args]
+
+
+def _iter_own(node: ast.AST):
+    """Walk ``node`` without descending into nested function/lambda bodies."""
+    stack = list(ast.iter_child_nodes(node))
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def _const_str_tuple(node: ast.AST) -> List[str]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [
+            e.value
+            for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, str)
+        ]
+    return []
+
+
+def _const_int_tuple(node: ast.AST) -> List[int]:
+    if isinstance(node, ast.Constant) and isinstance(node.value, int):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return [
+            e.value
+            for e in node.elts
+            if isinstance(e, ast.Constant) and isinstance(e.value, int)
+        ]
+    return []
+
+
+def _is_jit_expr(node: ast.AST, mod: ModuleInfo) -> bool:
+    name = dotted_call_name(node)
+    if name is None:
+        return False
+    if name in ("jax.jit", "jit"):
+        return True
+    return mod.imports.get(name, "") == "jax.jit"
+
+
+def _jit_static_names(dec: ast.AST, fn: ast.AST, mod: ModuleInfo):
+    """If ``dec`` marks ``fn`` as jitted, return its static param names."""
+    if _is_jit_expr(dec, mod):
+        return set()
+    if not isinstance(dec, ast.Call):
+        return None
+    callee = dotted_call_name(dec.func) or ""
+    is_partial = callee.rsplit(".", 1)[-1] == "partial"
+    is_jit_call = _is_jit_expr(dec.func, mod)
+    if not (is_jit_call or (is_partial and dec.args and _is_jit_expr(dec.args[0], mod))):
+        return None
+    static: Set[str] = set()
+    pos = _pos_params(fn)
+    for kw in dec.keywords:
+        if kw.arg == "static_argnames":
+            static.update(_const_str_tuple(kw.value))
+        elif kw.arg == "static_argnums":
+            for i in _const_int_tuple(kw.value):
+                if 0 <= i < len(pos):
+                    static.add(pos[i])
+        elif kw.arg == "donate_argnums":
+            pass
+    return static
+
+
+class _Resolver:
+    """Conservative intra-repo call resolution."""
+
+    def __init__(self, model: RepoModel):
+        self.model = model
+        # dotted module path ("repro.core.flat") -> ModuleInfo
+        self.by_dotted: Dict[str, ModuleInfo] = {}
+        for mod in model.src_modules():
+            rel = mod.rel
+            if rel.startswith("src/") and rel.endswith(".py"):
+                dotted = rel[len("src/"):-len(".py")].replace("/", ".")
+                self.by_dotted[dotted] = mod
+                if dotted.endswith(".__init__"):
+                    self.by_dotted[dotted[: -len(".__init__")]] = mod
+
+    def resolve_local(self, mod, caller_qn, name) -> Optional[QualKey]:
+        parts = caller_qn.split(".") if caller_qn else []
+        for i in range(len(parts), -1, -1):
+            cand = ".".join(parts[:i] + [name]) if i else name
+            if cand in mod.functions:
+                return (mod.rel, cand)
+        return None
+
+    def resolve_dotted(self, origin: str) -> Optional[QualKey]:
+        """'repro.core.flat.FlatSpec.supports' / 'repro.topology.build'."""
+        if not origin.startswith("repro."):
+            return None
+        parts = origin.split(".")
+        for cut in range(len(parts) - 1, 0, -1):
+            mod = self.by_dotted.get(".".join(parts[:cut]))
+            if mod is None:
+                continue
+            qn = ".".join(parts[cut:])
+            if qn in mod.functions:
+                return (mod.rel, qn)
+            return None
+        return None
+
+    def resolve_call(self, mod, caller: FunctionInfo, func) -> Optional[QualKey]:
+        if isinstance(func, ast.Name):
+            hit = self.resolve_local(mod, caller.qualname, func.id)
+            if hit:
+                return hit
+            origin = mod.imports.get(func.id)
+            if origin:
+                return self.resolve_dotted(origin)
+            return None
+        if not isinstance(func, ast.Attribute):
+            return None
+        attr = func.attr
+        base = func.value
+        if isinstance(base, ast.Name):
+            if base.id in ("self", "cls") and caller.cls:
+                qn = f"{caller.cls}.{attr}"
+                if qn in mod.functions:
+                    return (mod.rel, qn)
+            origin = mod.imports.get(base.id)
+            if origin:
+                hit = self.resolve_dotted(f"{origin}.{attr}")
+                if hit:
+                    return hit
+        # Unique-method fallback: e.g. ``sched.decision_state(...)`` when
+        # ``decision_state`` is defined exactly once across src/.
+        if attr not in NO_FALLBACK:
+            cands = self.model.name_index.get(attr, [])
+            if len(cands) == 1:
+                rel, qn = cands[0]
+                return (rel, qn)
+        return None
+
+
+def _discover_roots(model: RepoModel, resolver: _Resolver):
+    """qualkey -> set of static param names (union over discovery sites)."""
+    roots: Dict[QualKey, Set[str]] = {}
+
+    def add(key: Optional[QualKey], static: Set[str]):
+        if key is None:
+            return
+        roots.setdefault(key, set()).update(static)
+
+    for mod in model.src_modules():
+        # 1. decorated defs
+        for qn, fi in mod.functions.items():
+            for dec in getattr(fi.node, "decorator_list", []):
+                static = _jit_static_names(dec, fi.node, mod)
+                if static is not None:
+                    add((mod.rel, qn), static)
+            if "/kernels/" in mod.rel and qn.rsplit(".", 1)[-1].endswith("_kernel"):
+                add((mod.rel, qn), set())
+        # 2. higher-order call sites (scan bodies, pallas_call, cond, ...)
+        scopes = [("", FunctionInfo("", mod.tree, None))] + [
+            (qn, fi) for qn, fi in mod.functions.items()
+        ]
+        for qn, fi in scopes:
+            assigns = _single_assignments(fi.node)
+            for node in _iter_own(fi.node):
+                if not isinstance(node, ast.Call):
+                    continue
+                name = dotted_call_name(node.func)
+                if name is None:
+                    continue
+                tail = name.rsplit(".", 1)[-1]
+                if tail not in HOF_CALLEE_ARGS:
+                    continue
+                if tail == "partial":
+                    continue
+                for pos in HOF_CALLEE_ARGS[tail]:
+                    if pos >= len(node.args):
+                        continue
+                    arg = node.args[pos]
+                    cands = arg.elts if isinstance(arg, (ast.Tuple, ast.List)) else [arg]
+                    for cand in cands:
+                        # `kernel = functools.partial(_f, causal=...)` —
+                        # follow the local binding to the partial call.
+                        if isinstance(cand, ast.Name) and isinstance(
+                            assigns.get(cand.id), ast.Call
+                        ):
+                            cand = assigns[cand.id]
+                        static: Set[str] = set()
+                        if isinstance(cand, ast.Call):
+                            cn = dotted_call_name(cand.func) or ""
+                            if cn.rsplit(".", 1)[-1] == "partial" and cand.args:
+                                static = {k.arg for k in cand.keywords if k.arg}
+                                cand = cand.args[0]
+                        if isinstance(cand, ast.Name):
+                            add(resolver.resolve_local(mod, qn, cand.id), static)
+    return roots
+
+
+class _FnAnalysis:
+    """One walk of a function body given a tainted-param set."""
+
+    def __init__(self, model, resolver, mod, fi, tainted_params,
+                 returns_tainted: Dict[QualKey, bool]):
+        self.model = model
+        self.resolver = resolver
+        self.mod = mod
+        self.fi = fi
+        self.env: Set[str] = set(tainted_params)
+        self.containers: Set[str] = set()
+        self.returns_tainted_map = returns_tainted
+        self.callee_taints: Dict[QualKey, Set[str]] = {}
+        self.callees: Set[QualKey] = set()
+        self.returns_tainted = False
+        self.findings: List[Tuple[int, str]] = []
+
+    # -- taint evaluation ------------------------------------------------
+    def tainted(self, node) -> bool:
+        if node is None or isinstance(node, (ast.Constant, ast.Lambda)):
+            return False
+        if isinstance(node, ast.Name):
+            # Host containers of tracers (jax.tree.leaves results): the
+            # container itself is static (`not leaves`, `len(leaves)`),
+            # its elements are traced (see Subscript below).
+            if node.id in self.containers:
+                return False
+            return node.id in self.env
+        if isinstance(node, ast.Attribute):
+            if node.attr in UNTAINT_ATTRS:
+                return False
+            return self.tainted(node.value)
+        if isinstance(node, ast.Compare):
+            ops_static = any(isinstance(o, (ast.Is, ast.IsNot)) for o in node.ops)
+            vals = [node.left] + list(node.comparators)
+            if ops_static:
+                return False
+            if any(isinstance(v, ast.Constant) and isinstance(v.value, str) for v in vals):
+                return False
+            # `x != ()` / `x == []`: structural pytree checks, host-side.
+            if any(
+                isinstance(v, (ast.Tuple, ast.List)) and not v.elts for v in vals
+            ):
+                return False
+            return any(self.tainted(v) for v in vals)
+        if isinstance(node, ast.Call):
+            return self.call_taint(node)
+        if isinstance(node, ast.BoolOp):
+            return any(self.tainted(v) for v in node.values)
+        if isinstance(node, ast.BinOp):
+            return self.tainted(node.left) or self.tainted(node.right)
+        if isinstance(node, ast.UnaryOp):
+            return self.tainted(node.operand)
+        if isinstance(node, ast.IfExp):
+            return (self.tainted(node.body) or self.tainted(node.orelse)
+                    or self.tainted(node.test))
+        if isinstance(node, (ast.Tuple, ast.List, ast.Set)):
+            return any(self.tainted(e) for e in node.elts)
+        if isinstance(node, ast.Dict):
+            return any(self.tainted(v) for v in list(node.keys) + list(node.values) if v)
+        if isinstance(node, ast.Subscript):
+            if isinstance(node.value, ast.Name) and node.value.id in self.containers:
+                return True  # element of a host container of tracers
+            return self.tainted(node.value)
+        if isinstance(node, ast.Starred):
+            return self.tainted(node.value)
+        if isinstance(node, (ast.ListComp, ast.SetComp, ast.GeneratorExp, ast.DictComp)):
+            added = []
+            for gen in node.generators:
+                if self.tainted(gen.iter):
+                    for nm in self._target_names(gen.target):
+                        if nm not in self.env:
+                            self.env.add(nm)
+                            added.append(nm)
+            if isinstance(node, ast.DictComp):
+                out = self.tainted(node.key) or self.tainted(node.value)
+            else:
+                out = self.tainted(node.elt)
+            for nm in added:
+                self.env.discard(nm)
+            return out
+        if isinstance(node, ast.JoinedStr):
+            return False
+        # Conservative default: any tainted Name inside.
+        return any(
+            isinstance(n, ast.Name) and n.id in self.env for n in ast.walk(node)
+        )
+
+    def call_taint(self, node: ast.Call) -> bool:
+        name = dotted_call_name(node.func) or ""
+        tail = name.rsplit(".", 1)[-1]
+        self.record_call(node)
+        if tail in UNTAINT_CALLS:
+            return False
+        key = self.resolver.resolve_call(self.mod, self.fi, node.func)
+        args_tainted = any(self.tainted(a) for a in node.args) or any(
+            self.tainted(k.value) for k in node.keywords
+        )
+        recv_tainted = isinstance(node.func, ast.Attribute) and self.tainted(
+            node.func.value
+        )
+        if key is not None:
+            # Optimistic until the callee is analyzed: the fixpoint loop
+            # re-enqueues callers whenever a callee's return taint flips
+            # to True, so starting at False converges without baking an
+            # early over-approximation into the monotone taint sets.
+            return self.returns_tainted_map.get(key, False)
+        return args_tainted or recv_tainted
+
+    # -- call graph ------------------------------------------------------
+    def record_call(self, node: ast.Call) -> None:
+        key = self.resolver.resolve_call(self.mod, self.fi, node.func)
+        if key is None:
+            return
+        self.callees.add(key)
+        rel, qn = key
+        callee = self.model.modules[rel].functions[qn]
+        pos = _pos_params(callee.node)
+        offset = 0
+        if callee.cls and isinstance(node.func, ast.Attribute):
+            if pos and pos[0] in ("self", "cls"):
+                offset = 1
+        sink = self.callee_taints.setdefault(key, set())
+        for i, arg in enumerate(node.args):
+            if isinstance(arg, ast.Starred):
+                continue
+            if self.tainted(arg):
+                j = i + offset
+                if j < len(pos):
+                    sink.add(pos[j])
+                elif callee.node.args.vararg:
+                    sink.add(callee.node.args.vararg.arg)
+        for kw in node.keywords:
+            if kw.arg and self.tainted(kw.value):
+                sink.add(kw.arg)
+
+    # -- impurity / branch checks ---------------------------------------
+    def flag(self, node, msg: str) -> None:
+        self.findings.append((getattr(node, "lineno", 0), msg))
+
+    def check_call(self, node: ast.Call) -> None:
+        name = dotted_call_name(node.func) or ""
+        parts = name.split(".")
+        tail = parts[-1]
+        root_origin = self.mod.imports.get(parts[0], parts[0])
+        src = ast.unparse(node)
+        if len(src) > 60:
+            src = src[:57] + "..."
+        if tail in IMPURE_CALLS and len(parts) == 1:
+            self.flag(node, f"impure call in traced code: `{src}`")
+            return
+        if root_origin.split(".")[0] in IMPURE_MODULES and len(parts) > 1:
+            self.flag(node, f"host-side `{root_origin.split('.')[0]}` call in traced code: `{src}`")
+            return
+        if tail in COERCE_CALLS and len(parts) == 1:
+            if any(self.tainted(a) for a in node.args):
+                self.flag(node, f"`{tail}()` coerces a traced value: `{src}`")
+            return
+        if tail == "item" and isinstance(node.func, ast.Attribute):
+            if self.tainted(node.func.value):
+                self.flag(node, f"`.item()` forces a device sync on a traced value: `{src}`")
+            return
+        if name in ("jax.device_get", "device_get") and any(
+            self.tainted(a) for a in node.args
+        ):
+            self.flag(node, f"`jax.device_get` on a traced value: `{src}`")
+            return
+        if root_origin.split(".")[0] == "numpy" and len(parts) > 1:
+            if any(self.tainted(a) for a in node.args):
+                self.flag(node, f"`np.*` coercion of a traced value: `{src}`")
+
+    # -- statement walk --------------------------------------------------
+    @staticmethod
+    def _target_names(t) -> List[str]:
+        if isinstance(t, ast.Name):
+            return [t.id]
+        if isinstance(t, (ast.Tuple, ast.List)):
+            out = []
+            for e in t.elts:
+                out.extend(_FnAnalysis._target_names(e))
+            return out
+        if isinstance(t, ast.Starred):
+            return _FnAnalysis._target_names(t.value)
+        return []
+
+    def assign(self, targets, value_tainted: bool) -> None:
+        for t in targets:
+            names = self._target_names(t)
+            if value_tainted:
+                self.env.update(names)
+            else:
+                for nm in names:
+                    self.env.discard(nm)
+
+    def _tree_destructure(self, s: ast.Assign) -> bool:
+        """Handle ``leaves = jax.tree.leaves(x)`` (host container of
+        tracers) and ``leaves, treedef = jax.tree.flatten(x)`` (the
+        treedef is pure host metadata).  Returns True when handled."""
+        if not isinstance(s.value, ast.Call) or len(s.targets) != 1:
+            return False
+        name = dotted_call_name(s.value.func) or ""
+        parts = name.split(".")
+        resolved = ".".join([self.mod.imports.get(parts[0], parts[0])] + parts[1:])
+        if not resolved.startswith("jax."):
+            return False
+        tail = resolved.rsplit(".", 1)[-1]
+        tgt = s.targets[0]
+        if tail in ("leaves", "tree_leaves") and isinstance(tgt, ast.Name):
+            self.containers.add(tgt.id)
+            self.env.discard(tgt.id)
+            return True
+        if tail in ("flatten", "tree_flatten") and isinstance(
+            tgt, (ast.Tuple, ast.List)
+        ) and len(tgt.elts) == 2:
+            first, second = tgt.elts
+            if isinstance(first, ast.Name):
+                self.containers.add(first.id)
+                self.env.discard(first.id)
+            if isinstance(second, ast.Name):
+                self.env.discard(second.id)
+            return True
+        return False
+
+    def eval_calls(self, expr) -> None:
+        """Record+check every call in an arbitrary expression."""
+        if expr is None:
+            return
+        for node in _iter_own_expr(expr):
+            if isinstance(node, ast.Call):
+                self.record_call(node)
+                self.check_call(node)
+
+    def walk(self, body) -> None:
+        for stmt in body:
+            self.stmt(stmt)
+
+    def stmt(self, s) -> None:
+        if isinstance(s, (ast.FunctionDef, ast.AsyncFunctionDef, ast.ClassDef)):
+            return
+        if isinstance(s, ast.Global):
+            self.flag(s, "`global` mutation in traced code")
+            return
+        if isinstance(s, (ast.Assign, ast.AnnAssign, ast.AugAssign)):
+            value = s.value
+            self.eval_calls(value)
+            if isinstance(s, ast.Assign) and self._tree_destructure(s):
+                return
+            if isinstance(s, ast.Assign):
+                self.assign(s.targets, self.tainted(value))
+            elif isinstance(s, ast.AnnAssign):
+                if value is not None:
+                    self.assign([s.target], self.tainted(value))
+            else:  # AugAssign: x += v
+                t = self.tainted(value) or self.tainted(s.target)
+                self.assign([s.target], t)
+            return
+        if isinstance(s, (ast.If, ast.While)):
+            self.eval_calls(s.test)
+            if self.tainted(s.test):
+                kw = "if" if isinstance(s, ast.If) else "while"
+                src = ast.unparse(s.test)
+                if len(src) > 60:
+                    src = src[:57] + "..."
+                self.flag(s, f"Python `{kw}` on a traced value: `{src}`")
+            self.walk(s.body)
+            self.walk(s.orelse)
+            return
+        if isinstance(s, ast.Assert):
+            self.eval_calls(s.test)
+            if self.tainted(s.test):
+                src = ast.unparse(s.test)
+                if len(src) > 60:
+                    src = src[:57] + "..."
+                self.flag(s, f"`assert` on a traced value: `{src}`")
+            return
+        if isinstance(s, ast.For):
+            self.eval_calls(s.iter)
+            iter_container = (
+                isinstance(s.iter, ast.Name) and s.iter.id in self.containers
+            )
+            self.assign([s.target], iter_container or self.tainted(s.iter))
+            self.walk(s.body)
+            self.walk(s.orelse)
+            return
+        if isinstance(s, ast.With):
+            for item in s.items:
+                self.eval_calls(item.context_expr)
+                if item.optional_vars is not None:
+                    self.assign([item.optional_vars], self.tainted(item.context_expr))
+            self.walk(s.body)
+            return
+        if isinstance(s, ast.Try):
+            self.walk(s.body)
+            for h in s.handlers:
+                self.walk(h.body)
+            self.walk(s.orelse)
+            self.walk(s.finalbody)
+            return
+        if isinstance(s, ast.Return):
+            self.eval_calls(s.value)
+            if s.value is not None and self.tainted(s.value):
+                self.returns_tainted = True
+            return
+        if isinstance(s, ast.Expr):
+            self.eval_calls(s.value)
+            return
+        if isinstance(s, ast.Raise):
+            return
+        # Delete, Pass, Break, Continue, Import, Nonlocal: nothing to do.
+
+    def run(self) -> None:
+        # Two passes so loop-carried taint propagates.
+        body = self.fi.node.body if not isinstance(self.fi.node, ast.Module) else []
+        self.walk(body)
+        self.findings.clear()
+        self.walk(body)
+
+
+def _iter_own_expr(expr):
+    stack = [expr]
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, ast.Lambda):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+@register(RULE_ID, "no host-side control flow/impurity in traced functions")
+def check(model: RepoModel) -> List[Finding]:
+    resolver = _Resolver(model)
+    roots = _discover_roots(model, resolver)
+
+    taints: Dict[QualKey, Set[str]] = {}
+    returns_tainted: Dict[QualKey, bool] = {}
+    for key, static in roots.items():
+        mod = model.modules[key[0]]
+        fn = mod.functions[key[1]].node
+        tainted = {
+            p for p in _params(fn) if p not in static and p not in ("self", "cls")
+        }
+        taints[key] = tainted
+
+    worklist = list(taints)
+    analyses: Dict[QualKey, _FnAnalysis] = {}
+    steps = 0
+    while worklist and steps < 10000:
+        steps += 1
+        key = worklist.pop()
+        rel, qn = key
+        mod = model.modules[rel]
+        fi = mod.functions[qn]
+        an = _FnAnalysis(model, resolver, mod, fi, taints.get(key, set()),
+                         returns_tainted)
+        an.run()
+        analyses[key] = an
+        if returns_tainted.get(key) != an.returns_tainted:
+            returns_tainted[key] = an.returns_tainted
+            # Re-analyze callers that saw a different return taint.
+            for ck, ca in analyses.items():
+                if key in ca.callees and ck not in worklist:
+                    worklist.append(ck)
+        for callee, names in an.callee_taints.items():
+            crel = callee[0]
+            if "/analysis/" in crel:
+                continue
+            have = taints.setdefault(callee, set())
+            if (names - have) or callee not in analyses:
+                have.update(names)
+                if callee not in worklist:
+                    worklist.append(callee)
+
+    findings: List[Finding] = []
+    seen = set()
+    for key, an in analyses.items():
+        rel, qn = key
+        for line, msg in an.findings:
+            full = f"{qn}: {msg}"
+            sig = (rel, line, full)
+            if sig in seen:
+                continue
+            seen.add(sig)
+            findings.append(Finding(RULE_ID, rel, line, full))
+    return findings

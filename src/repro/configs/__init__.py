@@ -9,8 +9,7 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from dataclasses import dataclass, field, replace
-from typing import Optional
+from dataclasses import dataclass, replace
 
 
 # --------------------------------------------------------------------------

@@ -9,7 +9,7 @@
   sparsity/rho regimes (offline container; see DESIGN.md §6).
 - Scalar quadratic (§2.3 / Lemma 1) and quartic (§2.4) settings.
 """
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 
 @dataclass(frozen=True)

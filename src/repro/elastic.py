@@ -41,7 +41,7 @@ arm).
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

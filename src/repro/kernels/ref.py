@@ -383,3 +383,19 @@ def rwkv6_scan_ref(r, k, v, log_w, u):
     S0 = jnp.zeros((bsz, h, n, n), jnp.float32)
     _, ys = jax.lax.scan(step, S0, xs)
     return jnp.swapaxes(ys, 0, 1)
+
+
+# Kernel-twin registry: maps every public Pallas kernel under
+# ``repro.kernels`` to the jnp oracle(s) that define its semantics.
+# Checked by the ``kernel-twin`` rule of ``repro.analysis`` — adding a
+# kernel without registering (and testing) its twin fails CI.
+TWINS = {
+    "avg_disp": "avg_disp_ref",
+    "mix_disp": "mix_disp_ref",
+    "avg_disp_outer": "avg_disp_outer_ref",
+    "compressed_mix": ("compressed_avg_ref", "compressed_mix_ref"),
+    "opt_step": "opt_step_ref",
+    "flash_attention": "flash_attention_ref",
+    "rglru_scan": "rglru_scan_ref",
+    "rwkv6_scan": "rwkv6_scan_ref",
+}

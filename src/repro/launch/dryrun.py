@@ -192,7 +192,7 @@ def run_one(arch, shape_name, *, multi_pod, avg="none",
                           chips=meta["chips"])
     meta.update(rep)
     if verbose:
-        print(f"         memory_analysis: " +
+        print("         memory_analysis: " +
               ", ".join(f"{k.removeprefix('mem_')}={v/2**30:.2f}GiB"
                         for k, v in meta.items() if k.startswith("mem_")),
               flush=True)

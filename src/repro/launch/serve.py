@@ -14,8 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import ARCHS, get_config
-from repro.models import decode_step, init_cache, init_params
-from repro.models.transformer import encode
+from repro.models import decode_step, init_params
 
 
 def generate(cfg, params, prompt, *, max_len: int, greedy: bool = True,

@@ -25,7 +25,7 @@ from repro.core import (AveragingSchedule, Compression, OuterOptimizer,
                         PhaseEngine, WIRE_FORMATS)
 from repro.topology import KINDS as TOPOLOGY_KINDS
 from repro.topology import Topology
-from repro.data import token_stream, worker_batches
+from repro.data import token_stream
 from repro.launch.mesh import make_worker_mesh
 from repro.models import init_params, lm_loss
 from repro.optim import AdamW, Momentum

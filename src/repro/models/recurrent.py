@@ -17,7 +17,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ModelConfig
 from repro.models.layers import cdtype, dense_init

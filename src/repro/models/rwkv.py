@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs import ModelConfig
 from repro.models.layers import cdtype, dense_init
@@ -28,8 +27,6 @@ LOG_W_MIN = -5.0
 
 def init_rwkv(cfg: ModelConfig, key):
     d = cfg.d_model
-    n = cfg.rwkv_head_dim
-    h = d // n
     ks = jax.random.split(key, 10)
     lora = max(32, d // 64)
     return {

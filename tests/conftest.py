@@ -10,11 +10,18 @@ jax.config.update("jax_enable_x64", False)
 
 @pytest.fixture(autouse=True, scope="module")
 def _release_compiled_executables():
-    """Drop jit caches after every test module. The suite compiles
-    hundreds of distinct engine programs in one process; on XLA:CPU the
-    accumulated live executables eventually crash the compiler itself
-    (segfault inside backend_compile, ~400 tests in) — modules don't
-    share compiled programs, so freeing between them costs nothing."""
+    """jit-cache hygiene convention (docs/INVARIANTS.md §6).
+
+    Every test module ends with ``jax.clear_caches()``: the suite
+    compiles hundreds of distinct engine programs in one process, and on
+    XLA:CPU the accumulated live executables eventually crash the
+    compiler itself (segfault inside backend_compile, ~400 tests in).
+    Modules don't share compiled programs, so the leak budget carried
+    across module boundaries is 0 live executables — this autouse
+    module-scoped fixture is the single owner of cache lifetime. The
+    ``jit-cache-hygiene`` rule of ``repro.analysis`` enforces the shape:
+    this fixture must exist here, and test modules must not call
+    ``jax.clear_caches()`` ad hoc or launch jit work at import time."""
     yield
     jax.clear_caches()
 

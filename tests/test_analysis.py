@@ -1,0 +1,611 @@
+"""Tests for repro.analysis: per-rule seeded violations (plus clean
+twins), suppression comments, baseline round-trip, and the committed
+tree staying clean.
+
+Each fixture builds a miniature repo tree under tmp_path (the analyzer
+only reads ``src/``, ``tests/``, ``benchmarks/``) and runs a single rule
+against it, so a finding can only come from the seeded violation.
+"""
+from __future__ import annotations
+
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    RepoModel,
+    analyze,
+    get_rule,
+    load_baseline,
+    save_baseline,
+)
+from repro.analysis.__main__ import main as cli_main
+from repro.analysis.runner import run_rules
+
+REPO_ROOT = Path(__file__).resolve().parents[1]
+
+
+def write_tree(root: Path, files: dict) -> Path:
+    for rel, text in files.items():
+        path = root / rel
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text(textwrap.dedent(text))
+    return root
+
+
+def findings_for(root: Path, rule_id: str):
+    model = RepoModel.load(root)
+    return run_rules(model, [get_rule(rule_id)])
+
+
+# ---------------------------------------------------------------- trace-purity
+
+JIT_BRANCH = """
+    import jax
+
+    @jax.jit
+    def step(x):
+        if x > 0:
+            return x
+        return -x
+"""
+
+JIT_CLEAN = """
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def step(x):
+        return jnp.where(x > 0, x, -x)
+"""
+
+
+class TestTracePurity:
+    def test_branch_on_traced_value_flagged(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": JIT_BRANCH})
+        found = findings_for(tmp_path, "trace-purity")
+        assert len(found) == 1
+        assert "`if` on a traced value" in found[0].message
+        assert found[0].path == "src/repro/foo.py"
+
+    def test_clean_twin_passes(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": JIT_CLEAN})
+        assert findings_for(tmp_path, "trace-purity") == []
+
+    def test_scan_body_coercion_flagged(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": """
+            import jax
+
+            def run(xs):
+                def body(c, x):
+                    c = c + float(x)
+                    return c, c
+                return jax.lax.scan(body, 0.0, xs)
+        """})
+        found = findings_for(tmp_path, "trace-purity")
+        assert len(found) == 1
+        assert "float()" in found[0].message
+
+    def test_static_argnames_not_tainted(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": """
+            from functools import partial
+            import jax
+
+            @partial(jax.jit, static_argnames=("k",))
+            def step(x, k):
+                if k:
+                    return x + 1
+                return x
+        """})
+        assert findings_for(tmp_path, "trace-purity") == []
+
+    def test_numpy_coercion_and_impure_calls(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": """
+            import time
+            import numpy as np
+            import jax
+
+            @jax.jit
+            def step(x):
+                t = time.time()
+                return np.asarray(x) * t
+        """})
+        msgs = [f.message for f in findings_for(tmp_path, "trace-purity")]
+        assert any("`time`" in m for m in msgs)
+        assert any("np.*" in m for m in msgs)
+
+    def test_interprocedural_taint(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": """
+            import jax
+
+            def helper(y):
+                assert y > 0
+                return y
+
+            @jax.jit
+            def step(x):
+                return helper(x)
+        """})
+        found = findings_for(tmp_path, "trace-purity")
+        assert len(found) == 1
+        assert "`assert` on a traced value" in found[0].message
+        assert "helper" in found[0].message
+
+    def test_suppression_comment(self, tmp_path):
+        src = JIT_BRANCH.replace(
+            "if x > 0:",
+            "if x > 0:  # analysis: ignore[trace-purity] -- fixture",
+        )
+        write_tree(tmp_path, {"src/repro/foo.py": src})
+        assert findings_for(tmp_path, "trace-purity") == []
+
+    def test_wrong_rule_suppression_does_not_apply(self, tmp_path):
+        src = JIT_BRANCH.replace(
+            "if x > 0:", "if x > 0:  # analysis: ignore[rng-salt]"
+        )
+        write_tree(tmp_path, {"src/repro/foo.py": src})
+        assert len(findings_for(tmp_path, "trace-purity")) == 1
+
+
+# ------------------------------------------------------------------- rng-salt
+
+class TestRngSalt:
+    def test_colliding_streams_flagged(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": """
+            import jax
+
+            _SALT = 7
+
+            def a(key, step):
+                return jax.random.fold_in(jax.random.fold_in(key, _SALT), step)
+
+            def b(key, step):
+                return jax.random.fold_in(jax.random.fold_in(key, _SALT), step)
+        """})
+        found = findings_for(tmp_path, "rng-salt")
+        assert len(found) == 1
+        assert "collides" in found[0].message
+
+    def test_distinct_salts_pass(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": """
+            import jax
+
+            _A_SALT = 7
+            _B_SALT = 8
+
+            def a(key, step):
+                return jax.random.fold_in(jax.random.fold_in(key, _A_SALT), step)
+
+            def b(key, step):
+                return jax.random.fold_in(jax.random.fold_in(key, _B_SALT), step)
+        """})
+        assert findings_for(tmp_path, "rng-salt") == []
+
+    def test_duplicate_salt_constants_flagged(self, tmp_path):
+        write_tree(tmp_path, {
+            "src/repro/a.py": "_GOSSIP_SALT = 5\n",
+            "src/repro/b.py": "_ENC_SALT = 5\n",
+        })
+        found = findings_for(tmp_path, "rng-salt")
+        assert len(found) == 1
+        assert "duplicates" in found[0].message
+
+    def test_key_reuse_after_split_flagged(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": """
+            import jax
+
+            def f(key):
+                k1, k2 = jax.random.split(key)
+                return jax.random.normal(key, (2,))
+        """})
+        found = findings_for(tmp_path, "rng-salt")
+        assert len(found) == 1
+        assert "used after" in found[0].message
+
+    def test_rebound_key_passes(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": """
+            import jax
+
+            def f(key):
+                key, sub = jax.random.split(key)
+                return jax.random.normal(sub, (2,))
+        """})
+        assert findings_for(tmp_path, "rng-salt") == []
+
+    def test_registry_covers_real_tree(self):
+        from repro.analysis.rules.rng_salt import registry
+
+        sites = registry(RepoModel.load(REPO_ROOT))
+        rels = {s.mod.rel for s in sites}
+        assert "src/repro/core/compress.py" in rels
+        assert "src/repro/faults.py" in rels
+        assert "src/repro/topology.py" in rels
+        assert "src/repro/core/averaging.py" in rels
+        # every head stream resolves to a distinct chain
+        heads = [s for s in sites if s.is_head]
+        assert len(heads) >= 4
+
+
+# ---------------------------------------------------------------- kernel-twin
+
+KERNEL_TREE = {
+    "src/repro/kernels/foo.py": """
+        from jax.experimental import pallas as pl
+
+        def _foo_kernel(x_ref, o_ref):
+            o_ref[...] = x_ref[...]
+
+        def foo(x, *, block_p=8, interpret=False):
+            return pl.pallas_call(_foo_kernel)(x)
+    """,
+    "src/repro/kernels/ref.py": """
+        TWINS = {"foo": "foo_ref"}
+
+        def foo_ref(x):
+            return x
+    """,
+    "tests/test_foo.py": """
+        from repro.kernels.foo import foo
+        from repro.kernels.ref import foo_ref
+
+        def test_eq():
+            assert foo is not foo_ref
+    """,
+}
+
+
+class TestKernelTwin:
+    def test_complete_registration_passes(self, tmp_path):
+        write_tree(tmp_path, KERNEL_TREE)
+        assert findings_for(tmp_path, "kernel-twin") == []
+
+    def test_unregistered_kernel_flagged(self, tmp_path):
+        files = dict(KERNEL_TREE)
+        files["src/repro/kernels/ref.py"] = """
+            TWINS = {}
+
+            def foo_ref(x):
+                return x
+        """
+        write_tree(tmp_path, files)
+        found = findings_for(tmp_path, "kernel-twin")
+        assert any("no TWINS entry" in f.message for f in found)
+
+    def test_deleted_twin_flagged(self, tmp_path):
+        files = dict(KERNEL_TREE)
+        files["src/repro/kernels/ref.py"] = 'TWINS = {"foo": "foo_ref"}\n'
+        write_tree(tmp_path, files)
+        found = findings_for(tmp_path, "kernel-twin")
+        assert any("not defined in" in f.message for f in found)
+
+    def test_signature_drift_flagged(self, tmp_path):
+        files = dict(KERNEL_TREE)
+        files["src/repro/kernels/foo.py"] = """
+            from jax.experimental import pallas as pl
+
+            def _foo_kernel(x_ref, o_ref):
+                o_ref[...] = x_ref[...]
+
+            def foo(x, *, alpha=0.5, block_p=8, interpret=False):
+                return pl.pallas_call(_foo_kernel)(x)
+        """
+        write_tree(tmp_path, files)
+        found = findings_for(tmp_path, "kernel-twin")
+        assert any("twin-signature drift" in f.message and "alpha" in f.message
+                   for f in found)
+
+    def test_missing_equivalence_test_flagged(self, tmp_path):
+        files = {k: v for k, v in KERNEL_TREE.items() if not k.startswith("tests/")}
+        files["tests/test_other.py"] = "def test_nothing():\n    pass\n"
+        write_tree(tmp_path, files)
+        found = findings_for(tmp_path, "kernel-twin")
+        assert any("no equivalence test" in f.message for f in found)
+
+    def test_stale_twins_entry_flagged(self, tmp_path):
+        files = dict(KERNEL_TREE)
+        files["src/repro/kernels/ref.py"] = """
+            TWINS = {"foo": "foo_ref", "bar": "bar_ref"}
+
+            def foo_ref(x):
+                return x
+
+            def bar_ref(x):
+                return x
+        """
+        write_tree(tmp_path, files)
+        found = findings_for(tmp_path, "kernel-twin")
+        assert any("stale TWINS entry" in f.message for f in found)
+
+
+# ---------------------------------------------------------- checkpoint-ladder
+
+CKPT_TREE = {
+    "src/repro/checkpoint/io.py": """
+        ENGINE_STATE_VERSION = 2
+        _VERSION_KEY = "engine_state_version"
+        _OPTIONAL_FIELDS = ("sched",)
+
+        def load_engine_state(path, like_state):
+            version = 0
+            if version > ENGINE_STATE_VERSION:
+                raise ValueError("future version")
+            if version == 0:
+                return like_state._replace()
+            if version == 1:
+                return like_state._replace()
+            return like_state._replace()
+    """,
+    "src/repro/core/engine.py": """
+        from typing import NamedTuple
+
+        class EngineState(NamedTuple):
+            params: tuple
+            step: int
+            sched: tuple = ()
+    """,
+    "tests/test_ckpt.py": """
+        def test_v0_roundtrip():
+            payload = {"engine_state_version": 0}
+            assert payload
+
+        def test_v1_roundtrip():
+            build_legacy(version=1)
+
+        def build_legacy(version):
+            return version
+    """,
+}
+
+
+class TestCheckpointLadder:
+    def test_complete_ladder_passes(self, tmp_path):
+        write_tree(tmp_path, CKPT_TREE)
+        assert findings_for(tmp_path, "checkpoint-ladder") == []
+
+    def test_deleted_loader_branch_flagged(self, tmp_path):
+        files = dict(CKPT_TREE)
+        files["src/repro/checkpoint/io.py"] = files[
+            "src/repro/checkpoint/io.py"
+        ].replace(
+            "            if version == 1:\n"
+            "                return like_state._replace()\n",
+            "",
+        )
+        write_tree(tmp_path, files)
+        found = findings_for(tmp_path, "checkpoint-ladder")
+        assert any("no loader branch for layout version 1" in f.message
+                   for f in found)
+
+    def test_missing_future_guard_flagged(self, tmp_path):
+        files = dict(CKPT_TREE)
+        files["src/repro/checkpoint/io.py"] = files[
+            "src/repro/checkpoint/io.py"
+        ].replace(
+            "            if version > ENGINE_STATE_VERSION:\n"
+            "                raise ValueError(\"future version\")\n",
+            "",
+        )
+        write_tree(tmp_path, files)
+        found = findings_for(tmp_path, "checkpoint-ladder")
+        assert any("refuse payloads" in f.message for f in found)
+
+    def test_optional_fields_drift_flagged(self, tmp_path):
+        files = dict(CKPT_TREE)
+        files["src/repro/checkpoint/io.py"] = files[
+            "src/repro/checkpoint/io.py"
+        ].replace('_OPTIONAL_FIELDS = ("sched",)',
+                  '_OPTIONAL_FIELDS = ("sched", "resid")')
+        write_tree(tmp_path, files)
+        found = findings_for(tmp_path, "checkpoint-ladder")
+        assert any("does not match" in f.message for f in found)
+
+    def test_untested_version_flagged(self, tmp_path):
+        files = dict(CKPT_TREE)
+        files["tests/test_ckpt.py"] = """
+            def test_v0_roundtrip():
+                payload = {"engine_state_version": 0}
+                assert payload
+        """
+        write_tree(tmp_path, files)
+        found = findings_for(tmp_path, "checkpoint-ladder")
+        assert any("version(s) [1]" in f.message for f in found)
+
+
+# ---------------------------------------------------------- eager-validation
+
+class TestEagerValidation:
+    def test_validating_constructor_passes(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/core/averaging.py": """
+            class AveragingSchedule:
+                def __post_init__(self):
+                    if self.period <= 0:
+                        raise ValueError("period must be positive")
+        """})
+        assert findings_for(tmp_path, "eager-validation") == []
+
+    def test_missing_validation_flagged(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/core/averaging.py": """
+            class AveragingSchedule:
+                def __post_init__(self):
+                    self.warmup = 0
+        """})
+        found = findings_for(tmp_path, "eager-validation")
+        assert len(found) == 1
+        assert "no eager validation" in found[0].message
+
+    def test_parser_error_counts_for_main(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/launch/train.py": """
+            import argparse
+
+            def main():
+                ap = argparse.ArgumentParser()
+                args = ap.parse_args()
+                if args.workers < 1:
+                    ap.error("need at least one worker")
+        """})
+        assert findings_for(tmp_path, "eager-validation") == []
+
+
+# --------------------------------------------------------- jit-cache-hygiene
+
+HYGIENE_CONFTEST = """
+    import jax
+    import pytest
+
+    @pytest.fixture(autouse=True, scope="module")
+    def _release_compiled_executables():
+        yield
+        jax.clear_caches()
+"""
+
+
+class TestJitCacheHygiene:
+    def test_convention_respected_passes(self, tmp_path):
+        write_tree(tmp_path, {
+            "tests/conftest.py": HYGIENE_CONFTEST,
+            "tests/test_ok.py": """
+                import jax
+
+                def test_ok():
+                    f = jax.jit(lambda x: x)
+                    assert f is not None
+            """,
+        })
+        assert findings_for(tmp_path, "jit-cache-hygiene") == []
+
+    def test_missing_fixture_flagged(self, tmp_path):
+        write_tree(tmp_path, {
+            "tests/conftest.py": "import jax\n",
+            "tests/test_ok.py": "def test_ok():\n    pass\n",
+        })
+        found = findings_for(tmp_path, "jit-cache-hygiene")
+        assert any("module-scoped autouse" in f.message for f in found)
+
+    def test_import_time_executable_flagged(self, tmp_path):
+        write_tree(tmp_path, {
+            "tests/conftest.py": HYGIENE_CONFTEST,
+            "tests/test_leak.py": """
+                import jax
+
+                f = jax.jit(lambda x: x)
+
+                def test_leak():
+                    assert f is not None
+            """,
+        })
+        found = findings_for(tmp_path, "jit-cache-hygiene")
+        assert any("import-time" in f.message for f in found)
+
+    def test_ad_hoc_clear_caches_flagged(self, tmp_path):
+        write_tree(tmp_path, {
+            "tests/conftest.py": HYGIENE_CONFTEST,
+            "tests/test_adhoc.py": """
+                import jax
+
+                def test_adhoc():
+                    jax.clear_caches()
+            """,
+        })
+        found = findings_for(tmp_path, "jit-cache-hygiene")
+        assert any("ad-hoc" in f.message for f in found)
+
+
+# ------------------------------------------------------- baseline round-trip
+
+class TestBaseline:
+    def test_baseline_accepts_known_findings(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": JIT_BRANCH})
+        rules = [get_rule("trace-purity")]
+        report = analyze(tmp_path, rules=rules)
+        assert not report.ok and len(report.new) == 1
+        save_baseline(tmp_path, report.findings,
+                      {report.findings[0].fingerprint: "fixture exception"})
+        report2 = analyze(tmp_path, rules=rules)
+        assert report2.ok
+        assert len(report2.accepted) == 1 and report2.new == []
+
+    def test_stale_baseline_entry_fails(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": JIT_CLEAN})
+        (tmp_path / "analysis-baseline.json").write_text(json.dumps({
+            "version": 1,
+            "findings": [{"fingerprint": "deadbeefdeadbeef",
+                          "justification": "gone"}],
+        }))
+        report = analyze(tmp_path, rules=[get_rule("trace-purity")])
+        assert not report.ok
+        assert report.stale_baseline == ["deadbeefdeadbeef"]
+
+    def test_unjustified_baseline_entry_rejected(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": JIT_CLEAN})
+        (tmp_path / "analysis-baseline.json").write_text(json.dumps({
+            "version": 1,
+            "findings": [{"fingerprint": "deadbeefdeadbeef"}],
+        }))
+        with pytest.raises(ValueError, match="justification"):
+            load_baseline(tmp_path)
+
+    def test_fingerprint_is_line_insensitive(self, tmp_path):
+        write_tree(tmp_path, {"src/repro/foo.py": JIT_BRANCH})
+        rules = [get_rule("trace-purity")]
+        fp1 = analyze(tmp_path, rules=rules).findings[0].fingerprint
+        # shift the finding down two lines; fingerprint must not move
+        write_tree(tmp_path, {"src/repro/foo.py": "# pad\n# pad\n" +
+                              textwrap.dedent(JIT_BRANCH)})
+        report = analyze(tmp_path, rules=rules)
+        assert report.findings[0].fingerprint == fp1
+
+
+# ------------------------------------------------------------------ CLI + API
+
+class TestCli:
+    def test_json_output_and_exit_codes(self, tmp_path, capsys):
+        write_tree(tmp_path, {"src/repro/foo.py": JIT_BRANCH})
+        rc = cli_main(["--root", str(tmp_path), "--format", "json",
+                       "--rules", "trace-purity"])
+        out = json.loads(capsys.readouterr().out)
+        assert rc == 1
+        assert out["ok"] is False and out["counts"]["new"] == 1
+        assert out["new"][0]["rule"] == "trace-purity"
+
+    def test_update_baseline_then_clean_exit(self, tmp_path, capsys):
+        write_tree(tmp_path, {"src/repro/foo.py": JIT_BRANCH})
+        rc = cli_main(["--root", str(tmp_path), "--rules", "trace-purity",
+                       "--update-baseline"])
+        assert rc == 0
+        capsys.readouterr()
+        rc = cli_main(["--root", str(tmp_path), "--rules", "trace-purity"])
+        assert rc == 0
+        assert "[baseline]" in capsys.readouterr().out
+
+    def test_list_rules_names_all_five_contracts(self, tmp_path, capsys):
+        rc = cli_main(["--list-rules"])
+        assert rc == 0
+        out = capsys.readouterr().out
+        for rule_id in ("trace-purity", "rng-salt", "kernel-twin",
+                        "checkpoint-ladder", "eager-validation",
+                        "jit-cache-hygiene"):
+            assert rule_id in out
+
+    def test_output_file_written(self, tmp_path, capsys):
+        write_tree(tmp_path, {"src/repro/foo.py": JIT_CLEAN})
+        out_path = tmp_path / "artifacts" / "analysis.json"
+        rc = cli_main(["--root", str(tmp_path), "--rules", "trace-purity",
+                       "--output", str(out_path)])
+        assert rc == 0
+        assert json.loads(out_path.read_text())["ok"] is True
+
+
+class TestRealTree:
+    def test_committed_tree_is_clean(self):
+        report = analyze(REPO_ROOT)
+        assert report.ok, report.to_text()
+
+    def test_real_twins_registry_complete(self):
+        from repro.analysis.rules.kernel_twin import discover_kernels
+
+        model = RepoModel.load(REPO_ROOT)
+        kernels = {name for _, name, _ in discover_kernels(model)}
+        assert {"opt_step", "avg_disp", "mix_disp", "avg_disp_outer",
+                "compressed_mix", "flash_attention"} <= kernels

@@ -14,7 +14,7 @@ import pytest
 from repro.core.averaging import (AveragingSchedule, OuterOptimizer,
                                   average_all, average_inner,
                                   worker_dispersion)
-from repro.core.local_sgd import LocalSGD, consensus, replicate
+from repro.core.local_sgd import LocalSGD, consensus
 from repro.optim import SGD
 
 

@@ -9,7 +9,6 @@ import pytest
 hypothesis = pytest.importorskip("hypothesis")
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 from hypothesis import given, settings, strategies as st
 

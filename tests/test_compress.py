@@ -29,8 +29,7 @@ import pytest
 
 from repro.core import AveragingSchedule, Compression, OuterOptimizer, \
     PhaseEngine, wire_row_bytes
-from repro.core.compress import WIRE_FORMATS, encode_decode, quantize, \
-    row_uniforms
+from repro.core.compress import encode_decode, quantize, row_uniforms
 from repro.kernels.avg_disp import compressed_mix
 from repro.kernels.opt_step import opt_step
 from repro.kernels.ref import compressed_avg_ref, compressed_mix_ref, \

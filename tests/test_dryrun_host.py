@@ -7,11 +7,9 @@ import subprocess
 import sys
 import textwrap
 
-import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.sharding.specs import (first_divisible_spec, leaf_spec,
-                                  set_axis_sizes)
+from repro.sharding.specs import first_divisible_spec, leaf_spec
 
 
 class TestSpecRules:

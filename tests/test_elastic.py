@@ -690,7 +690,9 @@ class TestPostResizePrediction:
 # --------------------------------------------------------------------------
 
 _SHARD_SCRIPT = r"""
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro.core import AveragingSchedule, PhaseEngine, FaultPlan
 from repro.elastic import ElasticPlan, run_elastic
 from repro.optim import SGD

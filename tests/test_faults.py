@@ -42,8 +42,7 @@ from repro.core.compress import Compression
 from repro.core.variance_model import predict_averaging_benefit
 from repro.data.pipeline import Prefetcher, WorkerSharder
 from repro.faults import (FaultEvent, FaultPlan, FaultState,
-                          degraded_matrix, init_fault_state, masked_mean,
-                          masked_event_matrix)
+                          degraded_matrix, masked_mean, masked_event_matrix)
 from repro.optim import SGD, Momentum
 from repro.topology import Topology
 
@@ -453,7 +452,9 @@ class TestFaultCheckpoints:
 # --------------------------------------------------------------------------
 
 _SHARD_SCRIPT = r"""
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro.core import AveragingSchedule, PhaseEngine, Compression, FaultPlan
 
 assert len(jax.devices()) == 8, jax.devices()

@@ -80,7 +80,7 @@ def test_flatspec_rejects_unembeddable_dtypes():
 
 def test_pack_unpack_property():
     """Hypothesis property: arbitrary nested shapes/dtypes roundtrip."""
-    hypothesis = pytest.importorskip("hypothesis")
+    pytest.importorskip("hypothesis")
     from hypothesis import given, settings, strategies as st
 
     dtypes = st.sampled_from([jnp.float32, jnp.bfloat16, jnp.float16])

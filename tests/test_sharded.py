@@ -22,7 +22,6 @@ import sys
 
 import jax
 import numpy as np
-import pytest
 
 from jax.sharding import PartitionSpec as P
 
@@ -30,7 +29,9 @@ from repro.sharding.specs import (engine_state_sharding, mesh_worker_axes,
                                   plane_sharding)
 
 _SCRIPT = r"""
-import jax, jax.numpy as jnp, numpy as np
+import jax
+import jax.numpy as jnp
+import numpy as np
 from repro.core import AveragingSchedule, PhaseEngine, OuterOptimizer
 from repro.data.pipeline import DeviceDataset
 from repro.optim import Momentum

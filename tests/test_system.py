@@ -6,12 +6,11 @@ import numpy as np
 import pytest
 
 from repro.configs.paper import PCAConfig
-from repro.core import (AveragingSchedule, LocalSGD, consensus,
-                        measure_beta2, rho)
+from repro.core import AveragingSchedule, LocalSGD, measure_beta2, rho
 from repro.core.variance_model import empirical_variance_fn
 from repro.data import convex_dataset
-from repro.models.convex import ls_objective, lr_objective
-from repro.optim import SGD, schedules
+from repro.models.convex import ls_objective
+from repro.optim import SGD
 
 
 def run_ls(phase_len, X, y, *, workers=8, steps=600, lr=0.02, seed=0):

@@ -6,8 +6,7 @@ import numpy as np
 import pytest
 
 from repro.core.theory import (coarse_dispersion_bound, lemma1_asymptotic_variance,
-                               lemma1_eta, run_homogeneous_quadratic,
-                               simulate_quadratic)
+                               run_homogeneous_quadratic, simulate_quadratic)
 
 
 class TestLemma1:
