@@ -84,18 +84,21 @@ baseline; pass ``--save`` to still write JSON for the CI artifact).
 from __future__ import annotations
 
 import argparse
-import time
+import dataclasses
+import os
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import emit, save
+from benchmarks.common import RESULTS_DIR, emit, save
 from repro.core import AveragingSchedule, PhaseEngine
 from repro.data import convex_dataset
 from repro.data.pipeline import DeviceDataset, WorkerSharder
 from repro.launch.mesh import make_worker_mesh
 from repro.optim import SGD, Momentum
+from repro.telemetry import JsonlSink, run_meta_record
+from repro.telemetry.timing import time_run, timed
 
 DIM, SAMPLES, STEPS = 64, 1024, 512
 PHASE_LENS = (1, 4, 8, 64, 512)
@@ -149,17 +152,6 @@ def worker_mesh(workers: int):
     return mesh if mesh.shape["data"] >= 2 else None
 
 
-def time_run(fn, steps, *, reps: int = 3) -> float:
-    """ms/step, best of ``reps`` after a compile warmup run."""
-    fn()  # warmup: compile
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        fn()
-        best = min(best, time.perf_counter() - t0)
-    return best / steps * 1e3
-
-
 def bench_sharder(workers: int, steps: int, batch: int = 8,
                   reps: int = 5) -> dict:
     """Replacement-mode index generation: batched single draw vs the
@@ -179,16 +171,10 @@ def bench_sharder(workers: int, steps: int, batch: int = 8,
     out = {}
     for name, fn in (("loop", loop_draw), ("block", block_draw)):
         fn()
-        best = min(_timed(fn) for _ in range(reps))
+        best = min(timed(fn) for _ in range(reps))
         out[f"sharder_{name}_us"] = best * 1e6
     out["sharder_speedup"] = out["sharder_loop_us"] / out["sharder_block_us"]
     return out
-
-
-def _timed(fn):
-    t0 = time.perf_counter()
-    fn()
-    return time.perf_counter() - t0
 
 
 def bench_adaptive(arrays, idx, workers, steps) -> dict:
@@ -955,7 +941,26 @@ def run(tiny: bool = False, workers_override: int | None = None,
         print(f"max fusedopt-vs-PR2-flat speedup (deep workload): "
               f"{max(fused):.2f}x")
     if save_json:
+        # a small telemetry-enabled run next to the timing JSON: the CI
+        # artifact a reader can render with python -m repro.telemetry.report
+        tele_path = os.path.join(RESULTS_DIR, "bench_engine_telemetry.jsonl")
+        tele_workers = worker_counts[0]
+        rng = np.random.default_rng(7)
+        tidx = rng.integers(0, samples, size=(steps, tele_workers, 8))
+        tele_eng = dataclasses.replace(
+            make_engine(ls_mean_loss, 8), telemetry=True)
+        with JsonlSink(tele_path) as sink:
+            sink.emit(run_meta_record(config={
+                "workload": "ls", "workers": tele_workers,
+                "steps": steps, "avg": "periodic", "phase_len": 8,
+                "lr": 0.01, "momentum": 0.9, "optimizer": "momentum"}))
+            tele_eng.run(w0, DeviceDataset({"x": Xj, "y": yj},
+                                           tele_workers, indices=tidx),
+                         num_workers=tele_workers, seed=0, phase_len=64,
+                         sink=sink)
+        print(f"telemetry log -> {tele_path}")
         save("bench_engine", {
+            "run_meta": run_meta_record(),
             "workload": {"dim": dim, "samples": samples, "steps": steps,
                          "kind": "ls+deep", "optimizer": "momentum",
                          "deep_layers": DEEP_LAYERS,

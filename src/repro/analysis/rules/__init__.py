@@ -6,5 +6,6 @@ from repro.analysis.rules import (  # noqa: F401
     eager_validation,
     kernel_twin,
     rng_salt,
+    telemetry_sync,
     trace_safety,
 )

@@ -1,0 +1,136 @@
+"""telemetry-host-sync: device values cross to the host only at flush.
+
+Contract (docs/INVARIANTS.md §7): the telemetry plane accumulates ON
+DEVICE and flushes to the host ONCE per phase, riding the phase trace's
+existing ``device_get``.  A stray host round-trip inside the telemetry
+modules — ``float()`` / ``int()`` coercion, ``.item()``,
+``jax.device_get``, or a numpy ``asarray``/``array`` materialization —
+would silently re-introduce per-step device syncs, eroding the engine's
+one-transfer-per-phase design rule without failing any numerics test.
+
+Structurally: in every module under ``src/repro/telemetry/`` that
+imports jax, those calls are only legal inside the flush functions
+registered in ``FLUSH_FUNCTIONS`` (``src/repro/telemetry/metrics.py``).
+Modules that never import jax (e.g. the report renderer, which only
+reads JSON) handle host floats by definition and are out of scope.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import List, Optional, Set
+
+from repro.analysis.base import Finding, register
+from repro.analysis.model import ModuleInfo, RepoModel, dotted_call_name
+
+RULE_ID = "telemetry-host-sync"
+SCOPE_PREFIX = "src/repro/telemetry/"
+METRICS_MODULE = "src/repro/telemetry/metrics.py"
+# Host coercions of a (possibly device-resident) scalar.
+COERCION_NAMES = ("float", "int")
+# Numpy materializations of a device array; jnp.* stays on device.
+NUMPY_MATERIALIZERS = ("asarray", "array", "asanyarray")
+
+
+def _flush_registry(model: RepoModel) -> Optional[Set[str]]:
+    """The FLUSH_FUNCTIONS tuple parsed from the metrics module's AST
+    (the model's constant index only carries scalars), or None when the
+    registry is missing/malformed."""
+    mod = model.find(METRICS_MODULE)
+    if mod is None:
+        return None
+    for node in mod.tree.body:
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        tgt = node.targets[0]
+        if not (isinstance(tgt, ast.Name) and tgt.id == "FLUSH_FUNCTIONS"):
+            continue
+        if not isinstance(node.value, (ast.Tuple, ast.List)):
+            return None
+        names: Set[str] = set()
+        for elt in node.value.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str)):
+                return None
+            names.add(elt.value)
+        return names
+    return None
+
+
+def _imports_jax(mod: ModuleInfo) -> bool:
+    return any(origin == "jax" or origin.startswith("jax.")
+               for origin in mod.imports.values())
+
+
+def _violation(mod: ModuleInfo, call: ast.Call) -> Optional[str]:
+    """Why this call is a host round-trip, or None."""
+    func = call.func
+    if isinstance(func, ast.Name) and func.id in COERCION_NAMES:
+        return (f"`{func.id}()` coerces to a host scalar (a device sync "
+                "on traced/device values)")
+    if isinstance(func, ast.Attribute):
+        if func.attr == "item":
+            return "`.item()` is a host round-trip"
+        if func.attr == "device_get":
+            return "`device_get` fetches to the host"
+        if func.attr in NUMPY_MATERIALIZERS:
+            root = func.value
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if (isinstance(root, ast.Name)
+                    and mod.imports.get(root.id) == "numpy"):
+                return (f"numpy `.{func.attr}()` materializes a device "
+                        "array on the host")
+    elif isinstance(func, ast.Name):
+        if mod.imports.get(func.id, "").rsplit(".", 1)[-1] == "device_get":
+            return "`device_get` fetches to the host"
+    return None
+
+
+@register(RULE_ID, "telemetry host round-trips only in registered flush "
+                   "functions")
+def check(model: RepoModel) -> List[Finding]:
+    in_scope = [m for m in model.src_modules()
+                if m.rel.startswith(SCOPE_PREFIX) and _imports_jax(m)]
+    if not in_scope and model.find(METRICS_MODULE) is None:
+        return []
+
+    findings: List[Finding] = []
+    flush = _flush_registry(model)
+    if flush is None:
+        findings.append(Finding(
+            RULE_ID, METRICS_MODULE, 1,
+            "FLUSH_FUNCTIONS registry missing or not a literal tuple of "
+            "function-name strings — the rule cannot whitelist flush "
+            "sites without it"))
+        flush = set()
+    else:
+        metrics = model.find(METRICS_MODULE)
+        defined = {qn.rsplit(".", 1)[-1] for qn in metrics.functions}
+        for name in sorted(flush - defined):
+            findings.append(Finding(
+                RULE_ID, METRICS_MODULE, 1,
+                f"FLUSH_FUNCTIONS names {name!r}, which is not defined "
+                "in the metrics module — stale registry entries hide "
+                "real violations"))
+
+    for mod in in_scope:
+        exempt_calls = set()
+        for qn, fi in mod.functions.items():
+            if qn.rsplit(".", 1)[-1] in flush:
+                exempt_calls.update(
+                    id(n) for n in ast.walk(fi.node)
+                    if isinstance(n, ast.Call))
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call) or id(node) in exempt_calls:
+                continue
+            why = _violation(mod, node)
+            if why:
+                name = dotted_call_name(node.func) or "<call>"
+                findings.append(Finding(
+                    RULE_ID, mod.rel, node.lineno,
+                    f"{why} — telemetry accumulates on device and "
+                    "flushes once per phase; move this into a "
+                    "FLUSH_FUNCTIONS-registered flush function "
+                    f"(call: {name})"))
+    return findings

@@ -70,6 +70,7 @@ for `benchmarks/bench_engine.py` and the equivalence tests.
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from functools import cached_property, partial
 from typing import Any, Callable, NamedTuple
@@ -90,6 +91,8 @@ from repro.faults import FaultPlan, FaultState
 from repro.kernels.avg_disp import (avg_disp, avg_disp_outer,
                                     compressed_mix, mix_disp)
 from repro.kernels.opt_step import opt_step
+from repro.telemetry import metrics as tele_metrics
+from repro.telemetry.events import init_history, make_record
 from repro.kernels.ref import (avg_disp_outer_ref, avg_disp_ref,
                                compressed_avg_ref, compressed_mix_ref,
                                mix_disp_ref, opt_step_ref,
@@ -261,7 +264,20 @@ class PhaseEngine:
     final estimate is the alive-worker consensus. A trivial plan (no
     events, zero straggle probability) lowers to the no-fault paths
     bit-exactly; the outer optimizer is excluded (its consensus step
-    assumes a fixed membership)."""
+    assumes a fixed membership).
+
+    ``telemetry`` adds the on-device metrics plane
+    (:mod:`repro.telemetry.metrics`): a fixed-layout f32 accumulator
+    rides the scan carry — per-phase loss/dispersion sums and maxes,
+    event counts, nominal ``topology.comm_bytes`` wire bytes, and
+    alive/straggle occupancy from the fault streams — and is flushed
+    to the host ONCE per phase with the existing trace fetch. The
+    accumulator is created inside the phase (never part of
+    ``EngineState`` or the checkpoint layout), it only READS values
+    the step already computes, and the trained state never consumes
+    it, so telemetry on vs off is bit-identical in every path.
+    :meth:`run` flushes it into structured records when handed a
+    ``sink`` (:class:`repro.telemetry.events.TelemetrySink`)."""
     loss_fn: Callable
     optimizer: Any
     schedule: AveragingSchedule
@@ -276,6 +292,7 @@ class PhaseEngine:
     topology: Topology | None = None
     compression: Compression | None = None
     faults: FaultPlan | None = None
+    telemetry: bool = False
 
     @cached_property
     def worker_step(self):
@@ -415,6 +432,32 @@ class PhaseEngine:
         topo = self.topology or Topology.full(num_workers)
         wire = self.compression.wire if self.compression else "f32"
         return float(comm_bytes(topo, 1, p, wire))
+
+    def _event_bytes(self, p: int, num_workers: int):
+        """Telemetry pricing of one averaging event: (all-scope, inner)
+        nominal wire bytes ONE worker ships — the same
+        ``topology.comm_bytes`` currency the ``adaptive_bytes`` budget
+        spends; inner (group-mean) events ship within-group traffic."""
+        from repro.core.compress import wire_row_bytes
+        topo = self.topology or Topology.full(num_workers)
+        wire = self.compression.wire if self.compression else "f32"
+        eb_all = float(comm_bytes(topo, 1, p, wire))
+        g = max(self.schedule.inner_groups, 1)
+        eb_inner = float(
+            max(num_workers // g - 1, 0) * wire_row_bytes(p, wire))
+        return eb_all, eb_inner
+
+    def _tele_occupancy(self, fp, step, dec_key, num_workers: int):
+        """Per-step (n_alive, n_straggle) for the metrics accumulator —
+        pure full-plane functions of the scripted fault streams, so
+        every path and every shard computes the identical scalars with
+        no extra collective (constants without a fault plan)."""
+        if fp is None:
+            return jnp.float32(num_workers), jnp.float32(0.0)
+        a_full = fp.alive_at(step)
+        s_full = fp.straggle_mask(
+            dec_key, step, jnp.arange(fp.num_workers, dtype=jnp.int32))
+        return jnp.sum(a_full), jnp.sum(a_full * s_full)
 
     # ---- fused flat averaging -------------------------------------------
     def _use_pallas(self) -> bool:
@@ -734,6 +777,9 @@ class PhaseEngine:
                    sum(x.size // num_workers
                        for x in jax.tree.leaves(state.worker_params)))
         ec = self._sched_event_cost(p_width, num_workers)
+        tm = tele_metrics if self.telemetry else None
+        eb_all, eb_inner = (self._event_bytes(p_width, num_workers)
+                            if tm is not None else (0.0, 0.0))
 
         if use_flat:
             carry_p = spec.pack(state.worker_params)
@@ -788,7 +834,7 @@ class PhaseEngine:
             return wp_c, opt_c, resid
 
         def body(carry, xs_t):
-            wp_c, opt_c, outer_c, key, step, sst, resid, fst = carry
+            wp_c, opt_c, outer_c, key, step, sst, resid, fst, acc = carry
             step = step + 1
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, num_workers)
@@ -892,7 +938,15 @@ class PhaseEngine:
                         (wp_c, outer_c, resid))
             loss_t = (jnp.mean(losses) if fp is None
                       else jnp.sum(losses * alive) / jnp.sum(alive))
-            return ((wp_c, opt_c, outer_c, key, step, sst, resid, fst),
+            if tm is not None:
+                n_alive, n_straggle = self._tele_occupancy(
+                    fp, step, state.dec_key, num_workers)
+                acc = tm.accumulate(
+                    acc, loss=loss_t, disp=disp, code=code,
+                    event_bytes_all=eb_all, event_bytes_inner=eb_inner,
+                    n_alive=n_alive, n_straggle=n_straggle)
+            return ((wp_c, opt_c, outer_c, key, step, sst, resid, fst,
+                     acc),
                     (loss_t, disp.astype(jnp.float32), code))
 
         sst0 = (state.sched if isinstance(state.sched, SchedState)
@@ -900,9 +954,12 @@ class PhaseEngine:
         fst0 = (state.fault if isinstance(state.fault, FaultState)
                 else (faults_mod.init_fault_state(num_workers)
                       if fp is not None else ()))
+        # the metrics accumulator is reconstructed fresh every phase —
+        # never part of EngineState, never checkpointed
+        acc0 = tm.init_metrics() if tm is not None else ()
         carry0 = (carry_p, carry_s, carry_o, state.key, state.step, sst0,
-                  state.resid, fst0)
-        (wp_c, opt_c, outer_c, key, step, sst, resid, fst), \
+                  state.resid, fst0, acc0)
+        (wp_c, opt_c, outer_c, key, step, sst, resid, fst, acc), \
             (loss, disp, code) = \
             jax.lax.scan(body, carry0, xs, unroll=self.scan_unroll)
 
@@ -917,8 +974,10 @@ class PhaseEngine:
             wp, opt_state, outer_state = wp_c, opt_c, outer_c
         new_state = EngineState(wp, opt_state, outer_state, key,
                                 state.dec_key, step, sst, resid, fst)
-        return new_state, {"loss": loss, "dispersion": disp,
-                           "avg_code": code}
+        trace = {"loss": loss, "dispersion": disp, "avg_code": code}
+        if tm is not None:
+            trace["metrics"] = acc
+        return new_state, trace
 
     # ---- sharded phase (shard_map over the mesh worker axes) -------------
     def _worker_axes(self) -> tuple:
@@ -1179,9 +1238,12 @@ class PhaseEngine:
         i0 = self._shard_index() * ml
         exact = self.collective == "gather"
         fp = self._faults()
+        tm = tele_metrics if self.telemetry else None
+        eb_all, eb_inner = (self._event_bytes(spec.width, m_global)
+                            if tm is not None else (0.0, 0.0))
 
         def body(carry, xs_t):
-            wp_c, opt_c, outer_c, key, step, sst, resid, fst = carry
+            wp_c, opt_c, outer_c, key, step, sst, resid, fst, acc = carry
             step = step + 1
             key, sub = jax.random.split(key)
             rngs = jax.random.split(sub, m_global)
@@ -1291,7 +1353,19 @@ class PhaseEngine:
                           if fp is None else
                           jax.lax.psum(jnp.sum(losses * alive_l), ax)
                           / jax.lax.psum(jnp.sum(alive_l), ax))
-            return ((wp_c, opt_c, outer_c, key, step, sst, resid, fst),
+            if tm is not None:
+                # loss_t / disp / code are already GLOBAL in both
+                # collectives, and the fault occupancy comes from pure
+                # full-plane streams — each shard accumulates the
+                # identical vector, no extra collective
+                n_alive, n_straggle = self._tele_occupancy(
+                    fp, step, state.dec_key, m_global)
+                acc = tm.accumulate(
+                    acc, loss=loss_t, disp=disp, code=code,
+                    event_bytes_all=eb_all, event_bytes_inner=eb_inner,
+                    n_alive=n_alive, n_straggle=n_straggle)
+            return ((wp_c, opt_c, outer_c, key, step, sst, resid, fst,
+                     acc),
                     (loss_t, disp.astype(jnp.float32), code))
 
         sst0 = (state.sched if isinstance(state.sched, SchedState)
@@ -1299,9 +1373,10 @@ class PhaseEngine:
         fst0 = (state.fault if isinstance(state.fault, FaultState)
                 else (faults_mod.init_fault_state(ml)
                       if fp is not None else ()))
+        acc0 = tm.init_metrics() if tm is not None else ()
         carry0 = (carry_p, carry_s, carry_o, state.key, state.step, sst0,
-                  state.resid, fst0)
-        (wp_c, opt_c, outer_c, key, step, sst, resid, fst), \
+                  state.resid, fst0, acc0)
+        (wp_c, opt_c, outer_c, key, step, sst, resid, fst, acc), \
             (loss, disp, code) = \
             jax.lax.scan(body, carry0, xs, unroll=self.scan_unroll)
 
@@ -1313,8 +1388,10 @@ class PhaseEngine:
                            spec.unpack1(outer_c[1], dtypes=jnp.float32))
         new_state = EngineState(wp, opt_state, outer_state, key,
                                 state.dec_key, step, sst, resid, fst)
-        return new_state, {"loss": loss, "dispersion": disp,
-                           "avg_code": code}
+        trace = {"loss": loss, "dispersion": disp, "avg_code": code}
+        if tm is not None:
+            trace["metrics"] = acc
+        return new_state, trace
 
     def _state_specs(self, state: EngineState):
         ax = P(self._worker_axes())
@@ -1328,7 +1405,12 @@ class PhaseEngine:
             jax.tree.map(lambda _: ax, state.fault))
 
     def _trace_specs(self):
-        return {"loss": P(), "dispersion": P(), "avg_code": P()}
+        specs = {"loss": P(), "dispersion": P(), "avg_code": P()}
+        if self.telemetry:
+            # identical on every shard (global inputs, pure streams):
+            # replicated out spec, same as the loss/dispersion traces
+            specs["metrics"] = P()
+        return specs
 
     def shard_state(self, state: EngineState) -> EngineState:
         """Place an EngineState onto the mesh: worker-axis leaves split
@@ -1402,7 +1484,7 @@ class PhaseEngine:
             record_every: int = 0, eval_fn=None, worker_eval_fn=None,
             phase_len: int | None = None, steps: int | None = None,
             prefetch: bool = True, state: EngineState | None = None,
-            return_state: bool = False):
+            return_state: bool = False, sink=None):
         """Production driver: one run_phase dispatch per block of steps.
 
         data: an iterable of per-step worker batches (leading axis M) —
@@ -1433,8 +1515,21 @@ class PhaseEngine:
         decisions continue exactly where the checkpoint stopped, and
         ``steps`` counts steps to run in THIS call. The returned history
         covers only this call.
+
+        ``sink`` (a :class:`repro.telemetry.events.TelemetrySink`;
+        requires ``PhaseEngine(telemetry=True)``) receives one
+        ``phase_metrics`` record per compiled dispatch — flushed from
+        the on-device accumulator that rode this phase's scan, on the
+        SAME once-per-phase host fetch as the traces — plus an
+        ``averaging_event`` per event step and a ``fault_event`` per
+        scripted crash/rejoin the phase covered.
         """
         self._check_workers(num_workers)
+        if sink is not None and not self.telemetry:
+            raise ValueError(
+                "run(sink=...) flushes the on-device metrics "
+                "accumulator, which this engine does not carry — "
+                "construct it with PhaseEngine(..., telemetry=True)")
         if state is None:
             state = self.init(params, num_workers, seed)
         if self.mesh is not None:
@@ -1442,8 +1537,7 @@ class PhaseEngine:
         t0 = int(state.step)
         block = phase_len or self.default_phase_len()
         needs_eval = bool(record_every and (eval_fn or worker_eval_fn))
-        hist = {"loss": [], "dispersion": [], "disp_trace": [],
-                "averages": 0, "eval": [], "worker_eval": []}
+        hist = init_history()
         total = None if steps is None else t0 + steps
 
         def take_at(t):
@@ -1475,14 +1569,22 @@ class PhaseEngine:
                 return faults_mod.masked_mean_tree(wp, alive)
             return consensus(wp)
 
-        def consume(t, k, trace):
+        def consume(t, k, trace, tw0=None):
+            # THE once-per-phase host sync: traces AND (telemetry mode)
+            # the metrics accumulator come back in this one fetch
             trace = jax.device_get(trace)
+            wall = 0.0 if tw0 is None else time.perf_counter() - tw0
+            t_first = t
+            n_loss, n_disp = len(hist["loss"]), len(hist["disp_trace"])
+            events = []
             for i in range(k):
                 t += 1
-                if trace["avg_code"][i]:
-                    hist["dispersion"].append(
-                        (t, float(trace["dispersion"][i])))
+                code = int(trace["avg_code"][i])
+                if code:
+                    d = float(trace["dispersion"][i])
+                    hist["dispersion"].append((t, d))
                     hist["averages"] += 1
+                    events.append((t, d, code))
                 if record_every and t % record_every == 0:
                     hist["loss"].append((t, float(trace["loss"][i])))
                     hist["disp_trace"].append(
@@ -1495,6 +1597,23 @@ class PhaseEngine:
                 if worker_eval_fn is not None:
                     hist["worker_eval"].append(
                         (t, worker_eval_fn(unshard(state.worker_params))))
+            if sink is not None:
+                for t_ev, d_ev, c_ev in events:
+                    sink.emit(make_record(
+                        "averaging_event", step=t_ev, dispersion=d_ev,
+                        scope="inner" if c_ev == 1 else "all"))
+                fp = self._faults()
+                if fp is not None:
+                    for ev in fp.events_in(t_first, t):
+                        sink.emit(make_record(
+                            "fault_event", step=ev.step, kind=ev.kind,
+                            worker=ev.worker))
+                flushed = tele_metrics.flush_metrics(trace["metrics"])
+                sink.emit(make_record(
+                    "phase_metrics", t0=t_first + 1, t1=t, wall_s=wall,
+                    steps_per_s=(k / wall if wall > 0 else None),
+                    loss_trace=hist["loss"][n_loss:],
+                    disp_trace=hist["disp_trace"][n_disp:], **flushed))
             return t
 
         if isinstance(data, DeviceDataset):
@@ -1511,10 +1630,11 @@ class PhaseEngine:
             t = t0
             while t < total:
                 take = take_at(t)
+                tw0 = time.perf_counter()
                 idx = jnp.asarray(data.index_block(take))
                 state, trace = self.run_phase_indexed(state, data.arrays,
                                                       idx)
-                t = consume(t, take, trace)
+                t = consume(t, take, trace, tw0)
             final = cons(unshard(state.worker_params))
             return (final, hist, state) if return_state else (final,
                                                               hist)
@@ -1545,8 +1665,9 @@ class PhaseEngine:
         t = t0
         try:
             for k, staged in (pf if pf is not None else staged_blocks()):
+                tw0 = time.perf_counter()
                 state, trace = self.run_phase(state, staged)
-                t = consume(t, k, trace)
+                t = consume(t, k, trace, tw0)
         finally:
             if pf is not None:
                 pf.close()
@@ -1587,8 +1708,7 @@ class PhaseEngine:
         faults is the flat-native / flat / tree triple, which tier-1
         asserts bitwise."""
         state = self.init(params, num_workers, seed)
-        hist = {"loss": [], "dispersion": [], "disp_trace": [],
-                "averages": 0, "eval": [], "worker_eval": []}
+        hist = init_history()
 
         def cons(state):
             alive = jnp.asarray(jax.device_get(state.fault.alive))
@@ -1668,8 +1788,7 @@ class PhaseEngine:
         p_width = sum(x.size // num_workers
                       for x in jax.tree.leaves(wp))
         ec = self._sched_event_cost(p_width, num_workers)
-        hist = {"loss": [], "dispersion": [], "disp_trace": [],
-                "averages": 0, "eval": [], "worker_eval": []}
+        hist = init_history()
         step = 0
         for batch in batches:
             step += 1

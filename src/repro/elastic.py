@@ -49,6 +49,7 @@ import numpy as np
 
 from repro import faults as faults_mod
 from repro.faults import FaultPlan, FaultState
+from repro.telemetry.events import init_history, make_record
 from repro.topology import Topology
 
 
@@ -374,7 +375,7 @@ def _validate(engine, plan: ElasticPlan):
 def run_elastic(engine, params, data_factory, plan: ElasticPlan, *,
                 steps: int, seed: int = 0, record_every: int = 0,
                 eval_fn=None, worker_eval_fn=None, state=None,
-                return_state: bool = False):
+                return_state: bool = False, sink=None):
     """Drive ``engine`` through ``plan`` for ``steps`` local steps.
 
     ``data_factory(m, t0, k)`` returns the data argument (e.g. a
@@ -391,6 +392,10 @@ def run_elastic(engine, params, data_factory, plan: ElasticPlan, *,
     state. A plan with no effective resizes and no curriculum lowers
     to the plain (fault) engine bit-exactly: segment boundaries are
     phase cuts, which never affect results.
+
+    ``sink`` (requires ``PhaseEngine(telemetry=True)``) is forwarded to
+    every segment's run; each applied resize additionally emits one
+    ``resize_event`` record.
     """
     _validate(engine, plan)
     segs = plan.segments(steps)
@@ -398,9 +403,7 @@ def run_elastic(engine, params, data_factory, plan: ElasticPlan, *,
     if done >= steps:
         raise ValueError(
             f"state has already completed {done} of {steps} steps")
-    hist = {"loss": [], "dispersion": [], "disp_trace": [],
-            "averages": 0, "eval": [], "worker_eval": [],
-            "resizes": []}
+    hist = init_history(resizes=True)
     prev_faults = None
     for seg in segs:
         fp = plan.segment_faults(engine.faults, seg.num_workers,
@@ -426,13 +429,18 @@ def run_elastic(engine, params, data_factory, plan: ElasticPlan, *,
                                      faults=prev_faults)
                 hist["resizes"].append(
                     (seg.start, old_m, seg.num_workers))
+                if sink is not None:
+                    sink.emit(make_record(
+                        "resize_event", step=seg.start, old_m=old_m,
+                        new_m=seg.num_workers))
         t0 = max(done + 1, seg.start)
         k = seg.stop - t0
         data = data_factory(seg.num_workers, t0, k)
         out = eng.run(params, data, num_workers=seg.num_workers,
                       seed=seed, record_every=record_every,
                       eval_fn=eval_fn, worker_eval_fn=worker_eval_fn,
-                      steps=k, state=state, return_state=True)
+                      steps=k, state=state, return_state=True,
+                      sink=sink)
         params_final, h, state = out
         for key in ("loss", "dispersion", "disp_trace", "eval",
                     "worker_eval"):

@@ -295,6 +295,13 @@ class FaultPlan:
                                   FaultEvent("rejoin", m, step)))
         return cls(new_num_workers, events, **kw)
 
+    def events_in(self, t0: int, t1: int) -> tuple:
+        """Scripted events with ``t0 < step <= t1``, in script order —
+        the host-side enumeration the telemetry ``fault_event``
+        records ride (one record per scripted crash/rejoin in the
+        phase the driver just consumed)."""
+        return tuple(ev for ev in self.events if t0 < ev.step <= t1)
+
     # -- pure per-step streams -------------------------------------------
 
     def alive_at(self, step):

@@ -29,6 +29,8 @@ from repro.data import token_stream
 from repro.launch.mesh import make_worker_mesh
 from repro.models import init_params, lm_loss
 from repro.optim import AdamW, Momentum
+from repro.telemetry import (JsonlSink, make_record, profile_trace,
+                             run_meta_record)
 
 
 def main(argv=None):
@@ -172,6 +174,17 @@ def main(argv=None):
                          "labels, so this CLI only validates and "
                          "records the setting")
     ap.add_argument("--impl", default="xla", choices=["xla", "pallas"])
+    ap.add_argument("--telemetry", default=None, metavar="PATH",
+                    help="write structured run telemetry to this JSONL "
+                         "file (repro.telemetry): a run_meta header, "
+                         "one phase_metrics record per compiled phase "
+                         "(flushed from the on-device accumulator with "
+                         "the phase's single trace fetch), plus "
+                         "averaging/fault/resize/checkpoint events — "
+                         "render with python -m repro.telemetry.report")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="capture a jax.profiler trace of the run into "
+                         "this directory (TensorBoard-loadable)")
     ap.add_argument("--checkpoint", default=None)
     ap.add_argument("--resume", default=None,
                     help="path of a full-EngineState checkpoint "
@@ -370,13 +383,27 @@ def main(argv=None):
         print(f"[train] sharding {args.workers} workers over {shards} "
               f"devices ({args.workers // shards} rows/shard, "
               f"collective={args.collective})")
+    sink = None
+    if args.telemetry:
+        sink = JsonlSink(args.telemetry)
+        sink.emit(run_meta_record(config={
+            "arch": args.arch, "workers": args.workers,
+            "steps": args.steps, "avg": args.avg,
+            "phase_len": args.phase_len, "lr": args.lr,
+            "optimizer": args.optimizer,
+            "momentum": 0.9 if args.optimizer == "momentum" else 0.0,
+            "topology": args.topology,
+            "spectral_gap": (topology.spectral_gap
+                             if topology is not None else None),
+            "comm_dtype": args.comm_dtype, "seed": args.seed}))
+        print(f"[train] telemetry -> {args.telemetry}")
     engine = PhaseEngine(loss_fn, opt, sch, outer=outer,
                          scan_unroll=args.scan_unroll or True,
                          flat=not args.tree_engine,
                          fused_opt=not args.no_fused_opt,
                          mesh=mesh, collective=args.collective,
                          topology=topology, compression=compression,
-                         faults=faults)
+                         faults=faults, telemetry=sink is not None)
     if faults is not None and not faults.is_trivial:
         crashes = sum(ev.kind == "crash" for ev in faults.events)
         rejoins = sum(ev.kind == "rejoin" for ev in faults.events)
@@ -432,23 +459,27 @@ def main(argv=None):
         print(f"[train] resuming from {args.resume} at step {at}")
 
     t0 = time.time()
-    if elastic is not None:
-        from repro.elastic import run_elastic
-        final, hist, state = run_elastic(
-            engine, params, lambda m, t_start, k: batches(m, k),
-            elastic, steps=at + args.steps, seed=args.seed,
-            record_every=10, state=resume_state, return_state=True)
-        for t, old_m, new_m in hist["resizes"]:
-            kind = "shrink" if new_m < old_m else "grow"
-            print(f"[train] {kind} {old_m} -> {new_m} workers before "
-                  f"step {t}")
-    else:
-        final, hist, state = engine.run(
-            params, batches(args.workers, args.steps),
-            num_workers=args.workers, seed=args.seed,
-            record_every=10, prefetch=not args.no_prefetch,
-            state=resume_state, return_state=True)
+    with profile_trace(args.profile_dir):
+        if elastic is not None:
+            from repro.elastic import run_elastic
+            final, hist, state = run_elastic(
+                engine, params, lambda m, t_start, k: batches(m, k),
+                elastic, steps=at + args.steps, seed=args.seed,
+                record_every=10, state=resume_state, return_state=True,
+                sink=sink)
+            for t, old_m, new_m in hist["resizes"]:
+                kind = "shrink" if new_m < old_m else "grow"
+                print(f"[train] {kind} {old_m} -> {new_m} workers "
+                      f"before step {t}")
+        else:
+            final, hist, state = engine.run(
+                params, batches(args.workers, args.steps),
+                num_workers=args.workers, seed=args.seed,
+                record_every=10, prefetch=not args.no_prefetch,
+                state=resume_state, return_state=True, sink=sink)
     dt = time.time() - t0
+    if args.profile_dir:
+        print(f"[train] profiler trace -> {args.profile_dir}")
     losses = hist["loss"]
     print(f"[train] {args.steps} steps in {dt:.1f}s "
           f"({dt / args.steps * 1e3:.0f} ms/step), "
@@ -464,6 +495,14 @@ def main(argv=None):
                           elastic=elastic is not None)
         print(f"[train] saved consensus model to {args.checkpoint} "
               f"(+ resumable EngineState at {args.checkpoint}.state)")
+        if sink is not None:
+            from repro.checkpoint.io import ENGINE_STATE_VERSION
+            sink.emit(make_record(
+                "checkpoint_event", step=int(state.step),
+                path=args.checkpoint + ".state",
+                layout_version=ENGINE_STATE_VERSION))
+    if sink is not None:
+        sink.close()
     return final, hist
 
 

@@ -1,0 +1,30 @@
+"""Telemetry plane: on-device metrics, structured run events, timing.
+
+Three layers (docs/TELEMETRY.md):
+
+- :mod:`repro.telemetry.metrics` — a fixed-layout f32 accumulator that
+  rides the phase scan carry and is flushed to the host ONCE per phase
+  with the existing trace fetch. Enabling it never changes trained
+  state: telemetry on vs off is bit-identical.
+- :mod:`repro.telemetry.events` — versioned JSONL records
+  (``run_meta`` / ``phase_metrics`` / ``averaging_event`` /
+  ``fault_event`` / ``resize_event`` / ``checkpoint_event``) behind the
+  :class:`TelemetrySink` protocol, with :class:`RunLog` reading them
+  back (including the legacy history-dict reconstruction).
+- :mod:`repro.telemetry.timing` — warmup / best-of-reps wall-clock
+  helpers with explicit ``block_until_ready`` semantics, and the
+  ``jax.profiler.trace`` phase-capture hook.
+
+``python -m repro.telemetry.report <run.jsonl>`` renders a run log as
+a per-phase table (steps/sec, dispersion envelope vs the variance-model
+prediction, bytes/event).
+"""
+from repro.telemetry.events import (JsonlSink, MemorySink, NullSink,  # noqa: F401
+                                    RunLog, TELEMETRY_VERSION,
+                                    TelemetrySink, init_history,
+                                    make_record, parse_record,
+                                    run_meta_record)
+from repro.telemetry.metrics import (FLUSH_FUNCTIONS, NUM_SLOTS,  # noqa: F401
+                                     SLOT_NAMES, accumulate,
+                                     flush_metrics, init_metrics)
+from repro.telemetry.timing import profile_trace, time_run, timed  # noqa: F401

@@ -1,0 +1,112 @@
+"""On-device metrics plane: a fixed-layout f32 accumulator in the scan.
+
+The phase engine's design rule is ONE host transfer per phase — the
+per-step ``{loss, dispersion, avg_code}`` traces come back from the
+compiled ``run_phase`` dispatch and are fetched once by the driver.
+Telemetry must not erode that: per-phase aggregates (sums, maxes,
+counts) are therefore accumulated ON DEVICE, as one small ``(NUM_SLOTS,)``
+float32 vector riding the scan carry, and ride the very same trace
+fetch to the host. The accumulator is created as zeros inside the phase
+trace (:func:`init_metrics`), so it is NOT part of the checkpointed
+:class:`~repro.core.engine.EngineState` — a resumed run reconstructs
+its metrics instead of persisting them, and the checkpoint layout is
+untouched (docs/TELEMETRY.md).
+
+Host round-trips on these values (``float()``, ``.item()``,
+``jax.device_get``, ``np.asarray``) are only legal inside the flush
+functions named in :data:`FLUSH_FUNCTIONS` — the ``telemetry-host-sync``
+analysis rule (docs/INVARIANTS.md §7) enforces this, keeping the
+metrics plane from silently re-introducing per-step device syncs.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+# Fixed slot layout of the accumulator vector. Appending a slot is a
+# backward-compatible change (flush keys by name); reordering is not.
+SLOT_NAMES = (
+    "steps",          # 0: local steps accumulated
+    "loss_sum",       # 1: sum of per-step (alive-)mean losses
+    "loss_max",       # 2: running max of the per-step loss
+    "disp_sum",       # 3: sum of the per-step Eq. 4 dispersion
+    "disp_max",       # 4: running max of the dispersion envelope
+    "events_inner",   # 5: inner (group-mean) averaging events
+    "events_all",     # 6: all-scope averaging / mixing events
+    "comm_bytes",     # 7: nominal wire bytes ONE worker shipped
+    #                      (topology.comm_bytes pricing per event)
+    "alive_sum",      # 8: sum over steps of the alive-worker count
+    "alive_min",      # 9: min alive-worker count seen in the phase
+    "straggle_sum",   # 10: sum over steps of alive-and-straggling rows
+)
+NUM_SLOTS = len(SLOT_NAMES)
+_I = {name: i for i, name in enumerate(SLOT_NAMES)}
+
+# Host flush functions — the ONLY places a telemetry value may cross
+# the device boundary (docs/INVARIANTS.md §7, rule telemetry-host-sync).
+FLUSH_FUNCTIONS = ("flush_metrics",)
+
+
+def init_metrics():
+    """Zero accumulator (max slots at -inf, min slots at +inf) — built
+    fresh inside every phase trace, never checkpointed."""
+    init = np.zeros((NUM_SLOTS,), np.float32)
+    init[_I["loss_max"]] = -np.inf
+    init[_I["disp_max"]] = -np.inf
+    init[_I["alive_min"]] = np.inf
+    return jnp.asarray(init)
+
+
+def accumulate(acc, *, loss, disp, code, event_bytes_all: float,
+               event_bytes_inner: float, n_alive, n_straggle):
+    """Fold one step into the accumulator — pure jnp, traced inside the
+    scan body. ``code`` is the averaging decision (0 none / 1 inner /
+    2 all); ``event_bytes_*`` are static per-event wire costs priced by
+    ``topology.comm_bytes``; ``n_alive`` / ``n_straggle`` come from the
+    fault plan's pure per-step streams (constants without one)."""
+    loss = jnp.asarray(loss, jnp.float32)
+    disp = jnp.asarray(disp, jnp.float32)
+    n_alive = jnp.asarray(n_alive, jnp.float32)
+    n_straggle = jnp.asarray(n_straggle, jnp.float32)
+    inner = (code == 1).astype(jnp.float32)
+    allv = (code == 2).astype(jnp.float32)
+    add = jnp.stack([
+        jnp.float32(1.0), loss, jnp.float32(0.0), disp, jnp.float32(0.0),
+        inner, allv,
+        inner * jnp.float32(event_bytes_inner)
+        + allv * jnp.float32(event_bytes_all),
+        n_alive, jnp.float32(0.0), n_straggle,
+    ])
+    acc = acc + add
+    acc = acc.at[_I["loss_max"]].max(loss)
+    acc = acc.at[_I["disp_max"]].max(disp)
+    acc = acc.at[_I["alive_min"]].min(n_alive)
+    return acc
+
+
+def flush_metrics(vec) -> dict:
+    """HOST-side flush: the per-phase accumulator vector (already
+    fetched with the phase trace — this adds no device sync of its own
+    when handed the device_get'd value) rendered as a plain-float dict,
+    raw slots plus the derived means/rates the report table shows."""
+    v = np.asarray(vec, dtype=np.float64).reshape(-1)
+    if v.shape[0] != NUM_SLOTS:
+        raise ValueError(
+            f"metrics vector has {v.shape[0]} slots, expected "
+            f"{NUM_SLOTS} ({', '.join(SLOT_NAMES)})")
+    out = {name: float(v[i]) for i, name in enumerate(SLOT_NAMES)}
+    steps = out["steps"]
+    if steps < 1:
+        raise ValueError("flush_metrics needs a phase of >= 1 steps")
+    out["steps"] = int(steps)
+    out["events_inner"] = int(out["events_inner"])
+    out["events_all"] = int(out["events_all"])
+    out["events"] = out["events_inner"] + out["events_all"]
+    out["loss_mean"] = out.pop("loss_sum") / steps
+    out["disp_mean"] = out.pop("disp_sum") / steps
+    alive_sum = out.pop("alive_sum")
+    out["alive_mean"] = alive_sum / steps
+    straggle_sum = out.pop("straggle_sum")
+    out["straggle_rate"] = (straggle_sum / alive_sum if alive_sum > 0
+                            else 0.0)
+    return out

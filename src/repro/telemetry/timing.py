@@ -1,0 +1,66 @@
+"""Wall-clock measurement and profiling hooks, lifted from bench_engine.
+
+The benchmark's timing policy — one untimed warmup call (compile +
+cache fill), then best-of-``reps`` wall-clock — lives here so every
+caller (benchmarks, the report CLI, ad-hoc measurements) shares one
+definition of "ms/step". ``block_until_ready`` semantics are explicit:
+jax dispatch is asynchronous, so a timed callable that returns device
+values without blocking measures dispatch latency, not compute —
+:func:`timed` and :func:`time_run` block on the returned pytree by
+default (``block=False`` opts out for callables that already
+synchronize, e.g. anything ending in a host ``device_get``).
+
+:func:`profile_trace` wraps a block in ``jax.profiler.trace`` when
+given a directory (``train.py --profile-dir``), and is a no-op
+otherwise — callers keep one unconditional ``with`` statement.
+"""
+from __future__ import annotations
+
+import contextlib
+import time
+
+
+def _block(out):
+    import jax
+    if out is not None:
+        jax.block_until_ready(out)
+    return out
+
+
+def timed(fn, *, block: bool = False) -> float:
+    """Seconds for ONE ``fn()`` call. ``block=True`` blocks on the
+    returned pytree before stopping the clock."""
+    t0 = time.perf_counter()
+    out = fn()
+    if block:
+        _block(out)
+    return time.perf_counter() - t0
+
+
+def time_run(fn, steps: int, *, reps: int = 3, warmup: int = 1,
+             block: bool = False) -> float:
+    """ms/step: best of ``reps`` timed ``fn()`` calls after ``warmup``
+    untimed ones (compile; warmup policy is explicit so a caller can
+    measure cold-start with ``warmup=0``)."""
+    if steps < 1:
+        raise ValueError(f"time_run needs steps >= 1, got {steps}")
+    if reps < 1:
+        raise ValueError(f"time_run needs reps >= 1, got {reps}")
+    for _ in range(warmup):
+        out = fn()
+        if block:
+            _block(out)
+    best = min(timed(fn, block=block) for _ in range(reps))
+    return best / steps * 1e3
+
+
+@contextlib.contextmanager
+def profile_trace(profile_dir: str | None):
+    """``jax.profiler.trace(profile_dir)`` when a directory is given,
+    else a no-op — phase-level capture behind one ``with``."""
+    if not profile_dir:
+        yield
+        return
+    import jax
+    with jax.profiler.trace(profile_dir):
+        yield

@@ -342,8 +342,11 @@ def comm_bytes(topology: "Topology", events: int, p: int,
     format: events x comm_degree messages, each one encoded row of
     :func:`repro.core.compress.wire_row_bytes`. The common currency of
     the timing x topology x precision budget ladder — the
-    ``adaptive_bytes`` schedule spends exactly this per event, and the
-    benchmark's matched-budget sweeps equalize it across arms."""
+    ``adaptive_bytes`` schedule spends exactly this per event, the
+    benchmark's matched-budget sweeps equalize it across arms, and the
+    telemetry plane's per-phase ``comm_bytes`` slot prices each
+    on-device averaging event at exactly this cost
+    (:meth:`repro.core.engine.PhaseEngine._event_bytes`)."""
     from repro.core.compress import wire_row_bytes
     return int(round(events * topology.comm_degree)) * wire_row_bytes(
         p, wire)

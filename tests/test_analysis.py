@@ -512,6 +512,116 @@ class TestJitCacheHygiene:
         assert any("ad-hoc" in f.message for f in found)
 
 
+# ------------------------------------------------------ telemetry-host-sync
+
+TELE_METRICS_OK = """
+    import jax.numpy as jnp
+    import numpy as np
+
+    FLUSH_FUNCTIONS = ("flush_metrics",)
+
+    def accumulate(acc, loss):
+        return acc + jnp.asarray(loss)
+
+    def flush_metrics(vec):
+        v = np.asarray(vec)
+        return {"loss": float(v[0]), "steps": int(v[1])}
+"""
+
+
+class TestTelemetryHostSync:
+    def test_flush_functions_exempt(self, tmp_path):
+        write_tree(tmp_path, {
+            "src/repro/telemetry/metrics.py": TELE_METRICS_OK,
+        })
+        assert findings_for(tmp_path, "telemetry-host-sync") == []
+
+    def test_coercion_outside_flush_flagged(self, tmp_path):
+        write_tree(tmp_path, {
+            "src/repro/telemetry/metrics.py": TELE_METRICS_OK,
+            "src/repro/telemetry/extra.py": """
+                import jax
+
+                def peek(acc):
+                    return float(acc[0])
+            """,
+        })
+        found = findings_for(tmp_path, "telemetry-host-sync")
+        assert any(f.path.endswith("extra.py")
+                   and "`float()`" in f.message for f in found)
+
+    def test_item_and_device_get_flagged(self, tmp_path):
+        write_tree(tmp_path, {
+            "src/repro/telemetry/metrics.py": TELE_METRICS_OK,
+            "src/repro/telemetry/extra.py": """
+                import jax
+
+                def peek(acc):
+                    return jax.device_get(acc), acc[0].item()
+            """,
+        })
+        found = findings_for(tmp_path, "telemetry-host-sync")
+        msgs = " | ".join(f.message for f in found)
+        assert "`device_get`" in msgs and "`.item()`" in msgs
+
+    def test_numpy_materializer_flagged_jnp_legal(self, tmp_path):
+        write_tree(tmp_path, {
+            "src/repro/telemetry/metrics.py": TELE_METRICS_OK,
+            "src/repro/telemetry/extra.py": """
+                import jax.numpy as jnp
+                import numpy as np
+
+                def fold(acc):
+                    return jnp.asarray(acc) + 1  # on-device: legal
+
+                def leak(acc):
+                    return np.asarray(acc)
+            """,
+        })
+        found = findings_for(tmp_path, "telemetry-host-sync")
+        assert len(found) == 1
+        assert "materializes" in found[0].message
+
+    def test_module_without_jax_out_of_scope(self, tmp_path):
+        write_tree(tmp_path, {
+            "src/repro/telemetry/metrics.py": TELE_METRICS_OK,
+            "src/repro/telemetry/report.py": """
+                import json
+
+                def render(path):
+                    return float(json.loads(path)["loss"])
+            """,
+        })
+        assert findings_for(tmp_path, "telemetry-host-sync") == []
+
+    def test_missing_registry_flagged(self, tmp_path):
+        write_tree(tmp_path, {
+            "src/repro/telemetry/metrics.py": """
+                import jax.numpy as jnp
+
+                def accumulate(acc):
+                    return acc
+            """,
+        })
+        found = findings_for(tmp_path, "telemetry-host-sync")
+        assert any("FLUSH_FUNCTIONS registry missing" in f.message
+                   for f in found)
+
+    def test_stale_registry_entry_flagged(self, tmp_path):
+        write_tree(tmp_path, {
+            "src/repro/telemetry/metrics.py": """
+                import jax.numpy as jnp
+
+                FLUSH_FUNCTIONS = ("flush_metrics", "gone")
+
+                def flush_metrics(vec):
+                    return float(vec[0])
+            """,
+        })
+        found = findings_for(tmp_path, "telemetry-host-sync")
+        assert any("'gone'" in f.message for f in found)
+
+
 # ------------------------------------------------------- baseline round-trip
 
 class TestBaseline:
